@@ -1,0 +1,23 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables."""
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup=2, iters=5):
+    """Median wall time (us) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f'{name},{us:.1f},{derived}')

@@ -1,0 +1,32 @@
+"""Paper Fig. 5 — frequency / power / efficiency vs core voltage (shmoo).
+
+Sweeps the calibrated silicon model over the functional range 0.75-1.24 V and
+writes the curve to results/fig5_shmoo.csv.
+"""
+import pathlib
+
+from repro.core import perf_model as pm
+
+from .common import emit
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / 'results'
+
+
+def run():
+    OUT.mkdir(exist_ok=True)
+    rows = ['voltage_v,freq_mhz,power_mw,gops,gops_per_mw']
+    best_eff, best_v = 0.0, 0.0
+    for i in range(50):
+        v = 0.75 + (1.24 - 0.75) * i / 49
+        f = pm.freq_hz(v)
+        p = pm.power_w(v)
+        g = pm.peak_gops(v)
+        e = pm.efficiency_gops_per_mw(v)
+        rows.append(f'{v:.4f},{f/1e6:.2f},{p*1e3:.3f},{g:.2f},{e:.3f}')
+        if e > best_eff:
+            best_eff, best_v = e, v
+    (OUT / 'fig5_shmoo.csv').write_text('\n'.join(rows))
+    emit('fig5/peak_efficiency', 0.0,
+         f'{best_eff:.2f}Gop/s/mW@{best_v:.2f}V (paper: 3.08@0.75V)')
+    emit('fig5/points', 0.0, f'50 -> {OUT / "fig5_shmoo.csv"}')
+    return best_eff

@@ -1,0 +1,53 @@
+"""Kernel-layer microbenchmarks (CPU wall-clock of the jnp reference paths;
+Pallas kernels are TPU-targeted and only correctness-checked here via
+interpret mode — CPU timings of interpret mode are not meaningful)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import lstm, quant
+from repro.kernels.flash_attention import attention_ref
+from repro.kernels.lstm_gates import lstm_gates_ref
+from repro.kernels.quant_matmul import quant_matmul_ref
+from repro.models.layers import chunked_attention
+
+from .common import emit, time_call
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+
+    # fused LSTM gates ref (123->421 paper layer)
+    p = lstm.init_lstm_params(key, 123, 421)
+    xh = jax.random.normal(key, (8, 123 + 421))
+    w = jnp.concatenate([p.w_x, p.w_h], -1)
+    c0 = jnp.zeros((8, 421))
+    f = jax.jit(lstm_gates_ref)
+    emit('kernels/lstm_gates_ref', time_call(f, xh, w, p.w_peep, p.b, c0),
+         'B=8 123->421')
+
+    # int8 matmul ref vs f32 matmul
+    x = jax.random.normal(key, (256, 512))
+    wq = jax.random.normal(jax.random.PRNGKey(1), (512, 512))
+    xs, ws = quant.abs_max_scale(x, -1), quant.abs_max_scale(wq, 0)
+    x_q, w_q = quant.quantize_scaled(x, xs), quant.quantize_scaled(wq, ws)
+    f_int8 = jax.jit(quant_matmul_ref)
+    f_f32 = jax.jit(lambda a, b: a @ b)
+    emit('kernels/int8_matmul_ref', time_call(f_int8, x_q, w_q, xs, ws),
+         '256x512x512')
+    emit('kernels/f32_matmul', time_call(f_f32, x, wq), '256x512x512')
+
+    # chunked flash-style attention vs naive (the prefill-path workhorse)
+    B, H, S, D = 1, 8, 1024, 64
+    q = jax.random.normal(key, (B, H, S, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, H, S, D))
+    f_naive = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    f_chunk = jax.jit(
+        lambda q, k, v: chunked_attention(q, k, v, causal=True, chunk=256))
+    t_n = time_call(f_naive, q, k, v)
+    t_c = time_call(f_chunk, q, k, v)
+    err = float(jnp.max(jnp.abs(f_naive(q, k, v) - f_chunk(q, k, v))))
+    emit('kernels/attention_naive', t_n, f'S={S}')
+    emit('kernels/attention_chunked', t_c,
+         f'S={S} chunk=256 max_err={err:.1e} (O(S) memory)')
+    return t_c

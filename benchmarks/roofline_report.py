@@ -1,0 +1,63 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+One row per (arch x shape x mesh): the three terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.  Written to
+results/roofline.csv and summarised on stdout.
+"""
+import json
+import pathlib
+
+from .common import emit
+
+DRYRUN = pathlib.Path(__file__).resolve().parent.parent / 'results' / 'dryrun'
+OUT = DRYRUN.parent / 'roofline.csv'
+
+
+def rows():
+    out = []
+    for f in sorted(DRYRUN.glob('*.json')):
+        rec = json.loads(f.read_text())
+        if rec.get('status') != 'ok':
+            out.append({'arch': rec['arch'], 'shape': rec['shape'],
+                        'mesh': rec.get('mesh', '?'), 'status': 'fail'})
+            continue
+        r = rec['roofline']
+        out.append({
+            'arch': rec['arch'], 'shape': rec['shape'], 'mesh': rec['mesh'],
+            'status': 'ok', 'kind': rec['kind'],
+            'compute_s': r['compute_s'], 'memory_s': r['memory_s'],
+            'collective_s': r['collective_s'], 'bottleneck': r['bottleneck'],
+            'useful_flops_fraction': r['useful_flops_fraction'],
+            'roofline_fraction': r['roofline_fraction'],
+        })
+    return out
+
+
+def run():
+    data = rows()
+    if not data:
+        emit('roofline/no_dryrun_artifacts', 0.0, 'run repro.launch.dryrun first')
+        return 0
+    hdr = ('arch,shape,mesh,status,bottleneck,compute_s,memory_s,'
+           'collective_s,useful_flops_fraction,roofline_fraction')
+    lines = [hdr]
+    ok = 0
+    for r in data:
+        if r['status'] != 'ok':
+            lines.append(f"{r['arch']},{r['shape']},{r['mesh']},fail,,,,,,")
+            continue
+        ok += 1
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},ok,{r['bottleneck']},"
+            f"{r['compute_s']:.5f},{r['memory_s']:.5f},{r['collective_s']:.5f},"
+            f"{(r['useful_flops_fraction'] or 0):.4f},"
+            f"{(r['roofline_fraction'] or 0):.4f}")
+    OUT.write_text('\n'.join(lines))
+    emit('roofline/cells_ok', 0.0, f'{ok}/{len(data)} -> {OUT}')
+    for r in data:
+        if r['status'] == 'ok':
+            emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh'][:2]}",
+                 r['compute_s'] * 1e6,
+                 f"bottleneck={r['bottleneck']} "
+                 f"frac={(r['roofline_fraction'] or 0):.4f}")
+    return ok

@@ -1,0 +1,28 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1_efficiency   — Table 1 (peak perf / energy / area efficiency)
+  table2_ctc          — Table 2 (CTC-3L-421H-UNI on 3 tile configs, 2 voltages)
+  fig5_shmoo          — Fig. 5 (voltage shmoo curves)
+  systolic_equivalence— Sec. 3 dataflow equivalence + int8 accuracy/timing
+  kernel_bench        — kernel-layer reference timings
+  roofline_report     — roofline table from the multi-pod dry-run artifacts
+"""
+
+
+def main() -> None:
+    from . import (fig5_shmoo, kernel_bench, roofline_report,
+                   systolic_equivalence, table1_efficiency, table2_ctc)
+
+    print('name,us_per_call,derived')
+    table1_efficiency.run()
+    table2_ctc.run()
+    fig5_shmoo.run()
+    systolic_equivalence.run()
+    kernel_bench.run()
+    roofline_report.run()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,53 @@
+"""Sec. 3 correctness/throughput: systolic dataflow vs dense LSTM oracle.
+
+Times (CPU wall-clock, indicative) the dense cell, the float tiled systolic
+cell, and the bit-accurate int8 path on the paper's CTC layer geometry, and
+reports the int8 accuracy loss — the cost of contribution C2.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lstm, quant, systolic
+
+from .common import emit, time_call
+
+
+def run():
+    n_x, n_h, B, T = 123, 421, 8, 32          # paper layer-1 geometry
+    p = lstm.init_lstm_params(jax.random.PRNGKey(0), n_x, n_h)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (T, B, n_x)) * 0.5
+
+    dense = jax.jit(lambda pp, x: lstm.lstm_layer(pp, x)[0])
+    hs_ref = dense(p, xs)
+
+    plan = systolic.SystolicPlan(n_x, n_h, tile=96)
+    packed = systolic.pack_lstm(p, plan)
+    # plan_shape is static metadata -> close over it, pass arrays as args
+    tiled = jax.jit(lambda t, pe, b, x: systolic.systolic_layer_tiled(
+        systolic.PackedLSTM(t, pe, b, packed.plan_shape), x))
+    hs_tiled = tiled(packed.tiles, packed.peep, packed.bias, xs)
+
+    qp = systolic.quantize_packed(packed)
+    xs_q = quant.quantize(xs, quant.STATE_FMT)
+    quantized = jax.jit(lambda t, pe, b, sl, tl, x:
+                        systolic.systolic_layer_quantized(
+                            systolic.QuantizedPackedLSTM(
+                                t, pe, b, sl, tl, qp.plan_shape), x))
+    q_args = (qp.tiles_q, qp.peep_q, qp.bias_q, qp.sig_lut, qp.tanh_lut, xs_q)
+    hs_q = quant.dequantize(quantized(*q_args), quant.STATE_FMT)
+
+    t_dense = time_call(dense, p, xs)
+    t_tiled = time_call(tiled, packed.tiles, packed.peep, packed.bias, xs)
+    t_q = time_call(quantized, *q_args)
+    tile_err = float(jnp.max(jnp.abs(hs_tiled - hs_ref)))
+    q_err = float(jnp.mean(jnp.abs(hs_q - hs_ref)))
+
+    emit('systolic/dense_lstm', t_dense, f'T={T} B={B} 123->421')
+    emit('systolic/tiled_float', t_tiled,
+         f'{plan.rows}x{plan.cols} engines, max_err={tile_err:.2e}')
+    emit('systolic/int8_bitaccurate', t_q,
+         f'mean_err={q_err:.4f} ({q_err / quant.STATE_FMT.scale:.2f} LSB)')
+    assert tile_err < 1e-4
+    assert q_err < 4 * quant.STATE_FMT.scale
+    return q_err

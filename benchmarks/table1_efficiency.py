@@ -1,0 +1,35 @@
+"""Paper Table 1 — peak performance / energy / area efficiency of one engine.
+
+Reproduces the CHIPMUNK column of Table 1 from the calibrated silicon model
+and reports the deviation from the published values.
+"""
+from repro.core import perf_model as pm
+
+from .common import emit
+
+PAPER = {
+    'peak_gops_1.24V': 32.3, 'peak_gops_0.75V': 3.8,
+    'eff_gops_mw_1.24V': 1.11, 'eff_gops_mw_0.75V': 3.08,
+    'area_eff_gops_mm2': 34.4,
+    'power_mw_1.24V': 29.03, 'power_mw_0.75V': 1.24,
+}
+
+
+def run():
+    ours = {
+        'peak_gops_1.24V': pm.peak_gops(1.24),
+        'peak_gops_0.75V': pm.peak_gops(0.75),
+        'eff_gops_mw_1.24V': pm.efficiency_gops_per_mw(1.24),
+        'eff_gops_mw_0.75V': pm.efficiency_gops_per_mw(0.75),
+        'area_eff_gops_mm2': pm.area_efficiency_gops_per_mm2(),
+        'power_mw_1.24V': pm.power_w(1.24) * 1e3,
+        'power_mw_0.75V': pm.power_w(0.75) * 1e3,
+    }
+    worst = 0.0
+    for k, paper_v in PAPER.items():
+        err = (ours[k] - paper_v) / paper_v * 100
+        worst = max(worst, abs(err))
+        emit(f'table1/{k}', 0.0,
+             f'ours={ours[k]:.3f} paper={paper_v} err={err:+.1f}%')
+    emit('table1/worst_abs_err_pct', 0.0, f'{worst:.2f}')
+    return worst

@@ -1,0 +1,27 @@
+"""Paper Table 2 — CTC-3L-421H-UNI under the 10 ms real-time constraint.
+
+Execution time + peak/average power for the three tile configurations at both
+voltage corners, from the two-point-calibrated cycle model (see
+core/perf_model.py for the fit methodology: beta fit on the 3x(5x5) row,
+load cycles/byte on the single row; 5x5 is a parameter-free prediction).
+"""
+from repro.core import perf_model as pm
+
+from .common import emit
+
+
+def run():
+    worst = 0.0
+    for row in pm.table2():
+        key = (row['config'], row['voltage'])
+        paper_ms = pm.PAPER_TABLE2_MS[key]
+        err = (row['exec_time_ms'] - paper_ms) / paper_ms * 100
+        worst = max(worst, abs(err))
+        emit(f'table2/{row["config"].replace(" ", "_")}@{row["voltage"]}V',
+             row['exec_time_ms'] * 1e3,
+             f'exec={row["exec_time_ms"]:.3f}ms paper={paper_ms}ms '
+             f'err={err:+.1f}% peak={row["peak_power_mw"]:.2f}mW '
+             f'avg={row["avg_power_mw"]:.2f}mW '
+             f'deadline={"MET" if row["meets_deadline"] else "MISS"}')
+    emit('table2/worst_abs_err_pct', 0.0, f'{worst:.2f}')
+    return worst

@@ -1,0 +1,46 @@
+"""Quickstart: the Chipmunk systolic LSTM core in 60 lines.
+
+Builds the paper's CTC-3L-421H layer-1 geometry (123 -> 421, 96-unit engines),
+runs it three ways — dense oracle, float systolic dataflow, bit-accurate int8
+silicon path — and reports the paper's headline numbers from the calibrated
+performance model.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import lstm, perf_model as pm, quant, systolic
+
+# --- build the paper's layer-1 geometry ------------------------------------
+n_x, n_h = 123, 421                      # MFCC features -> hidden units
+params = lstm.init_lstm_params(jax.random.PRNGKey(0), n_x, n_h)
+xs = jax.random.normal(jax.random.PRNGKey(1), (20, 4, n_x)) * 0.5  # (T, B, D)
+
+# 1) dense oracle (Eqs. 1-5 of the paper)
+hs_ref, _ = lstm.lstm_layer(params, xs)
+
+# 2) the systolic dataflow: 5x7 grid of 96x96 weight-stationary engine tiles
+plan = systolic.SystolicPlan(n_x, n_h, tile=systolic.N_LSTM_SILICON)
+packed = systolic.pack_lstm(params, plan)
+hs_sys = systolic.systolic_layer_tiled(packed, xs)
+print(f'systolic grid: {plan.rows} rows x {plan.cols} cols '
+      f'({plan.n_engines} engines, {plan.weight_bytes_per_engine():,} B each)')
+print(f'float systolic vs dense:  max |err| = '
+      f'{float(jnp.max(jnp.abs(hs_sys - hs_ref))):.2e}')
+
+# 3) the silicon datapath: int8 storage, saturating int16 hops, LUT gates
+qp = systolic.quantize_packed(packed)
+hs_q = systolic.systolic_layer_quantized(qp, quant.quantize(xs, quant.STATE_FMT))
+err = jnp.abs(quant.dequantize(hs_q, quant.STATE_FMT) - hs_ref)
+print(f'int8 silicon vs dense:    mean |err| = {float(err.mean()):.4f} '
+      f'({float(err.mean()) / quant.STATE_FMT.scale:.2f} LSB of Q2.5)')
+
+# --- the headline silicon numbers (calibrated model, Sec. 4.1) -------------
+print(f'\npeak performance  @1.24V: {pm.peak_gops(1.24):5.1f} Gop/s '
+      f'(paper: 32.3)')
+print(f'peak efficiency   @0.75V: {pm.efficiency_gops_per_mw(0.75):5.2f} '
+      f'Gop/s/mW (paper: 3.08)')
+row = pm.table2_row(pm.CTC_3L_421H, pm.TileConfig(3, 5, 5), 1.24)
+print(f'CTC-3L-421H on 3x(5x5)  : {row["exec_time_ms"]:.3f} ms/frame '
+      f'(paper: 0.09, deadline {"MET" if row["meets_deadline"] else "MISS"})')

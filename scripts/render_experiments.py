@@ -1,0 +1,57 @@
+"""Render the §Dry-run / §Roofline tables of EXPERIMENTS.md from results/dryrun."""
+import json
+import pathlib
+import sys
+
+DRY = pathlib.Path(__file__).resolve().parent.parent / 'results' / 'dryrun'
+
+
+def fmt(v, n=3):
+    return f'{v:.{n}f}' if v is not None else '—'
+
+
+def table(mesh_suffix):
+    rows = []
+    for f in sorted(DRY.glob(f'*__{mesh_suffix}.json')):
+        r = json.loads(f.read_text())
+        if r.get('status') != 'ok':
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL |  |  |  |  |  |  |")
+            continue
+        ro = r['roofline']
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {ro['bottleneck']} "
+            f"| {fmt(ro['compute_s'])} | {fmt(ro['memory_s'])} "
+            f"| {fmt(ro['collective_s'])} "
+            f"| {fmt(ro['useful_flops_fraction'], 3)} "
+            f"| {fmt(ro['roofline_fraction'], 4)} "
+            f"| {r['compile_s']:.0f}s |")
+    return '\n'.join(rows)
+
+
+def memtable(mesh_suffix):
+    rows = []
+    for f in sorted(DRY.glob(f'*__{mesh_suffix}.json')):
+        r = json.loads(f.read_text())
+        if r.get('status') != 'ok':
+            continue
+        m = r['memory']
+        gb = 1 << 30
+
+        def g(k):
+            v = m.get(k)
+            return f'{v / gb:.2f}' if v else '—'
+        coll = r['roofline']['per_collective']
+        top = max(coll, key=coll.get) if coll else '—'
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['params'] / 1e9:.2f}B "
+            f"| {g('argument_size_bytes')} | {g('output_size_bytes')} "
+            f"| {g('temp_size_bytes')} | {top} |")
+    return '\n'.join(rows)
+
+
+if __name__ == '__main__':
+    which = sys.argv[1] if len(sys.argv) > 1 else 'sp'
+    if which == 'mem':
+        print(memtable('sp'))
+    else:
+        print(table(which))

@@ -1,0 +1,2 @@
+"""repro: Chipmunk (systolically-scalable RNN acceleration) as a JAX framework."""
+__version__ = '0.1.0'

@@ -1,0 +1,12 @@
+"""Chipmunk's contributions as composable JAX modules.
+
+C1 datapath  -> lstm.py (Eqs. 1-5) + kernels/lstm_gates
+C2 8/16-bit  -> quant.py (+ the quantized systolic path)
+C3 systolic  -> systolic.py (tiled + shard_map dataflow)
+C3b pipeline -> pipeline.py (stage-parallel layer pipeline)
+C4 silicon   -> perf_model.py (Fig. 5 / Tables 1-2 analytical model)
+CTC workload -> ctc.py (the paper's Sec. 4.2 target network's loss)
+"""
+from . import ctc, lstm, perf_model, pipeline, quant, systolic
+
+__all__ = ['ctc', 'lstm', 'perf_model', 'pipeline', 'quant', 'systolic']

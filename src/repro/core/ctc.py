@@ -1,0 +1,109 @@
+"""Connectionist Temporal Classification loss, in JAX.
+
+The paper's real-world workload (Sec. 4.2) is CTC-3L-421H-UNI from Graves et al. [1]:
+a 3-layer, 421-hidden-unit LSTM trained with CTC to emit phonemes. We therefore build
+CTC as a first-class substrate piece (log-semiring forward algorithm via ``lax.scan``)
+so the end-to-end speech example trains the very network the paper deploys.
+
+Conventions: ``log_probs`` is (T, B, K) log-softmax output, ``labels`` is (B, L) int32
+(padded with ``pad_id``), blank index configurable (default 0).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _logaddexp3(a, b, c):
+    m = jnp.maximum(jnp.maximum(a, b), c)
+    m_safe = jnp.where(m == NEG_INF, 0.0, m)
+    # double-where: keep the sum strictly positive on the dead branch so the
+    # log's gradient never produces inf * 0 = NaN under the outer select.
+    s = jnp.exp(a - m_safe) + jnp.exp(b - m_safe) + jnp.exp(c - m_safe)
+    s = jnp.where(m == NEG_INF, 1.0, s)
+    return jnp.where(m == NEG_INF, NEG_INF, m_safe + jnp.log(s))
+
+
+def ctc_loss(log_probs: jax.Array, labels: jax.Array,
+             input_lengths: jax.Array, label_lengths: jax.Array,
+             blank: int = 0) -> jax.Array:
+    """Negative log-likelihood per sequence, shape (B,).
+
+    log_probs: (T, B, K) — log softmax over K classes (blank included).
+    labels: (B, L) — no blanks; entries beyond label_lengths are ignored.
+    """
+    T, B, K = log_probs.shape
+    L = labels.shape[1]
+    S = 2 * L + 1
+
+    # Extended label sequence: blank, l1, blank, l2, ..., lL, blank.
+    ext = jnp.full((B, S), blank, labels.dtype)
+    ext = ext.at[:, 1::2].set(labels)
+    s_idx = jnp.arange(S)
+
+    # Skip transition alpha[s-2] -> alpha[s] allowed iff ext[s] != blank and
+    # ext[s] != ext[s-2] (i.e. distinct consecutive labels).
+    ext_m2 = jnp.concatenate([jnp.full((B, 2), -1, ext.dtype), ext[:, :-2]], axis=1)
+    can_skip = (ext != blank) & (ext != ext_m2)
+
+    # Positions beyond the true extended length are invalid.
+    ext_len = 2 * label_lengths + 1          # (B,)
+    valid = s_idx[None, :] < ext_len[:, None]
+
+    def emit(lp_t):  # (B, K) -> (B, S) log prob of each extended symbol at t
+        return jnp.take_along_axis(lp_t, ext, axis=1)
+
+    alpha0 = jnp.full((B, S), NEG_INF)
+    alpha0 = alpha0.at[:, 0].set(log_probs[0, jnp.arange(B), blank])
+    first_lbl = log_probs[0, jnp.arange(B), ext[:, 1]]
+    alpha0 = alpha0.at[:, 1].set(jnp.where(label_lengths > 0, first_lbl, NEG_INF))
+    alpha0 = jnp.where(valid, alpha0, NEG_INF)
+
+    def step(alpha, t_and_lp):
+        t, lp_t = t_and_lp
+        shift1 = jnp.concatenate([jnp.full((B, 1), NEG_INF), alpha[:, :-1]], axis=1)
+        shift2 = jnp.concatenate([jnp.full((B, 2), NEG_INF), alpha[:, :-2]], axis=1)
+        shift2 = jnp.where(can_skip, shift2, NEG_INF)
+        new = _logaddexp3(alpha, shift1, shift2) + emit(lp_t)
+        new = jnp.where(valid, new, NEG_INF)
+        # Freeze alpha for sequences already past their input length.
+        active = (t < input_lengths)[:, None]
+        return jnp.where(active, new, alpha), None
+
+    ts = jnp.arange(1, T)
+    alpha_T, _ = jax.lax.scan(step, alpha0, (ts, log_probs[1:]))
+
+    # Total prob ends at the last blank or last label of each sequence.
+    end_blank = jnp.take_along_axis(alpha_T, (ext_len - 1)[:, None], axis=1)[:, 0]
+    end_label = jnp.take_along_axis(
+        alpha_T, jnp.maximum(ext_len - 2, 0)[:, None], axis=1)[:, 0]
+    end_label = jnp.where(label_lengths > 0, end_label, NEG_INF)
+    m = jnp.maximum(end_blank, end_label)
+    m_safe = jnp.where(m == NEG_INF, 0.0, m)
+    s = jnp.exp(end_blank - m_safe) + jnp.exp(end_label - m_safe)
+    s = jnp.where(m == NEG_INF, 1.0, s)
+    log_z = jnp.where(m == NEG_INF, NEG_INF, m_safe + jnp.log(s))
+    return -log_z
+
+
+def ctc_greedy_decode(log_probs: jax.Array, blank: int = 0
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Best-path decode: (T, B, K) -> (collapsed (B, T) padded with -1, lengths)."""
+    T, B, _ = log_probs.shape
+    best = jnp.argmax(log_probs, axis=-1)          # (T, B)
+    best = best.T                                   # (B, T)
+    prev = jnp.concatenate([jnp.full((B, 1), -1, best.dtype), best[:, :-1]], axis=1)
+    keep = (best != blank) & (best != prev)
+
+    def collapse(row, keep_row):
+        idx = jnp.cumsum(keep_row) - 1
+        out = jnp.full((T,), -1, row.dtype).at[
+            jnp.where(keep_row, idx, T)].set(row, mode='drop')
+        return out, keep_row.sum()
+
+    outs, lens = jax.vmap(collapse)(best, keep)
+    return outs, lens

@@ -1,0 +1,239 @@
+"""Canonical peephole LSTM — the workload Chipmunk executes (paper Eqs. 1-5).
+
+    i_t = sigma(W_xi x_t + W_hi h_{t-1} + w_ci . c_{t-1} + b_i)
+    f_t = sigma(W_xf x_t + W_hf h_{t-1} + w_cf . c_{t-1} + b_f)
+    c_t = f_t . c_{t-1} + i_t . tanh(W_xc x_t + W_hc h_{t-1} + b_c)
+    o_t = sigma(W_xo x_t + W_ho h_{t-1} + w_co . c_t + b_o)
+    h_t = o_t . tanh(c_t)
+
+The peephole matrices are diagonal by construction (footnote 1 of the paper), so they
+are stored as vectors and applied element-wise — exactly what the silicon implements.
+
+Gate storage order throughout the package: (i, f, g, o) where g is the cell candidate.
+Weights are packed as W[4, N_h, N_in] so the systolic tiler can block them uniformly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+GATES = 4  # i, f, g, o
+I, F, G, O = 0, 1, 2, 3
+PEEP_I, PEEP_F, PEEP_O = 0, 1, 2
+
+
+class LSTMParams(NamedTuple):
+    w_x: jax.Array    # (4, N_h, N_x)
+    w_h: jax.Array    # (4, N_h, N_h)
+    w_peep: jax.Array  # (3, N_h)   diagonal peepholes for i, f, o
+    b: jax.Array      # (4, N_h)
+
+    @property
+    def n_h(self) -> int:
+        return self.w_h.shape[-1]
+
+    @property
+    def n_x(self) -> int:
+        return self.w_x.shape[-1]
+
+    def num_params(self) -> int:
+        return sum(int(jnp.size(p)) for p in self)
+
+
+def init_lstm_params(key: jax.Array, n_x: int, n_h: int,
+                     dtype=jnp.float32, forget_bias: float = 1.0) -> LSTMParams:
+    kx, kh, kp = jax.random.split(key, 3)
+    sx = 1.0 / jnp.sqrt(n_x)
+    sh = 1.0 / jnp.sqrt(n_h)
+    b = jnp.zeros((GATES, n_h), dtype)
+    b = b.at[F].set(forget_bias)  # standard LSTM trick; keeps early training stable
+    return LSTMParams(
+        w_x=(jax.random.uniform(kx, (GATES, n_h, n_x), dtype, -1, 1) * sx),
+        w_h=(jax.random.uniform(kh, (GATES, n_h, n_h), dtype, -1, 1) * sh),
+        w_peep=(jax.random.uniform(kp, (3, n_h), dtype, -1, 1) * 0.1),
+        b=b,
+    )
+
+
+def lstm_cell(params: LSTMParams, x_t: jax.Array, h_prev: jax.Array,
+              c_prev: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One LSTM timestep.  x_t: (..., N_x); h_prev, c_prev: (..., N_h)."""
+    # (..., 4, N_h) pre-activations; the matrix-vector products of Fig. 1 (green).
+    pre = (jnp.einsum('ghx,...x->...gh', params.w_x, x_t)
+           + jnp.einsum('ghk,...k->...gh', params.w_h, h_prev))
+    i = jax.nn.sigmoid(pre[..., I, :] + params.w_peep[PEEP_I] * c_prev + params.b[I])
+    f = jax.nn.sigmoid(pre[..., F, :] + params.w_peep[PEEP_F] * c_prev + params.b[F])
+    g = jnp.tanh(pre[..., G, :] + params.b[G])
+    c_t = f * c_prev + i * g
+    o = jax.nn.sigmoid(pre[..., O, :] + params.w_peep[PEEP_O] * c_t + params.b[O])
+    h_t = o * jnp.tanh(c_t)
+    return h_t, c_t
+
+
+def lstm_layer(params: LSTMParams, xs: jax.Array,
+               h0: Optional[jax.Array] = None,
+               c0: Optional[jax.Array] = None) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Scan a layer over time.  xs: (T, ..., N_x) -> hs: (T, ..., N_h).
+
+    The input-state contribution W_x @ x_t is hoisted out of the scan as one
+    (T*B)-wide matmul — the sequential loop only carries the recurrent
+    W_h @ h_{t-1} part.  Besides halving in-loop matmuls, this moves the
+    dW_x reduction out of the time loop (one all-reduce instead of T under
+    data parallelism).  The silicon streams x the same way (Sec. 3.2).
+    """
+    n_h = params.n_h
+    batch_shape = xs.shape[1:-1]
+    if h0 is None:
+        h0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
+    if c0 is None:
+        c0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
+
+    pre_x = jnp.einsum('ghx,t...x->t...gh', params.w_x, xs)   # hoisted
+
+    def step(carry, pre_x_t):
+        h, c = carry
+        pre = pre_x_t + jnp.einsum('ghk,...k->...gh', params.w_h, h)
+        i = jax.nn.sigmoid(pre[..., I, :] + params.w_peep[PEEP_I] * c + params.b[I])
+        f = jax.nn.sigmoid(pre[..., F, :] + params.w_peep[PEEP_F] * c + params.b[F])
+        g = jnp.tanh(pre[..., G, :] + params.b[G])
+        c = f * c + i * g
+        o = jax.nn.sigmoid(pre[..., O, :] + params.w_peep[PEEP_O] * c + params.b[O])
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    (h_T, c_T), hs = jax.lax.scan(step, (h0, c0), pre_x)
+    return hs, (h_T, c_T)
+
+
+# ---------------------------------------------------------------------------
+# Hand-written layer VJP: weight gradients accumulate OUTSIDE the time loop
+# (autodiff-of-scan reduces dW across data shards every step — measured
+# 62 GB/chip/step on the chipmunk-ctc train cell; this does it once).
+# ---------------------------------------------------------------------------
+
+def _lstm_scan(w_h, w_peep, b, pre_x, h0, c0):
+    def step(carry, pre_x_t):
+        h, c_prev = carry
+        pre = pre_x_t + jnp.einsum('ghk,...k->...gh', w_h, h)
+        i = jax.nn.sigmoid(pre[..., I, :] + w_peep[PEEP_I] * c_prev + b[I])
+        f = jax.nn.sigmoid(pre[..., F, :] + w_peep[PEEP_F] * c_prev + b[F])
+        g = jnp.tanh(pre[..., G, :] + b[G])
+        c = f * c_prev + i * g
+        o = jax.nn.sigmoid(pre[..., O, :] + w_peep[PEEP_O] * c + b[O])
+        h_new = o * jnp.tanh(c)
+        gates = jnp.stack([i, f, g, o], axis=-2)
+        return (h_new, c), (h_new, c, gates)
+
+    (h_T, c_T), (hs, cs, gates) = jax.lax.scan(step, (h0, c0), pre_x)
+    return hs, cs, gates, h_T, c_T
+
+
+@jax.custom_vjp
+def lstm_scan_fused(w_h, w_peep, b, pre_x, h0, c0):
+    hs, _, _, h_T, c_T = _lstm_scan(w_h, w_peep, b, pre_x, h0, c0)
+    return hs, (h_T, c_T)
+
+
+def _lsf_fwd(w_h, w_peep, b, pre_x, h0, c0):
+    hs, cs, gates, h_T, c_T = _lstm_scan(w_h, w_peep, b, pre_x, h0, c0)
+    return (hs, (h_T, c_T)), (w_h, w_peep, hs, cs, gates, h0, c0)
+
+
+def _lsf_bwd(res, grads):
+    w_h, w_peep, hs, cs, gates, h0, c0 = res
+    dhs, (dh_T, dc_T) = grads
+    T = hs.shape[0]
+    h_prevs = jnp.concatenate([h0[None], hs[:-1]], axis=0)
+    c_prevs = jnp.concatenate([c0[None], cs[:-1]], axis=0)
+
+    def step(carry, xs):
+        dh_next, dc_next = carry
+        dh_out, c_prev, c_t, gate_t = xs
+        i, f, g, o = (gate_t[..., k, :] for k in range(4))
+        dh = dh_out + dh_next
+        tc = jnp.tanh(c_t)
+        do = dh * tc
+        da_o = do * o * (1 - o)
+        dct = dh * o * (1 - tc * tc) + dc_next + da_o * w_peep[PEEP_O]
+        da_i = dct * g * i * (1 - i)
+        da_f = dct * c_prev * f * (1 - f)
+        da_g = dct * i * (1 - g * g)
+        dc_prev = dct * f + da_i * w_peep[PEEP_I] + da_f * w_peep[PEEP_F]
+        da = jnp.stack([da_i, da_f, da_g, da_o], axis=-2)   # (..., 4, Nh)
+        dh_prev = jnp.einsum('ghk,...gh->...k', w_h, da)
+        return (dh_prev, dc_prev), da
+
+    (dh0, dc0), das = jax.lax.scan(
+        step, (dh_T, dc_T), (dhs, c_prevs, cs, gates), reverse=True)
+
+    # weight gradients: single wide contractions outside the loop
+    dw_h = jnp.einsum('t...gh,t...k->ghk', das, h_prevs)
+    d_peep = jnp.stack([
+        jnp.einsum('t...h,t...h->h', das[..., I, :], c_prevs),
+        jnp.einsum('t...h,t...h->h', das[..., F, :], c_prevs),
+        jnp.einsum('t...h,t...h->h', das[..., O, :], cs)])
+    db = das.sum(axis=tuple(range(das.ndim - 2)))
+    dpre_x = das
+    return dw_h, d_peep, db, dpre_x, dh0, dc0
+
+
+lstm_scan_fused.defvjp(_lsf_fwd, _lsf_bwd)
+
+
+def lstm_layer_fused(params: LSTMParams, xs: jax.Array,
+                     h0: Optional[jax.Array] = None,
+                     c0: Optional[jax.Array] = None):
+    """lstm_layer with the hand-written VJP (production training path)."""
+    n_h = params.n_h
+    batch_shape = xs.shape[1:-1]
+    if h0 is None:
+        h0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
+    if c0 is None:
+        c0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
+    pre_x = jnp.einsum('ghx,t...x->t...gh', params.w_x, xs)
+    return lstm_scan_fused(params.w_h, params.w_peep, params.b, pre_x, h0, c0)
+
+
+class LSTMStackParams(NamedTuple):
+    layers: Tuple[LSTMParams, ...]
+    w_out: Optional[jax.Array]  # (N_out, N_h) final dense layer (paper: y = sigma(W_hy h))
+    b_out: Optional[jax.Array]
+
+    def num_params(self) -> int:
+        n = sum(l.num_params() for l in self.layers)
+        if self.w_out is not None:
+            n += int(jnp.size(self.w_out)) + int(jnp.size(self.b_out))
+        return n
+
+
+def init_lstm_stack(key: jax.Array, n_x: int, n_h: int, n_layers: int,
+                    n_out: Optional[int] = None, dtype=jnp.float32) -> LSTMStackParams:
+    keys = jax.random.split(key, n_layers + 1)
+    layers = []
+    for l in range(n_layers):
+        layers.append(init_lstm_params(keys[l], n_x if l == 0 else n_h, n_h, dtype))
+    w_out = b_out = None
+    if n_out is not None:
+        w_out = jax.random.uniform(keys[-1], (n_out, n_h), dtype, -1, 1) / jnp.sqrt(n_h)
+        b_out = jnp.zeros((n_out,), dtype)
+    return LSTMStackParams(tuple(layers), w_out, b_out)
+
+
+def lstm_stack_apply(params: LSTMStackParams, xs: jax.Array,
+                     states: Optional[Sequence[Tuple[jax.Array, jax.Array]]] = None,
+                     ) -> Tuple[jax.Array, list]:
+    """Full network: stacked LSTM layers + optional dense read-out (logits, no sigma).
+
+    xs: (T, B, N_x).  Returns (ys (T, B, N_out or N_h), final states per layer).
+    """
+    h = xs
+    finals = []
+    for l, lp in enumerate(params.layers):
+        h0c0 = states[l] if states is not None else (None, None)
+        h, (h_T, c_T) = lstm_layer_fused(lp, h, *h0c0)
+        finals.append((h_T, c_T))
+    if params.w_out is not None:
+        h = jnp.einsum('oh,tbh->tbo', params.w_out, h) + params.b_out
+    return h, finals

@@ -1,0 +1,197 @@
+"""Analytical Chipmunk silicon model — contribution C4 (Fig. 5 + Tables 1 & 2).
+
+This container is CPU-only, so the chip's measured voltage/frequency/power behaviour
+is reproduced as a calibrated analytical model:
+
+* **f(V)** — linear fit through the two measured shmoo corners
+  (0.75 V -> 20 MHz, 1.24 V -> 168 MHz).  UMC 65 nm HVT near-threshold behaviour is
+  close to linear in this range.
+* **P(V)** — pure dynamic CMOS power P = C_eff * f(V) * V^2 with C_eff fit at the
+  1.24 V corner (29.03 mW); predicts 1.26 mW at 0.75 V vs the measured 1.24 mW
+  (+1.9 %), confirming leakage is negligible (HVT cells, as the paper states).
+* **cycle model** — the paper gives no microarchitectural cycle counts, so we fit two
+  constants on two rows of Table 2 and *predict* the third row as validation:
+    - ``beta`` (cycles per tile-gate-pass / 96) absorbs the row-accumulation hops,
+      LUT + element-wise phase and h re-broadcast.  Fit on the 3x(5x5) row
+      (compute-bound, no reloads).
+    - ``load_cpb`` (cycles per weight byte per engine, streams parallel across
+      engines) absorbs the ready/valid stream protocol overhead.  Fit on the
+      single-engine row (reload-bound).
+    The 5x5 row is then predicted with no free parameters (-3 % vs paper).
+* **Table 2 power** — the paper's own per-engine peak power in Table 2
+  (24.45 mW @1.24 V, 2.21 mW @0.75 V) differs from the Fig. 5 chip corners
+  (29.03 / 1.24 mW); we reproduce Table 2 with the paper's Table-2 constants and
+  note the discrepancy (it is internal to the paper).  Average power follows the
+  paper's duty-cycling rule: avg = peak * exec_time / frame_period.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+# --- measured corners (paper Sec. 4.1) -------------------------------------
+V_MIN, F_MIN_HZ, P_MIN_W = 0.75, 20e6, 1.24e-3
+V_MAX, F_MAX_HZ, P_MAX_W = 1.24, 168e6, 29.03e-3
+N_LSTM = 96
+CORE_AREA_MM2 = 0.93
+DIE_AREA_MM2 = 1.57
+SRAM_BYTES = 81_700
+
+# Table 2 per-engine peak power (the paper's own constants for that table).
+TABLE2_PEAK_W = {1.24: 24.45e-3, 0.75: 2.21e-3}
+FRAME_PERIOD_S = 10e-3  # MFCC frame rate
+
+# f(V) linear fit through the two corners.
+_F_SLOPE = (F_MAX_HZ - F_MIN_HZ) / (V_MAX - V_MIN)     # Hz / V
+_F_OFFSET = F_MIN_HZ - _F_SLOPE * V_MIN
+# P = C_eff * f * V^2, C_eff fit at the 1.24 V corner.
+C_EFF = P_MAX_W / (F_MAX_HZ * V_MAX ** 2)
+
+
+def freq_hz(v: float) -> float:
+    """Max clock frequency at core voltage v (valid 0.75..1.24 V)."""
+    return _F_SLOPE * v + _F_OFFSET
+
+
+def power_w(v: float, f_hz: float = None) -> float:
+    """Core power at voltage v running at f_hz (defaults to max frequency)."""
+    f = freq_hz(v) if f_hz is None else f_hz
+    return C_EFF * f * v ** 2
+
+
+def peak_gops(v: float) -> float:
+    """1 MAC = 2 ops (paper footnote 2)."""
+    return 2 * N_LSTM * freq_hz(v) / 1e9
+
+
+def efficiency_gops_per_mw(v: float) -> float:
+    return peak_gops(v) / (power_w(v) * 1e3)
+
+
+def area_efficiency_gops_per_mm2(v: float = V_MAX) -> float:
+    return peak_gops(v) / CORE_AREA_MM2
+
+
+# ---------------------------------------------------------------------------
+# Cycle-level model of LSTM execution on a tile configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerDims:
+    n_x: int
+    n_h: int
+
+    def weight_bytes(self) -> int:
+        # 4 gate matrices (8-bit) + 3 peephole vectors (8-bit) + 4 biases (16-bit)
+        return (4 * self.n_h * (self.n_x + self.n_h)
+                + 3 * self.n_h + 4 * 2 * self.n_h)
+
+    def tile_positions(self, tile: int = N_LSTM) -> Tuple[int, int]:
+        rows = math.ceil(self.n_h / tile)
+        cols = math.ceil(self.n_x / tile) + math.ceil(self.n_h / tile)
+        return rows, cols
+
+
+# CTC-3L-421H-UNI (Graves et al.): 123 MFCC inputs, 3 layers of 421 hidden units.
+CTC_3L_421H = [LayerDims(123, 421), LayerDims(421, 421), LayerDims(421, 421)]
+
+# Calibrated constants (see fit_calibration below; values reproduced in tests).
+BETA = 6.5625        # cycles per (tile-gate-pass * 96) — fit on the 3x(5x5) row
+LOAD_CPB = 1.61516   # cycles per weight byte per engine — fit on the single row
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """arrays sub-arrays of rows x cols engines (arrays>1 => layer pipeline)."""
+    arrays: int
+    rows: int
+    cols: int
+
+    @property
+    def n_engines(self) -> int:
+        return self.arrays * self.rows * self.cols
+
+    def label(self) -> str:
+        if self.arrays > 1:
+            return f'systolic {self.arrays}x{self.rows}x{self.cols}'
+        if self.rows * self.cols > 1:
+            return f'systolic {self.rows}x{self.cols}'
+        return 'single'
+
+
+def compute_cycles(layers: Sequence[LayerDims], cfg: TileConfig,
+                   tile: int = N_LSTM, beta: float = BETA) -> float:
+    """Pure compute cycles for one frame (all layers, one timestep each)."""
+    total = 0.0
+    for ld in layers:
+        r, c = ld.tile_positions(tile)
+        passes = math.ceil(r / cfg.rows) * math.ceil(c / cfg.cols)
+        total += passes * 4 * tile * beta
+    return total
+
+
+def reload_cycles(layers: Sequence[LayerDims], cfg: TileConfig,
+                  load_cpb: float = LOAD_CPB) -> float:
+    """Weight-streaming cycles per frame.
+
+    The paper: the 3x(5x5) configuration holds the whole network (no reloads);
+    smaller configurations must re-stream every layer's weights each frame
+    (engines load their shares in parallel).
+    """
+    if cfg.arrays >= len(layers):
+        return 0.0
+    total_bytes = sum(ld.weight_bytes() for ld in layers)
+    engines = cfg.rows * cfg.cols * cfg.arrays
+    return total_bytes / engines * load_cpb
+
+
+def execution_time_s(layers: Sequence[LayerDims], cfg: TileConfig, v: float,
+                     tile: int = N_LSTM) -> float:
+    cycles = compute_cycles(layers, cfg, tile) + reload_cycles(layers, cfg)
+    return cycles / freq_hz(v)
+
+
+def table2_row(layers: Sequence[LayerDims], cfg: TileConfig, v: float) -> Dict:
+    t_exec = execution_time_s(layers, cfg, v)
+    peak_w = TABLE2_PEAK_W[round(v, 2)] * cfg.n_engines
+    avg_w = peak_w * min(t_exec / FRAME_PERIOD_S, 1.0)
+    return {
+        'config': cfg.label(), 'voltage': v,
+        'exec_time_ms': t_exec * 1e3,
+        'peak_power_mw': peak_w * 1e3,
+        'avg_power_mw': avg_w * 1e3,
+        'meets_deadline': t_exec <= FRAME_PERIOD_S,
+    }
+
+
+def table2(layers: Sequence[LayerDims] = CTC_3L_421H) -> List[Dict]:
+    cfgs = [TileConfig(3, 5, 5), TileConfig(1, 5, 5), TileConfig(1, 1, 1)]
+    return [table2_row(layers, cfg, v) for v in (V_MAX, V_MIN) for cfg in cfgs]
+
+
+# Published Table 2 values for validation: (config, voltage) -> exec ms.
+PAPER_TABLE2_MS = {
+    ('systolic 3x5x5', 1.24): 0.09, ('systolic 5x5', 1.24): 1.59,
+    ('single', 1.24): 38.23,
+    ('systolic 3x5x5', 0.75): 0.76, ('systolic 5x5', 0.75): 13.31,
+    ('single', 0.75): 321.14,
+}
+
+
+def fit_calibration(layers: Sequence[LayerDims] = CTC_3L_421H
+                    ) -> Tuple[float, float]:
+    """Re-derive (beta, load_cpb) from the paper's Table 2, for documentation.
+
+    beta from the reload-free 3x(5x5) row; load_cpb from the single-engine row
+    after subtracting modelled compute.  Returns the constants baked in above.
+    """
+    target_3x55 = PAPER_TABLE2_MS[('systolic 3x5x5', 1.24)] * 1e-3 * F_MAX_HZ
+    raw = compute_cycles(layers, TileConfig(3, 5, 5), beta=1.0)
+    beta = target_3x55 / raw
+
+    target_single = PAPER_TABLE2_MS[('single', 1.24)] * 1e-3 * F_MAX_HZ
+    comp = compute_cycles(layers, TileConfig(1, 1, 1), beta=beta)
+    total_bytes = sum(ld.weight_bytes() for ld in layers)
+    load_cpb = (target_single - comp) / total_bytes
+    return beta, load_cpb

@@ -1,0 +1,177 @@
+"""Fixed-point quantization — Chipmunk contribution C2.
+
+The silicon stores every state variable (weights, x, h, c, gate values) as 8-bit
+fixed point and accumulates multiply-adds in 16 bit.  We model that numerically:
+
+* symmetric signed Q-format: value = int_val * 2**-frac_bits, int_val in [-2^(b-1), 2^(b-1)-1]
+* straight-through-estimator fake-quant for quantization-aware training,
+* 256-entry lookup-table activations (the hardware implements sigmoid/tanh as LUTs),
+* saturating int16 partial-sum semantics for the systolic row accumulation.
+
+Scales here are powers of two (true fixed point, as in the chip) by default, but the
+API also accepts arbitrary float scales (per-tensor or per-channel) for the beyond-paper
+int8 path used by the transformer architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT8_MIN, INT8_MAX = -128, 127
+INT16_MIN, INT16_MAX = -(2 ** 15), 2 ** 15 - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Signed fixed-point format Q<int_bits>.<frac_bits> (sign bit implicit)."""
+
+    int_bits: int
+    frac_bits: int
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def max_val(self) -> float:
+        return (2 ** (self.bits - 1) - 1) * self.scale
+
+    @property
+    def min_val(self) -> float:
+        return -(2 ** (self.bits - 1)) * self.scale
+
+
+# The formats used by the Chipmunk datapath (8-bit storage, 16-bit accumulation).
+# Weights/states live in Q2.5 by default: range [-4, 3.97], resolution 2^-5.
+WEIGHT_FMT = QFormat(int_bits=2, frac_bits=5)
+STATE_FMT = QFormat(int_bits=2, frac_bits=5)
+GATE_FMT = QFormat(int_bits=0, frac_bits=7)  # gates are in (-1, 1)
+ACCUM_BITS = 16
+
+
+def quantize(x: jax.Array, fmt: QFormat = STATE_FMT) -> jax.Array:
+    """Float -> integer code (int8 for 8-bit formats)."""
+    q = jnp.round(x / fmt.scale)
+    q = jnp.clip(q, -(2 ** (fmt.bits - 1)), 2 ** (fmt.bits - 1) - 1)
+    dtype = jnp.int8 if fmt.bits <= 8 else jnp.int16
+    return q.astype(dtype)
+
+
+def dequantize(q: jax.Array, fmt: QFormat = STATE_FMT) -> jax.Array:
+    return q.astype(jnp.float32) * fmt.scale
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x: jax.Array, fmt: QFormat = STATE_FMT) -> jax.Array:
+    """Quantize-dequantize with a straight-through gradient (for QAT)."""
+    return dequantize(quantize(x, fmt), fmt)
+
+
+def _fake_quant_fwd(x, fmt):
+    return fake_quant(x, fmt), x
+
+
+def _fake_quant_bwd(fmt, res, g):
+    x = res
+    # Pass gradients only inside the representable range (clipped STE).
+    mask = (x >= fmt.min_val) & (x <= fmt.max_val)
+    return (g * mask.astype(g.dtype),)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Arbitrary-scale symmetric int8 (beyond-paper path used for the LM archs)
+# ---------------------------------------------------------------------------
+
+def abs_max_scale(x: jax.Array, axis: Optional[int] = None, eps: float = 1e-8) -> jax.Array:
+    """Symmetric per-tensor (axis=None) or per-channel scale so x/scale fits int8."""
+    amax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(
+        jnp.abs(x), axis=axis, keepdims=True)
+    return jnp.maximum(amax, eps) / INT8_MAX
+
+
+def quantize_scaled(x: jax.Array, scale: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(x / scale), INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize_scaled(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_matmul(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+                w_scale: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 accumulate -> rescale to fp32.
+
+    Mirrors the MXU's native int8 path (and Chipmunk's 8-bit MAC with wide
+    accumulator).  ``w_scale`` may be per-channel of the output dim.
+    """
+    acc = jax.lax.dot_general(
+        x_q, w_q,
+        (((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * (x_scale * w_scale)
+
+
+def saturating_add_int16(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Saturating 16-bit add — the semantics of Chipmunk's partial-sum hops."""
+    s = a.astype(jnp.int32) + b.astype(jnp.int32)
+    return jnp.clip(s, INT16_MIN, INT16_MAX).astype(jnp.int32)
+
+
+def saturate_int16(x: jax.Array) -> jax.Array:
+    return jnp.clip(x, INT16_MIN, INT16_MAX)
+
+
+# ---------------------------------------------------------------------------
+# LUT activations — the hardware's sigmoid/tanh
+# ---------------------------------------------------------------------------
+
+def build_act_lut(fn, in_fmt: QFormat, out_fmt: QFormat = GATE_FMT) -> np.ndarray:
+    """256-entry table: input code (int8, offset by +128) -> output code (int8).
+
+    Exactly what the silicon's activation LUT contains.
+    """
+    codes = np.arange(-(2 ** (in_fmt.bits - 1)), 2 ** (in_fmt.bits - 1))
+    vals = fn(codes * in_fmt.scale)
+    out = np.clip(np.round(vals / out_fmt.scale),
+                  -(2 ** (out_fmt.bits - 1)), 2 ** (out_fmt.bits - 1) - 1)
+    return out.astype(np.int8)
+
+
+def apply_lut(lut: jax.Array, q: jax.Array, in_fmt: QFormat) -> jax.Array:
+    """Apply a 2**bits entry LUT to integer codes ``q``."""
+    idx = q.astype(jnp.int32) + 2 ** (in_fmt.bits - 1)
+    return jnp.take(lut, idx, axis=0)
+
+
+def requantize(acc: jax.Array, acc_fmt: QFormat, out_fmt: QFormat) -> jax.Array:
+    """Shift an integer accumulator (acc_fmt) into out_fmt codes (round-to-nearest)."""
+    shift = acc_fmt.frac_bits - out_fmt.frac_bits
+    if shift >= 0:
+        rounded = (acc + (1 << shift >> 1)) >> shift if shift > 0 else acc
+    else:
+        rounded = acc << (-shift)
+    return jnp.clip(rounded, -(2 ** (out_fmt.bits - 1)),
+                    2 ** (out_fmt.bits - 1) - 1)
+
+
+_SIGMOID = lambda z: 1.0 / (1.0 + np.exp(-z))
+_TANH = np.tanh
+
+
+def default_luts(pre_fmt: QFormat = STATE_FMT):
+    """(sigmoid_lut, tanh_lut) for gate computation at the given pre-act format."""
+    return (jnp.asarray(build_act_lut(_SIGMOID, pre_fmt, GATE_FMT)),
+            jnp.asarray(build_act_lut(_TANH, pre_fmt, GATE_FMT)))

@@ -1,0 +1,406 @@
+"""Systolic LSTM execution — Chipmunk contributions C1 + C3.
+
+The paper executes one LSTM on an R x C grid of engines.  Each engine holds a
+``tile x tile`` block of the packed 4-gate weight matrix ``W = [W_x | W_h]`` in local
+SRAM (weight-stationary).  Per timestep:
+
+  1. the packed input vector ``xh = [x_t | h_{t-1}]`` is split into C column slices,
+     each broadcast *down* a column of engines (paper Fig. 3a);
+  2. every engine MACs its tile against its column slice (the sequential "column
+     loop" of Sec. 3.2, run on 96 parallel row units);
+  3. partial sums are accumulated *across* each row of engines in 16-bit saturating
+     arithmetic (the systolic hop), finishing at the last column (Fig. 3b);
+  4. the finishing column applies the LUT nonlinearities and the element-wise state
+     update (Eqs. 1-5) for its row chunk of ``h_t``/``c_t``;
+  5. the new ``h_t`` chunks are re-broadcast vertically for the next timestep
+     (Fig. 3c).  Only O(N_h) bytes ever cross engine boundaries.
+
+TPU adaptation (see DESIGN.md §2): engines -> mesh devices on ("row", "col") axes;
+step 3 -> ``lax.psum`` over "col"; step 5 -> ``lax.all_gather`` over "row".  The
+pure-JAX tiled forms below are numerically identical and are what the production
+pjit path lowers (XLA emits the same collective schedule from sharding constraints).
+
+Three execution paths, all validated against ``core.lstm.lstm_cell``:
+  * ``systolic_cell_tiled``       — float, per-tile partials + row reduction.
+  * ``systolic_cell_quantized``   — bit-accurate int8 storage / int16 saturating hops
+                                    / LUT activations (contribution C2).
+  * ``systolic_lstm_shard_map``   — distributed over an explicit ("row","col") mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import AxisType, Mesh, PartitionSpec as P
+
+from . import quant
+from .lstm import GATES, I, F, G, O, PEEP_I, PEEP_F, PEEP_O, LSTMParams
+
+N_LSTM_SILICON = 96  # rows per engine in the fabricated chip
+
+
+# ---------------------------------------------------------------------------
+# Tiling plan + weight packing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SystolicPlan:
+    """Block layout of one LSTM layer on an R x C engine grid.
+
+    The x-region of the packed input is padded to a whole number of tiles so the
+    h-region starts tile-aligned: column c < cols_x consumes input-state slices,
+    column c >= cols_x consumes hidden-state slices (which is what makes step 5's
+    vertical re-broadcast wiring static — "hard-wired" in the paper's words).
+    """
+
+    n_x: int
+    n_h: int
+    tile: int = N_LSTM_SILICON
+
+    @property
+    def rows(self) -> int:  # R: output (hidden) chunks
+        return math.ceil(self.n_h / self.tile)
+
+    @property
+    def cols_x(self) -> int:
+        return math.ceil(self.n_x / self.tile)
+
+    @property
+    def cols_h(self) -> int:
+        return math.ceil(self.n_h / self.tile)
+
+    @property
+    def cols(self) -> int:  # C: input chunks
+        return self.cols_x + self.cols_h
+
+    @property
+    def padded_h(self) -> int:
+        return self.rows * self.tile
+
+    @property
+    def padded_x(self) -> int:
+        return self.cols_x * self.tile
+
+    @property
+    def padded_in(self) -> int:
+        return self.cols * self.tile
+
+    @property
+    def n_engines(self) -> int:
+        return self.rows * self.cols
+
+    def weight_bytes_per_engine(self) -> int:
+        # 4 gate tiles + row slice of peepholes (3) and biases (4, 16-bit)
+        return GATES * self.tile * self.tile + 3 * self.tile + 4 * 2 * self.tile
+
+
+class PackedLSTM(NamedTuple):
+    """Weight tiles in engine layout."""
+
+    tiles: jax.Array   # (R, C, 4, tile, tile)
+    peep: jax.Array    # (R, 3, tile)
+    bias: jax.Array    # (R, 4, tile)
+    plan_shape: Tuple[int, int, int, int]  # (n_x, n_h, tile, cols_x) — static metadata
+
+    @property
+    def plan(self) -> SystolicPlan:
+        n_x, n_h, tile, _ = self.plan_shape
+        return SystolicPlan(n_x, n_h, tile)
+
+
+def pack_lstm(params: LSTMParams, plan: SystolicPlan) -> PackedLSTM:
+    """Block [W_x | W_h] into (R, C, 4, t, t) engine tiles (zero padding)."""
+    t = plan.tile
+    w = jnp.zeros((GATES, plan.padded_h, plan.padded_in), params.w_x.dtype)
+    w = w.at[:, :params.w_x.shape[1], :plan.n_x].set(params.w_x)
+    w = w.at[:, :params.w_h.shape[1], plan.padded_x:plan.padded_x + plan.n_h].set(params.w_h)
+    tiles = w.reshape(GATES, plan.rows, t, plan.cols, t).transpose(1, 3, 0, 2, 4)
+    peep = jnp.zeros((3, plan.padded_h), params.w_peep.dtype
+                     ).at[:, :plan.n_h].set(params.w_peep)
+    bias = jnp.zeros((GATES, plan.padded_h), params.b.dtype
+                     ).at[:, :plan.n_h].set(params.b)
+    return PackedLSTM(
+        tiles=tiles,
+        peep=peep.reshape(3, plan.rows, t).transpose(1, 0, 2),
+        bias=bias.reshape(GATES, plan.rows, t).transpose(1, 0, 2),
+        plan_shape=(plan.n_x, plan.n_h, plan.tile, plan.cols_x),
+    )
+
+
+def pack_xh(x: jax.Array, h: jax.Array, plan: SystolicPlan) -> jax.Array:
+    """(..., n_x), (..., n_h) -> column blocks (..., C, tile)."""
+    batch = x.shape[:-1]
+    xh = jnp.zeros(batch + (plan.padded_in,), x.dtype)
+    xh = xh.at[..., :plan.n_x].set(x)
+    xh = xh.at[..., plan.padded_x:plan.padded_x + plan.n_h].set(h)
+    return xh.reshape(batch + (plan.cols, plan.tile))
+
+
+def unpack_h(h_blocks: jax.Array, plan: SystolicPlan) -> jax.Array:
+    """(..., R, tile) -> (..., n_h)."""
+    return h_blocks.reshape(h_blocks.shape[:-2] + (plan.padded_h,))[..., :plan.n_h]
+
+
+# ---------------------------------------------------------------------------
+# Float tiled execution (paper dataflow, fp arithmetic)
+# ---------------------------------------------------------------------------
+
+def systolic_cell_tiled(packed: PackedLSTM, x_t: jax.Array, h_prev: jax.Array,
+                        c_prev_blocks: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One timestep in the systolic dataflow, float arithmetic.
+
+    c_prev_blocks: (..., R, tile).  Returns (h_full (..., n_h), h_blocks, c_blocks).
+    """
+    plan = packed.plan
+    xh = pack_xh(x_t, h_prev, plan)                       # steps 1: column slices
+    # step 2: per-engine MAC; step 3: row accumulation (sum over c).
+    pre = jnp.einsum('rcgij,...cj->...rgi', packed.tiles, xh)
+    peep, b = packed.peep, packed.bias
+    # step 4: gate nonlinearities + element-wise state update per row chunk.
+    i = jax.nn.sigmoid(pre[..., I, :] + peep[:, PEEP_I] * c_prev_blocks + b[:, I])
+    f = jax.nn.sigmoid(pre[..., F, :] + peep[:, PEEP_F] * c_prev_blocks + b[:, F])
+    g = jnp.tanh(pre[..., G, :] + b[:, G])
+    c_t = f * c_prev_blocks + i * g
+    o = jax.nn.sigmoid(pre[..., O, :] + peep[:, PEEP_O] * c_t + b[:, O])
+    h_blocks = o * jnp.tanh(c_t)
+    return unpack_h(h_blocks, plan), h_blocks, c_t       # step 5 done by caller
+
+
+def systolic_layer_tiled(packed: PackedLSTM, xs: jax.Array) -> jax.Array:
+    """Scan the tiled cell over time.  xs: (T, ..., n_x) -> (T, ..., n_h)."""
+    plan = packed.plan
+    batch = xs.shape[1:-1]
+    h0 = jnp.zeros(batch + (plan.n_h,), xs.dtype)
+    c0 = jnp.zeros(batch + (plan.rows, plan.tile), xs.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, _, c = systolic_cell_tiled(packed, x_t, h, c)
+        return (h, c), h
+
+    _, hs = jax.lax.scan(step, (h0, c0), xs)
+    return hs
+
+
+# ---------------------------------------------------------------------------
+# Bit-accurate quantized execution (contribution C2)
+# ---------------------------------------------------------------------------
+
+# Fixed-point layout (see quant.py): weights/states Q2.5 (int8), gates Q0.7 (int8),
+# accumulator Q5.10 (int16, saturating at every inter-engine hop).
+ACC_FMT = quant.QFormat(int_bits=5, frac_bits=10)
+CELL_FMT = quant.QFormat(int_bits=3, frac_bits=12)  # f*c / i*g alignment format
+
+
+class QuantizedPackedLSTM(NamedTuple):
+    tiles_q: jax.Array  # int8 (R, C, 4, t, t)
+    peep_q: jax.Array   # int8 (R, 3, t)
+    bias_q: jax.Array   # int16 (R, 4, t)  in ACC_FMT
+    sig_lut: jax.Array  # int8 (256,)
+    tanh_lut: jax.Array  # int8 (256,)
+    plan_shape: Tuple[int, int, int, int]
+
+    @property
+    def plan(self) -> SystolicPlan:
+        n_x, n_h, tile, _ = self.plan_shape
+        return SystolicPlan(n_x, n_h, tile)
+
+
+def quantize_packed(packed: PackedLSTM) -> QuantizedPackedLSTM:
+    wf, sf = quant.WEIGHT_FMT, quant.STATE_FMT
+    bias_codes = jnp.clip(
+        jnp.round(packed.bias / ACC_FMT.scale),
+        -(2 ** 15), 2 ** 15 - 1).astype(jnp.int16)
+    sig, tanh = quant.default_luts(sf)
+    return QuantizedPackedLSTM(
+        tiles_q=quant.quantize(packed.tiles, wf),
+        peep_q=quant.quantize(packed.peep, wf),
+        bias_q=bias_codes,
+        sig_lut=sig, tanh_lut=tanh,
+        plan_shape=packed.plan_shape,
+    )
+
+
+def _sat16(x):
+    return quant.saturate_int16(x)
+
+
+def _rshift_round(x, shift):
+    return (x + (1 << (shift - 1))) >> shift if shift > 0 else x
+
+
+def systolic_cell_quantized(qp: QuantizedPackedLSTM, x_q: jax.Array,
+                            h_q: jax.Array, c_q_blocks: jax.Array
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """One timestep in integer arithmetic, per the silicon datapath.
+
+    x_q: (..., n_x) int8 codes (Q2.5); h_q: (..., n_h) int8; c_q_blocks: (..., R, t)
+    int8.  Returns (h_q_new, c_q_blocks_new).  All intermediate semantics follow
+    the 16-bit saturating accumulator of the chip.
+    """
+    plan = qp.plan
+    xh_q = pack_xh(x_q, h_q, plan)  # (..., C, t) int8
+
+    # Per-engine tile MAC in wide arithmetic (int32), then saturate to 16 bit —
+    # the value an engine hands to its row neighbour.
+    partials = jnp.einsum('rcgij,...cj->...rcgi', qp.tiles_q.astype(jnp.int32),
+                          xh_q.astype(jnp.int32))
+    partials = _sat16(partials)
+
+    # Sequential saturating row accumulation (hop order matters for saturation).
+    def hop(acc, p_c):
+        return _sat16(acc + p_c), None
+
+    partials_c_first = jnp.moveaxis(partials, -3, 0)  # (C, ..., R, 4, t)
+    acc0 = jnp.zeros(partials_c_first.shape[1:], jnp.int32)
+    pre_acc, _ = jax.lax.scan(hop, acc0, partials_c_first)  # (..., R, 4, t) Q5.10
+
+    c_prev32 = c_q_blocks.astype(jnp.int32)
+    peep32 = qp.peep_q.astype(jnp.int32)
+    bias32 = qp.bias_q.astype(jnp.int32)
+
+    def gate(idx, peep_idx, c_term, lut):
+        a = pre_acc[..., idx, :] + bias32[:, idx]
+        if peep_idx is not None:
+            a = a + peep32[:, peep_idx] * c_term  # Q2.5 * Q2.5 -> Q*.10, aligned
+        a = _sat16(a)
+        a8 = _rshift_round(a, ACC_FMT.frac_bits - quant.STATE_FMT.frac_bits)
+        a8 = jnp.clip(a8, -128, 127)
+        return quant.apply_lut(lut, a8, quant.STATE_FMT).astype(jnp.int32)  # Q0.7
+
+    i = gate(I, PEEP_I, c_prev32, qp.sig_lut)
+    f = gate(F, PEEP_F, c_prev32, qp.sig_lut)
+    g = gate(G, None, None, qp.tanh_lut)
+
+    # c_t = f.c + i.g : align Q0.7*Q2.5 (frac 12) with Q0.7*Q0.7 (frac 14) >> 2.
+    fc = f * c_prev32                       # frac 12
+    ig = _rshift_round(i * g, 2)            # frac 14 -> 12
+    c_new = _sat16(fc + ig)                 # Q3.12
+    c_new8 = jnp.clip(_rshift_round(c_new, CELL_FMT.frac_bits -
+                                    quant.STATE_FMT.frac_bits), -128, 127)
+
+    o = gate(O, PEEP_O, c_new8, qp.sig_lut)
+    tanh_c = quant.apply_lut(qp.tanh_lut, c_new8, quant.STATE_FMT).astype(jnp.int32)
+    h_new = _rshift_round(o * tanh_c, 14 - quant.STATE_FMT.frac_bits)  # Q0.14 -> Q2.5
+    h_blocks8 = jnp.clip(h_new, -128, 127).astype(jnp.int8)
+
+    h_full = unpack_h(h_blocks8, plan)
+    return h_full, c_new8.astype(jnp.int8)
+
+
+def systolic_layer_quantized(qp: QuantizedPackedLSTM, xs_q: jax.Array) -> jax.Array:
+    """Scan the integer cell over time.  xs_q: (T, ..., n_x) int8 -> int8 hidden."""
+    plan = qp.plan
+    batch = xs_q.shape[1:-1]
+    h0 = jnp.zeros(batch + (plan.n_h,), jnp.int8)
+    c0 = jnp.zeros(batch + (plan.rows, plan.tile), jnp.int8)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = systolic_cell_quantized(qp, x_t, h, c)
+        return (h, c), h
+
+    _, hs = jax.lax.scan(step, (h0, c0), xs_q)
+    return hs
+
+
+# ---------------------------------------------------------------------------
+# Distributed execution: shard_map over an explicit ("row","col") mesh
+# ---------------------------------------------------------------------------
+
+def make_systolic_mesh(rows: int, cols: int, stage: int = 1,
+                       devices=None) -> Mesh:
+    """Build a (stage, row, col) mesh from the first stage*rows*cols devices.
+
+    This is how the paper's own geometries (5x5, 3x(5x5)) are laid onto a pod:
+    a rectangular sub-grid of the available chips.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    need = stage * rows * cols
+    if len(devices) < need:
+        raise ValueError(f'need {need} devices, have {len(devices)}')
+    arr = np.array(devices[:need]).reshape(stage, rows, cols)
+    return Mesh(arr, ('stage', 'row', 'col'),
+                axis_types=(AxisType.Auto,) * 3)
+
+
+def shard_packed_lstm(packed: PackedLSTM, mesh: Mesh) -> PackedLSTM:
+    """Place weight tiles so engine (r, c) owns tile (r, c) — weight-stationary."""
+    from jax.sharding import NamedSharding
+    tiles = jax.device_put(packed.tiles, NamedSharding(mesh, P('row', 'col')))
+    peep = jax.device_put(packed.peep, NamedSharding(mesh, P('row')))
+    bias = jax.device_put(packed.bias, NamedSharding(mesh, P('row')))
+    return PackedLSTM(tiles, peep, bias, packed.plan_shape)
+
+
+def systolic_lstm_shard_map(packed: PackedLSTM, mesh: Mesh, xs: jax.Array,
+                            row_axis: str = 'row', col_axis: str = 'col'):
+    """Distributed scan of one LSTM layer with the paper's communication pattern.
+
+    xs: (T, B, padded_in) — the x-region columns carry data, h-region columns are
+    zero (they are overwritten by the vertical h re-broadcast each step).
+    Requires plan.rows == mesh row size and plan.cols == mesh col size.
+    """
+    plan = packed.plan
+    t = plan.tile
+    T, B = xs.shape[0], xs.shape[1]
+    assert xs.shape[2] == plan.padded_in
+    assert mesh.shape[row_axis] == plan.rows and mesh.shape[col_axis] == plan.cols
+
+    def local_step(w_tile, peep_r, bias_r, xh_col, h_full, c_row):
+        """SPMD body on engine (r, c).
+
+        w_tile: (4, t, t); peep_r: (3, t); bias_r: (4, t); xh_col: (B, t);
+        h_full: (B, padded_h) — replicated; c_row: (B, t).
+        """
+        c_idx = jax.lax.axis_index(col_axis)
+        # h-region columns take their slice of the re-broadcast hidden state.
+        h_off = jnp.maximum(c_idx - plan.cols_x, 0) * t
+        h_slice = jax.lax.dynamic_slice(h_full, (0, h_off), (B, t))
+        col_in = jnp.where(c_idx < plan.cols_x, xh_col, h_slice)
+
+        partial = jnp.einsum('gij,bj->bgi', w_tile, col_in)       # column loop
+        pre = jax.lax.psum(partial, col_axis)                      # row hops
+        i = jax.nn.sigmoid(pre[:, I] + peep_r[PEEP_I] * c_row + bias_r[I])
+        f = jax.nn.sigmoid(pre[:, F] + peep_r[PEEP_F] * c_row + bias_r[F])
+        g = jnp.tanh(pre[:, G] + bias_r[G])
+        c_new = f * c_row + i * g
+        o = jax.nn.sigmoid(pre[:, O] + peep_r[PEEP_O] * c_new + bias_r[O])
+        h_new = o * jnp.tanh(c_new)
+        # Vertical re-broadcast of the updated hidden state (paper Fig. 3c).
+        h_full_new = jax.lax.all_gather(h_new, row_axis, axis=1, tiled=True)
+        return h_full_new, c_new
+
+    def sharded_scan(tiles, peep, bias, xs_sharded):
+        w_tile = tiles[0, 0]          # local block after sharding
+        peep_r, bias_r = peep[0], bias[0]
+        h0 = jnp.zeros((B, plan.padded_h), xs.dtype)
+        c0 = jnp.zeros((B, t), xs.dtype)
+
+        def step(carry, x_t):
+            h_full, c_row = carry
+            h_full, c_row = local_step(w_tile, peep_r, bias_r, x_t, h_full, c_row)
+            return (h_full, c_row), h_full
+
+        (_, _), hs = jax.lax.scan(step, (h0, c0), xs_sharded)
+        return hs
+
+    other_axes = tuple(n for n in mesh.axis_names if n not in (row_axis, col_axis))
+    if any(mesh.shape[a] > 1 for a in other_axes):
+        raise ValueError('use systolic_pipeline for meshes with a stage axis')
+    fn = shard_map(
+        sharded_scan, mesh=mesh,
+        in_specs=(P(row_axis, col_axis), P(row_axis), P(row_axis),
+                  P(None, None, col_axis)),
+        out_specs=P(),
+        check_vma=False,
+    )
+    hs = fn(packed.tiles, packed.peep, packed.bias, xs)
+    return hs[..., :plan.n_h]

@@ -1,0 +1,1 @@
+from .pipeline import ShardedLoader, SyntheticCTC, SyntheticLM, TokenFile, source_for

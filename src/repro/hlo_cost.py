@@ -1,0 +1,355 @@
+"""Trip-count-weighted cost analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so any scanned
+program (layers, microbatches, KV chunks, LSTM time steps) under-reports
+FLOPs, HBM bytes and — critically — collective traffic by the trip count.
+This module re-derives the three roofline inputs by walking the HLO call
+graph and multiplying loop bodies by their ``known_trip_count``:
+
+  * flops — exact for dot (2 * prod(result) * prod(contracting)), 1/element
+    for float elementwise ops (XLA's own convention);
+  * bytes — per *top-level* op: operands + result (fusion internals excluded,
+    matching post-fusion HBM traffic semantics; perfect reuse inside fusions);
+  * collective operand bytes per kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute).
+
+Validated against cost_analysis() on unrolled programs (tests/test_roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    'pred': 1, 's8': 1, 'u8': 1, 'f8e4m3fn': 1, 'f8e5m2': 1,
+    's16': 2, 'u16': 2, 'bf16': 2, 'f16': 2,
+    's32': 4, 'u32': 4, 'f32': 4,
+    's64': 8, 'u64': 8, 'f64': 8, 'c64': 8, 'c128': 16,
+}
+
+COLLECTIVES = ('all-gather', 'all-reduce', 'reduce-scatter', 'all-to-all',
+               'collective-permute', 'ragged-all-to-all')
+
+# float ops that cost ~1 flop per output element
+_ELEMENTWISE = {
+    'add', 'subtract', 'multiply', 'divide', 'maximum', 'minimum', 'abs',
+    'negate', 'exponential', 'log', 'tanh', 'logistic', 'rsqrt', 'sqrt',
+    'power', 'cosine', 'sine', 'floor', 'ceil', 'round-nearest-afz',
+    'select', 'compare', 'and', 'or', 'not', 'xor', 'clamp',
+}
+
+_SHAPE_RE = re.compile(r'([a-z][a-z0-9]*)\[([0-9,]*)\]')
+_INSTR_RE = re.compile(r'^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+'
+                       r'([\w\-]+)\((.*)$')
+_COMP_RE = re.compile(r'^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$')
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r'%([\w.\-]+)')
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(','):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(',') if d]
+
+
+def _elem_count(type_str: str) -> int:
+    dims = _first_shape_dims(type_str)
+    if dims is None:
+        return 0
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str        # text after the opening paren (operands + attrs)
+    root: bool = False
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: 'CompCost', mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+
+def parse_computations(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and ' -> ' in line:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == '}':
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(Instr(m.group(2), m.group(3), m.group(4),
+                                    m.group(5), root=bool(m.group(1))))
+    return comps
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_computations(text)
+        # symbol table: instruction name -> result type (per computation,
+        # names are globally unique in optimized HLO so one table suffices)
+        self.types: Dict[str, str] = {}
+        for instrs in self.comps.values():
+            for ins in instrs:
+                self.types[ins.name] = ins.type_str
+        self._memo: Dict[str, CompCost] = {}
+        self._param_access_memo: Dict[str, Dict[int, int]] = {}
+        self.entry = self._find_entry(text)
+
+    def _find_entry(self, text: str) -> str:
+        for line in text.splitlines():
+            if line.startswith('ENTRY'):
+                m = _COMP_RE.match(line.strip())
+                if m:
+                    return m.group(1)
+        return next(iter(self.comps))
+
+    # ------------------------------------------------------------- per-op
+    def _dot_flops(self, ins: Instr) -> float:
+        out_elems = _elem_count(ins.type_str)
+        ops = _OPERAND_RE.findall(ins.rest)
+        lhs_dims = _first_shape_dims(self.types.get(ops[0], '')) if ops else None
+        m = re.search(r'lhs_contracting_dims=\{([0-9,]*)\}', ins.rest)
+        contracted = 1
+        if lhs_dims and m:
+            for d in m.group(1).split(','):
+                if d:
+                    contracted *= lhs_dims[int(d)]
+        return 2.0 * out_elems * contracted
+
+    def _operand_bytes(self, ins: Instr) -> int:
+        # operands named before any attribute; look up their result types
+        args = ins.rest.split(')')[0]
+        total = 0
+        for name in _OPERAND_RE.findall(args):
+            total += _type_bytes(self.types.get(name, ''))
+        return total
+
+    def _operands(self, ins: Instr):
+        return _OPERAND_RE.findall(ins.rest.split(')')[0])
+
+    def root_op(self, comp: str) -> str:
+        for ins in self.comps.get(comp, []):
+            if ins.root:
+                return ins.op
+        return ''
+
+    def _fusion_param_access(self, callee: str) -> Dict[int, int]:
+        """param idx -> effective bytes, for params accessed via internal
+        dynamic-slice / dynamic-update-slice (loop-invariant big buffers are
+        only touched one slice per fusion execution)."""
+        if callee in self._param_access_memo:
+            return self._param_access_memo[callee]
+        param_of: Dict[str, int] = {}
+        out: Dict[int, int] = {}
+        for ins in self.comps.get(callee, []):
+            if ins.op == 'parameter':
+                try:
+                    param_of[ins.name] = int(ins.rest.split(')')[0])
+                except ValueError:
+                    pass
+        for ins in self.comps.get(callee, []):
+            ops = self._operands(ins)
+            if ins.op == 'dynamic-slice' and ops and ops[0] in param_of:
+                idx = param_of[ops[0]]
+                out[idx] = min(out.get(idx, 1 << 62),
+                               _type_bytes(ins.type_str))
+            if ins.op == 'dynamic-update-slice' and ops and ops[0] in param_of:
+                idx = param_of[ops[0]]
+                upd = (_type_bytes(self.types.get(ops[1], ''))
+                       if len(ops) > 1 else 0)
+                out[idx] = min(out.get(idx, 1 << 62), upd)
+        self._param_access_memo[callee] = out
+        return out
+
+    def _io_bytes(self, ins: Instr) -> int:
+        """HBM bytes for one op execution, honouring in-place semantics:
+        dynamic-update-slice writes only the update region (XLA aliases the
+        buffer), dynamic-slice/gather read only the slice, and fusion params
+        accessed via internal dynamic slicing count at slice granularity."""
+        op = ins.op
+        opnds = self._operands(ins)
+        opnd_bytes = [_type_bytes(self.types.get(n, '')) for n in opnds]
+        result = _type_bytes(ins.type_str)
+        if op in ('fusion', 'call'):
+            callee = re.search(r'calls=%?([\w.\-]+)', ins.rest)
+            access = (self._fusion_param_access(callee.group(1))
+                      if callee else {})
+            root = self.root_op(callee.group(1)) if callee else ''
+            total = 0
+            for i, b in enumerate(opnd_bytes):
+                total += min(access.get(i, b), b)
+            if root == 'dynamic-update-slice':
+                # written region = update size; aliased buffer not re-written
+                upd = min([b for i, b in enumerate(opnd_bytes)
+                           if access.get(i, b) == b] or [result])
+                total += min(upd, result)
+            else:
+                total += result
+            return total
+        if op == 'dynamic-update-slice':
+            upd = opnd_bytes[1] if len(opnd_bytes) > 1 else 0
+            return 2 * upd + sum(opnd_bytes[2:])
+        if op in ('dynamic-slice', 'gather'):
+            return sum(opnd_bytes[1:]) + 2 * result
+        return sum(opnd_bytes) + result
+
+    def comp_cost(self, comp: str) -> CompCost:
+        if comp in self._memo:
+            return self._memo[comp]
+        cost = CompCost()
+        self._memo[comp] = cost  # break cycles defensively
+        for ins in self.comps.get(comp, []):
+            op = ins.op
+            if op in ('parameter', 'constant', 'get-tuple-element', 'tuple',
+                      'bitcast', 'after-all', 'iota', 'copy', 'copy-start',
+                      'copy-done'):
+                continue
+            if op == 'while':
+                body = re.search(r'body=%([\w.\-]+)', ins.rest)
+                cond = re.search(r'condition=%([\w.\-]+)', ins.rest)
+                trip = _TRIP_RE.search(ins.rest)
+                n = int(trip.group(1)) if trip else 1
+                if body:
+                    cost.add(self.comp_cost(body.group(1)), n)
+                if cond:
+                    cost.add(self.comp_cost(cond.group(1)), n)
+                continue
+            if op in ('fusion', 'call', 'async-start'):
+                callee = re.search(r'calls=%?([\w.\-]+)', ins.rest) or \
+                    re.search(r'to_apply=%?([\w.\-]+)', ins.rest)
+                if callee:
+                    inner = self.comp_cost(callee.group(1))
+                    cost.flops += inner.flops
+                    for k, v in inner.coll.items():
+                        cost.coll[k] = cost.coll.get(k, 0) + v
+                # bytes: fusion boundary, in-place/slice-access aware
+                cost.bytes += self._io_bytes(ins)
+                continue
+            if op == 'conditional':
+                for br in re.findall(r'(?:true_computation|false_computation|'
+                                     r'branch_computations)=\{?%?([\w.\-]+)',
+                                     ins.rest):
+                    cost.add(self.comp_cost(br))
+                continue
+
+            kind = None
+            for c in COLLECTIVES:
+                if op == c or op == c + '-start':
+                    kind = c
+                    break
+            if kind:
+                b = self._operand_bytes(ins)
+                cost.coll[kind] = cost.coll.get(kind, 0.0) + b
+                cost.bytes += b + _type_bytes(ins.type_str)
+                continue
+            if op.endswith('-done'):
+                continue
+
+            if op == 'dot':
+                cost.flops += self._dot_flops(ins)
+            elif op == 'convolution':
+                # approx: 2 * out_elems * (kernel elems / out_channels)
+                ops = _OPERAND_RE.findall(ins.rest)
+                k_elems = (_elem_count(self.types.get(ops[1], ''))
+                           if len(ops) > 1 else 1)
+                out_dims = _first_shape_dims(ins.type_str) or [1]
+                cost.flops += 2.0 * _elem_count(ins.type_str) \
+                    * max(k_elems // max(out_dims[-1], 1), 1)
+            elif op in _ELEMENTWISE:
+                cost.flops += _elem_count(ins.type_str)
+            elif op in ('reduce', 'reduce-window'):
+                ops = _OPERAND_RE.findall(ins.rest.split(')')[0])
+                cost.flops += (_elem_count(self.types.get(ops[0], ''))
+                               if ops else 0)
+            # memory: in-place/slice-aware operand + result traffic
+            cost.bytes += self._io_bytes(ins)
+        return cost
+
+    def entry_cost(self) -> CompCost:
+        return self.comp_cost(self.entry)
+
+
+def top_contributors(text: str, k: int = 12):
+    """(collectives, memory_ops) — trip-count-weighted per-op-site totals.
+
+    The profiling view for the §Perf hillclimb: each entry is
+    (bytes_per_chip, op, metadata op_name tail).
+    """
+    import collections
+    m = HloCostModel(text)
+    coll: collections.Counter = collections.Counter()
+    mem: collections.Counter = collections.Counter()
+    flops: collections.Counter = collections.Counter()
+
+    def walk(comp_name, mult):
+        for ins in m.comps.get(comp_name, []):
+            op = ins.op
+            if op == 'while':
+                body = re.search(r'body=%([\w.\-]+)', ins.rest)
+                trip = _TRIP_RE.search(ins.rest)
+                n = int(trip.group(1)) if trip else 1
+                if body:
+                    walk(body.group(1), mult * n)
+                continue
+            if op in ('parameter', 'constant', 'get-tuple-element', 'tuple',
+                      'bitcast', 'after-all', 'iota'):
+                continue
+            meta = re.search(r'op_name="([^"]+)"', ins.rest)
+            tag = (meta.group(1)[-70:] if meta else ins.name)
+            kind = None
+            for c in COLLECTIVES:
+                if op == c or op == c + '-start':
+                    kind = c
+                    break
+            if kind:
+                coll[(kind, tag)] += m._operand_bytes(ins) * mult
+            else:
+                mem[(op, tag)] += m._io_bytes(ins) * mult
+                if op == 'dot':
+                    flops[(op, tag)] += m._dot_flops(ins) * mult
+                elif op in ('fusion', 'call'):
+                    callee = re.search(r'calls=%?([\w.\-]+)', ins.rest)
+                    if callee:
+                        flops[(op, tag)] += m.comp_cost(
+                            callee.group(1)).flops * mult
+
+    walk(m.entry, 1)
+    return coll.most_common(k), mem.most_common(k), flops.most_common(k)

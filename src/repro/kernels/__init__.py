@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each kernel lives in its own subpackage with:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, calibration, layer helpers)
+  ref.py    — pure-jnp oracle used by the test sweeps
+
+Kernels are validated on CPU with interpret=True; the production dry-run uses
+the pure-JAX equivalents (``use_pallas=False``) since the CPU backend cannot
+lower Mosaic kernels.
+"""
+from . import flash_attention, lstm_gates, quant_matmul
+
+__all__ = ['flash_attention', 'lstm_gates', 'quant_matmul']

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: blockwise online-softmax attention (flash-style).
+
+Needed by the LM-family architectures' long-context shapes (prefill_32k): naive
+attention materialises an Sq x Sk score matrix per head (32k x 32k x 4 B = 4 GB),
+which cannot live in HBM, let alone VMEM.  Blocking: (bq x D) query tiles stay
+resident; K/V stream through VMEM in (bk x D) tiles with running max/denominator
+rescaling (Milakov-Gimelshein online softmax), so the working set is
+O(bq*D + bk*D + bq*bk) regardless of sequence length.
+
+Supports causal masking, sliding windows (Mixtral/Hymba) and GQA (all assigned
+archs) via index-mapped KV heads.  Grid: (B*H, Sq/bq, Sk/bk), KV innermost.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            n_k: int, bq: int, bk: int, offset: int, scale: float,
+            causal: bool, window: Optional[int], kv_len: Optional[int]):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _zero():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # Positional mask.  Query block rows map to absolute positions with the
+    # causal offset sk - sq (decode: one new row attends the whole cache).
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offset
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]                                # (bq,)
+    l_prev = l_ref[:, 0]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    'causal', 'window', 'sm_scale', 'kv_len', 'offset', 'bq', 'bk', 'interpret'))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    sm_scale: Optional[float] = None,
+                    kv_len: Optional[int] = None, offset: Optional[int] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D).  Sq % bq == Sk % bk == 0.
+
+    ``offset``: absolute position of query row 0 minus key row 0 (causal
+    alignment); defaults to sk - sq so the last query sees every key.
+    """
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert h % hkv == 0 and sq % bq == 0 and sk % bk == 0
+    group = h // hkv
+    scale = (d ** -0.5) if sm_scale is None else sm_scale
+    if offset is None:
+        offset = sk - sq if causal else 0
+
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * hkv, sk, d)
+    vf = v.reshape(b * hkv, sk, d)
+
+    def kv_index(bh, iq, ik):
+        return ((bh // h) * hkv + (bh % h) // group, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=sk // bk, bq=bq, bk=bk, offset=offset,
+                          scale=scale, causal=causal, window=window,
+                          kv_len=kv_len),
+        grid=(b * h, sq // bq, sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle: naive attention with causal / sliding-window / GQA masking."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  sm_scale: Optional[float] = None,
+                  kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D); GQA via H % Hkv == 0.
+
+    ``window``: sliding-window width w — query t attends keys (t-w, t].
+    ``kv_len``: optional valid key length (decode with a padded cache).
+    """
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = h // hkv
+    scale = (d ** -0.5) if sm_scale is None else sm_scale
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum('bhqd,bhkd->bhqk', q, kr) * scale
+
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq if causal else 0)
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # Rows with no valid key (can happen under kv_len=0) produce uniform p; zero them.
+    any_valid = mask.any(axis=-1, keepdims=True)
+    p = jnp.where(any_valid, p, 0.0)
+    return jnp.einsum('bhqk,bhkd->bhqd', p, vr)

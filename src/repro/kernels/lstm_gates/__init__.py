@@ -1,0 +1,5 @@
+from .kernel import lstm_gates
+from .ops import lstm_cell_fused, lstm_layer_fused
+from .ref import lstm_gates_ref
+
+__all__ = ['lstm_gates', 'lstm_cell_fused', 'lstm_layer_fused', 'lstm_gates_ref']

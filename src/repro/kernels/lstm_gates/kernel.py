@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: fused LSTM cell — 4 gate matmuls + nonlinearities + state update.
+
+This is Chipmunk's engine datapath (C1) re-blocked for the TPU memory hierarchy:
+instead of the silicon's 96 row-units x 1-element column loop, we tile the packed
+gate matrix W (4, N_h, N_in) into (4, bn, bk) VMEM blocks and drive the 128x128 MXU
+with one (B, bk) x (bk, bn) dot per gate per grid step.  The element-wise phase
+(peepholes, LUT-equivalent nonlinearities, cell/hidden update) fuses into the final
+K step, so pre-activations never round-trip to HBM — the VMEM-resident analogue of
+the chip's local o/f/i/c registers.
+
+Grid: (N_h/bn, N_in/bk) with the reduction axis innermost; the (B, 4, bn) f32
+accumulator lives in VMEM scratch and is revisited across K steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xh_ref, w_ref, peep_ref, bias_ref, c_ref, h_out_ref, c_out_ref,
+            acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xh = xh_ref[...]                       # (B, bk)
+    for g in range(4):                     # the four gate rows share the xh stream
+        acc_ref[:, g, :] += jax.lax.dot_general(
+            xh, w_ref[g], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == n_k - 1)
+    def _elementwise():
+        pre = acc_ref[...]                 # (B, 4, bn)
+        peep = peep_ref[...].astype(jnp.float32)   # (3, bn)
+        bias = bias_ref[...].astype(jnp.float32)   # (4, bn)
+        c_prev = c_ref[...].astype(jnp.float32)    # (B, bn)
+        i = jax.nn.sigmoid(pre[:, 0] + peep[0] * c_prev + bias[0])
+        f = jax.nn.sigmoid(pre[:, 1] + peep[1] * c_prev + bias[1])
+        g = jnp.tanh(pre[:, 2] + bias[2])
+        c_new = f * c_prev + i * g
+        o = jax.nn.sigmoid(pre[:, 3] + peep[2] * c_new + bias[3])
+        h_out_ref[...] = (o * jnp.tanh(c_new)).astype(h_out_ref.dtype)
+        c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=('bn', 'bk', 'interpret'))
+def lstm_gates(xh: jax.Array, w: jax.Array, peep: jax.Array, bias: jax.Array,
+               c_prev: jax.Array, *, bn: int = 128, bk: int = 128,
+               interpret: bool = False):
+    """Fused LSTM cell.  xh: (B, N_in); w: (4, N_h, N_in); peep: (3, N_h);
+    bias: (4, N_h); c_prev: (B, N_h).  Dims must be multiples of (bn, bk)."""
+    b, n_in = xh.shape
+    _, n_h, _ = w.shape
+    assert n_h % bn == 0 and n_in % bk == 0, (n_h, n_in, bn, bk)
+    n_k = n_in // bk
+
+    h, c = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(n_h // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((b, bk), lambda j, kk: (0, kk)),
+            pl.BlockSpec((4, bn, bk), lambda j, kk: (0, j, kk)),
+            pl.BlockSpec((3, bn), lambda j, kk: (0, j)),
+            pl.BlockSpec((4, bn), lambda j, kk: (0, j)),
+            pl.BlockSpec((b, bn), lambda j, kk: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, bn), lambda j, kk: (0, j)),
+            pl.BlockSpec((b, bn), lambda j, kk: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_h), xh.dtype),
+            jax.ShapeDtypeStruct((b, n_h), xh.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((b, 4, bn), jnp.float32)],
+        interpret=interpret,
+    )(xh, w, peep, bias, c_prev)
+    return h, c

@@ -1,0 +1,59 @@
+"""Public op: fused LSTM cell / layer with padding; drop-in for core.lstm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.lstm import LSTMParams
+from .kernel import lstm_gates
+from .ref import lstm_gates_ref
+
+
+def _pad_axis(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def lstm_cell_fused(params: LSTMParams, x_t: jax.Array, h_prev: jax.Array,
+                    c_prev: jax.Array, *, bn: int = 128, bk: int = 128,
+                    use_pallas: bool = True, interpret: bool = True):
+    """Same contract as core.lstm.lstm_cell, via the fused kernel."""
+    n_h, n_x = params.n_h, params.n_x
+    w = jnp.concatenate([params.w_x, params.w_h], axis=-1)  # (4, N_h, N_in)
+    xh = jnp.concatenate([x_t, h_prev], axis=-1)
+    if not use_pallas:
+        h, c = lstm_gates_ref(xh, w, params.w_peep, params.b, c_prev)
+        return h, c
+    b = xh.shape[0]
+    b_pad = max(8, b + (-b) % 8)
+    xh_p = _pad_axis(_pad_axis(xh, bk, 1), b_pad, 0)[:b_pad]
+    w_p = _pad_axis(_pad_axis(w, bn, 1), bk, 2)
+    peep_p = _pad_axis(params.w_peep, bn, 1)
+    bias_p = _pad_axis(params.b, bn, 1)
+    c_p = _pad_axis(_pad_axis(c_prev, bn, 1), b_pad, 0)[:b_pad]
+    h, c = lstm_gates(xh_p, w_p, peep_p, bias_p, c_p, bn=bn, bk=bk,
+                      interpret=interpret)
+    return h[:b, :n_h], c[:b, :n_h]
+
+
+def lstm_layer_fused(params: LSTMParams, xs: jax.Array, *, bn: int = 128,
+                     bk: int = 128, use_pallas: bool = True,
+                     interpret: bool = True):
+    """Scan the fused cell over time.  xs: (T, B, N_x)."""
+    n_h = params.n_h
+    B = xs.shape[1]
+    h0 = jnp.zeros((B, n_h), xs.dtype)
+    c0 = jnp.zeros((B, n_h), xs.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell_fused(params, x_t, h, c, bn=bn, bk=bk,
+                               use_pallas=use_pallas, interpret=interpret)
+        return (h, c), h
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), xs)
+    return hs

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused LSTM gate kernel (Eqs. 1-5, packed weights)."""
+import jax
+import jax.numpy as jnp
+
+
+def lstm_gates_ref(xh: jax.Array, w: jax.Array, peep: jax.Array, bias: jax.Array,
+                   c_prev: jax.Array):
+    """xh: (B, N_in); w: (4, N_h, N_in); peep: (3, N_h); bias: (4, N_h);
+    c_prev: (B, N_h).  Returns (h, c) each (B, N_h).  Gate order i,f,g,o."""
+    pre = jnp.einsum('ghk,bk->bgh', w, xh)
+    i = jax.nn.sigmoid(pre[:, 0] + peep[0] * c_prev + bias[0])
+    f = jax.nn.sigmoid(pre[:, 1] + peep[1] * c_prev + bias[1])
+    g = jnp.tanh(pre[:, 2] + bias[2])
+    c = f * c_prev + i * g
+    o = jax.nn.sigmoid(pre[:, 3] + peep[2] * c + bias[3])
+    h = o * jnp.tanh(c)
+    return h, c

@@ -1,0 +1,5 @@
+from .kernel import quant_matmul
+from .ops import quantized_linear, quantize_weights
+from .ref import quant_matmul_ref
+
+__all__ = ['quant_matmul', 'quantized_linear', 'quantize_weights', 'quant_matmul_ref']

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: int8 x int8 -> int32 matmul with per-channel dequant epilogue.
+
+This is Chipmunk's C2 arithmetic (8-bit storage, wide accumulation) mapped onto the
+TPU MXU, which natively executes int8 x int8 -> int32 at 2x bf16 throughput on v5e.
+Blocking: (bm x bk) @ (bk x bn) MXU tiles, K innermost in the grid so the int32
+accumulator lives in a VMEM scratch and is revisited across K steps; the dequant
+epilogue (per-row activation scale x per-column weight scale) runs on the final
+K step only.
+
+VMEM working set per step: bm*bk + bk*bn bytes (int8) + bm*bn*4 (acc) —
+128x512x512 blocks => 64 kB + 256 kB + 256 kB, comfortably inside ~16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU int8 path: ask for an int32 accumulator explicitly.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        scaled = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ws_ref[...]
+        o_ref[...] = scaled.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=('bm', 'bn', 'bk', 'out_dtype',
+                                             'interpret'))
+def quant_matmul(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+                 w_scale: jax.Array, *, bm: int = 128, bn: int = 128,
+                 bk: int = 128, out_dtype=jnp.float32,
+                 interpret: bool = False) -> jax.Array:
+    """x_q: (M, K) int8; w_q: (K, N) int8; x_scale: (M, 1) f32; w_scale: (1, N) f32."""
+    m, k = x_q.shape
+    _, n = w_q.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    x_scale = jnp.broadcast_to(jnp.asarray(x_scale, jnp.float32), (m, 1))
+    w_scale = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (1, n))
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, x_scale, w_scale)

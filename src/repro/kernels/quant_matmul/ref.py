@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the int8 x int8 -> int32 matmul with per-channel scales."""
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+                     w_scale: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """x_q: (M, K) int8; w_q: (K, N) int8; x_scale: scalar or (M, 1);
+    w_scale: scalar or (1, N).  Returns (M, N) in out_dtype."""
+    acc = jax.lax.dot_general(
+        x_q, w_q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * (x_scale * w_scale)).astype(out_dtype)

@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape) cell this lowers + compiles the real
+step function (train_step / forward / decode_step) against the production mesh
+with full sharding, prints memory_analysis() (proves it fits) and
+cost_analysis() (FLOPs/bytes for the roofline), parses the collective traffic
+out of the optimized HLO, and writes one JSON per cell to results/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]   # every runnable cell
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding as shd
+from ..configs import (ARCH_MODULES, SHAPES, get_config, long_context_supported,
+                       shapes_for)
+from ..models import batch_axes, get_bundle, input_specs
+from ..roofline import analyze
+from .mesh import make_production_mesh, resolve_rules
+from .train import (abstract_init, abstract_train_state, batch_shardings,
+                    make_train_step)
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / 'results' / 'dryrun'
+
+# Archs whose weights cannot fit TP-only at serve time (see DESIGN.md §5).
+BIG_SERVE = {'kimi-k2-1t-a32b', 'llama-3.2-vision-90b', 'mixtral-8x22b'}
+
+# Gradient-accumulation microbatches per (arch, train) — memory fit lever.
+TRAIN_MICROBATCHES = {
+    'kimi-k2-1t-a32b': 8, 'mixtral-8x22b': 8, 'llama-3.2-vision-90b': 8,
+    'qwen3-14b': 4, 'qwen2.5-14b': 4, 'codeqwen1.5-7b': 4, 'minicpm-2b': 4,
+    'hymba-1.5b': 8, 'xlstm-1.3b': 1, 'whisper-base': 1, 'chipmunk-ctc': 1,
+}
+
+
+def serve_rules_for(arch: str):
+    return shd.SERVE_BIG_RULES if arch in BIG_SERVE else shd.SERVE_RULES
+
+
+def model_flops_per_chip(bundle, params_sds, shape, n_chips: int) -> float:
+    """MODEL_FLOPS = 6*N(_active)*D train / 2*N*D inference, per chip."""
+    n_active = bundle.active_param_count(params_sds)
+    if shape.kind == 'train':
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_chips
+    if shape.kind == 'prefill':
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_chips
+    tokens = shape.global_batch          # one token per sequence per step
+    return 2.0 * n_active * tokens / n_chips
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               override_rules=None, save_hlo: bool = False):
+    """Lower + compile one cell; returns the result record."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    bundle = get_bundle(cfg)
+    t0 = time.time()
+
+    tp = 16
+    if shape.kind == 'train':
+        rules_dict = override_rules or shd.rules_for_arch(
+            shd.TRAIN_RULES, cfg.n_kv_heads, tp, cfg.family)
+        rules = shd.ShardingRules(mesh, resolve_rules(rules_dict, mesh))
+        with shd.use_rules(rules):
+            state_sds, state_sh, optimizer = abstract_train_state(
+                bundle, mesh, rules_dict)
+            step_fn = make_train_step(
+                bundle, optimizer,
+                microbatches=TRAIN_MICROBATCHES.get(arch, 1))
+            batch_sds = input_specs(cfg, shape)
+            batch_sh = batch_shardings(cfg, shape, mesh, rules_dict)
+            lowered = jax.jit(
+                step_fn, in_shardings=(state_sh, batch_sh),
+                donate_argnums=(0,)).lower(state_sds, batch_sds)
+    else:
+        rules_dict = override_rules or shd.rules_for_arch(
+            serve_rules_for(arch), cfg.n_kv_heads, tp, cfg.family)
+        rules = shd.ShardingRules(mesh, resolve_rules(rules_dict, mesh))
+        with shd.use_rules(rules):
+            params_sds, axes = abstract_init(bundle.init, jax.random.PRNGKey(0))
+            p_sh = shd.param_sharding_tree(axes, params_sds, mesh, rules.rules)
+            batch_sds = input_specs(cfg, shape)
+            batch_sh = batch_shardings(cfg, shape, mesh, rules_dict)
+            if shape.kind == 'prefill':
+                fwd = lambda p, b: bundle.forward(p, b)
+                lowered = jax.jit(fwd, in_shardings=(p_sh, batch_sh)).lower(
+                    params_sds, batch_sds)
+            else:  # decode
+                cache_sds, cache_axes = abstract_init(
+                    lambda: bundle.init_cache(shape.global_batch, shape.seq_len))
+                c_sh = shd.param_sharding_tree(cache_axes, cache_sds, mesh,
+                                               rules.rules)
+                extra_sds, extra_sh = (), ()
+                decode = bundle.decode_step
+                if cfg.family in ('audio', 'vlm'):
+                    from ..models import transformer
+                    src = jax.ShapeDtypeStruct(
+                        (shape.global_batch, cfg.n_source_tokens, cfg.d_model),
+                        jnp.float32)
+                    ckv_sds = jax.eval_shape(
+                        lambda p, s: transformer.precompute_cross_kv(cfg, p, s),
+                        params_sds, src)
+                    ckv_sh = jax.tree.map(
+                        lambda a: rules.sharding(
+                            ('layers', 'batch', 'frames', 'kv_heads',
+                             'head_dim'), a.shape), ckv_sds)
+                    extra_sds, extra_sh = (ckv_sds,), (ckv_sh,)
+
+                    def decode(p, c, t, pos, ckv):
+                        from ..models import transformer as tr
+                        return tr.decode_step(cfg, p, c, t, pos, cross_kv=ckv)
+
+                tok_key = 'frames' if cfg.family == 'lstm' else 'tokens'
+                tok_sds = batch_sds[tok_key]
+                tok_sh = batch_sh[tok_key]
+                pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                repl = NamedSharding(mesh, P())
+                lowered = jax.jit(
+                    decode,
+                    in_shardings=(p_sh, c_sh, tok_sh, repl) + extra_sh,
+                    donate_argnums=(1,)).lower(
+                        params_sds, cache_sds, tok_sds, pos_sds, *extra_sds)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            'argument_size_bytes': getattr(mem, 'argument_size_in_bytes', None),
+            'output_size_bytes': getattr(mem, 'output_size_in_bytes', None),
+            'temp_size_bytes': getattr(mem, 'temp_size_in_bytes', None),
+            'generated_code_size_bytes':
+                getattr(mem, 'generated_code_size_in_bytes', None),
+            'alias_size_bytes': getattr(mem, 'alias_size_in_bytes', None),
+        }
+    except Exception as e:                                   # pragma: no cover
+        mem_rec = {'error': repr(e)}
+
+    params_sds2, _ = abstract_init(bundle.init, jax.random.PRNGKey(0))
+    mflops = model_flops_per_chip(bundle, params_sds2, shape, n_chips)
+    terms = analyze(compiled, model_flops_per_chip=mflops)
+
+    rec = {
+        'arch': arch, 'shape': shape_name,
+        'mesh': 'multi_pod_2x16x16' if multi_pod else 'single_pod_16x16',
+        'kind': shape.kind, 'n_chips': n_chips,
+        'params': bundle.param_count(params_sds2),
+        'active_params': bundle.active_param_count(params_sds2),
+        'lower_s': round(t_lower, 1), 'compile_s': round(t_compile, 1),
+        'memory': mem_rec,
+        'roofline': terms.to_dict(),
+        'status': 'ok',
+    }
+    if save_hlo:
+        hlo_path = RESULTS / f'{arch}_{shape_name}_hlo.txt'
+        hlo_path.write_text(compiled.as_text())
+        rec['hlo_path'] = str(hlo_path)
+    return rec
+
+
+def cell_path(arch, shape_name, multi_pod):
+    mesh = 'mp' if multi_pod else 'sp'
+    return RESULTS / f'{arch}__{shape_name}__{mesh}.json'
+
+
+def run_cell(arch, shape_name, multi_pod, force=False, save_hlo=False):
+    out = cell_path(arch, shape_name, multi_pod)
+    if out.exists() and not force:
+        rec = json.loads(out.read_text())
+        if rec.get('status') == 'ok':
+            print(f'[skip] {out.name} (cached)')
+            return rec
+    print(f'[run ] {arch} x {shape_name} '
+          f'({"2x16x16" if multi_pod else "16x16"})', flush=True)
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod, save_hlo=save_hlo)
+        print(f'  ok: compile {rec["compile_s"]}s, '
+              f'bottleneck={rec["roofline"]["bottleneck"]}, '
+              f'fraction={rec["roofline"]["roofline_fraction"]}')
+    except Exception as e:
+        rec = {'arch': arch, 'shape': shape_name,
+               'mesh': 'multi_pod_2x16x16' if multi_pod else 'single_pod_16x16',
+               'status': 'fail', 'error': traceback.format_exc()}
+        print(f'  FAIL: {type(e).__name__}: {e}')
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def all_cells(include_chipmunk=True):
+    cells = []
+    for arch in ARCH_MODULES:
+        if arch == 'chipmunk-ctc' and not include_chipmunk:
+            continue
+        cfg = get_config(arch)
+        for s in shapes_for(cfg):
+            cells.append((arch, s.name))
+    return cells
+
+
+def run_systolic_geometry():
+    """Dry-run the paper's own 3x(5x5) configuration as a device mesh.
+
+    CTC-3L-421H-UNI is pipelined over a ('stage','row','col') = (3, 5, 10)
+    mesh (one JAX device per engine tile position; the silicon multiplexes
+    2 positions per engine — see core/perf_model.py).  Proves the shard_map
+    collective schedule (psum over cols, all_gather over rows, ppermute
+    between stages) lowers and compiles.
+    """
+    from ..core import lstm, pipeline, systolic
+    cfg = get_config('chipmunk-ctc')
+    keys = jax.random.split(jax.random.PRNGKey(0), cfg.n_layers)
+    layers = [lstm.init_lstm_params(keys[0], cfg.lstm_inputs, cfg.lstm_hidden)]
+    layers += [lstm.init_lstm_params(k, cfg.lstm_hidden, cfg.lstm_hidden)
+               for k in keys[1:]]
+    packed, plan = pipeline.pack_pipeline(layers, tile=96)
+    mesh = systolic.make_systolic_mesh(plan.rows, plan.cols,
+                                       stage=cfg.n_layers)
+    print(f'[run ] chipmunk systolic geometry: stage={cfg.n_layers} x '
+          f'{plan.rows} x {plan.cols} = {mesh.size} engines')
+    packed = pipeline.shard_pipeline(packed, mesh)
+    T, B = 16, 8
+    xs = jax.ShapeDtypeStruct((T, B, plan.padded_x), jnp.float32)
+    lowered = jax.jit(
+        lambda x: pipeline.systolic_pipeline(packed, mesh, x)).lower(xs)
+    compiled = lowered.compile()
+    terms = analyze(compiled)
+    rec = {
+        'arch': 'chipmunk-ctc', 'shape': f'systolic_3x{plan.rows}x{plan.cols}',
+        'mesh': f'stage3_row{plan.rows}_col{plan.cols}', 'status': 'ok',
+        'n_chips': int(mesh.size),
+        'roofline': terms.to_dict(),
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / 'chipmunk-ctc__systolic_geometry.json').write_text(
+        json.dumps(rec, indent=1))
+    print(f'  ok: collective bytes/chip={terms.collective_bytes:,.0f} '
+          f'({terms.per_collective})')
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch')
+    ap.add_argument('--shape')
+    ap.add_argument('--multi-pod', action='store_true')
+    ap.add_argument('--all', action='store_true')
+    ap.add_argument('--force', action='store_true')
+    ap.add_argument('--save-hlo', action='store_true')
+    ap.add_argument('--systolic', action='store_true',
+                    help="dry-run the paper's 3x(RxC) geometry")
+    args = ap.parse_args()
+
+    if args.systolic:
+        run_systolic_geometry()
+        return
+
+    assert len(jax.devices()) >= 512, 'XLA_FLAGS must force 512 host devices'
+    if args.all:
+        ok = fail = 0
+        for arch, shape_name in all_cells():
+            rec = run_cell(arch, shape_name, args.multi_pod, args.force)
+            ok += rec['status'] == 'ok'
+            fail += rec['status'] != 'ok'
+        print(f'done: {ok} ok, {fail} failed')
+    else:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.force,
+                       save_hlo=args.save_hlo)
+        print(json.dumps(rec, indent=2)[:2000])
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh construction (TPU v5e pods; CPU placeholder devices OK).
+
+Single pod: 16 x 16 = 256 chips ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips ("pod", "data", "model") — the "pod" axis
+crosses DCI; sharding anything over it proves the config scales past one pod.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+# TPU v5e constants used for the roofline analysis (per assignment).
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW = 50e9                 # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ('pod', 'data', 'model') if multi_pod else ('data', 'model')
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def resolve_rules(rules: Dict[str, object], mesh: Mesh) -> Dict[str, object]:
+    """Drop mesh axes that don't exist on this mesh (e.g. 'pod' on single-pod)."""
+    names = set(mesh.axis_names)
+    out = {}
+    for k, v in rules.items():
+        if v is None:
+            out[k] = None
+        elif isinstance(v, str):
+            out[k] = v if v in names else None
+        else:
+            kept = tuple(a for a in v if a in names)
+            out[k] = kept if kept else None
+    return out

@@ -1,0 +1,7 @@
+"""Model zoo: transformer (dense/MoE/VLM/enc-dec), xLSTM, Mamba/Hymba, and the
+paper's CTC LSTM.  Select via configs + registry.get_bundle."""
+from . import chipmunk_net, layers, recurrent, registry, transformer
+from .registry import ModelBundle, batch_axes, get_bundle, input_specs
+
+__all__ = ['chipmunk_net', 'layers', 'recurrent', 'registry', 'transformer',
+           'ModelBundle', 'batch_axes', 'get_bundle', 'input_specs']

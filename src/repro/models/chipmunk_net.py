@@ -1,0 +1,79 @@
+"""CTC-3L-421H-UNI — the paper's real-world workload as a trainable model.
+
+123 MFCC features -> 3x421 peephole LSTM -> 62 CTC outputs.  Parameters carry
+the systolic logical axes ('lstm_row' -> TP, 'lstm_col' -> DP/FSDP): under the
+production mesh the weight matrices are 2-D block-tiled exactly like the paper's
+engine grid, and XLA emits the systolic schedule (partial-sum reduce over cols,
+hidden-state gather over rows) from the sharding constraints.
+
+Inference additionally supports the bit-accurate int8 systolic path and the
+pipelined 3x(RxC) execution (see core/).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ArchConfig
+from ..core import ctc
+from ..core.lstm import (LSTMParams, LSTMStackParams, init_lstm_stack,
+                         lstm_stack_apply)
+from ..sharding import logical
+
+
+def init(cfg: ArchConfig, key):
+    params = init_lstm_stack(key, cfg.lstm_inputs, cfg.lstm_hidden,
+                             cfg.n_layers, cfg.n_outputs, cfg.dtype())
+    layer_axes = LSTMParams(
+        w_x=(None, 'lstm_row', 'lstm_col'),
+        w_h=(None, 'lstm_row', 'lstm_col'),
+        w_peep=(None, 'lstm_row'),
+        b=(None, 'lstm_row'))
+    axes = LSTMStackParams(
+        layers=tuple(layer_axes for _ in range(cfg.n_layers)),
+        w_out=('lstm_row', 'lstm_col'), b_out=('lstm_row',))
+    return params, axes
+
+
+def forward(cfg: ArchConfig, params: LSTMStackParams, frames: jax.Array):
+    """frames: (B, T, n_in) -> log-probs (T, B, n_out)."""
+    xs = jnp.moveaxis(frames, 0, 1)                    # (T, B, n_in)
+    xs = logical(xs, 'seq', 'batch', None)
+    ys, _ = lstm_stack_apply(params, xs)
+    return jax.nn.log_softmax(ys, axis=-1)
+
+
+def loss_fn(cfg: ArchConfig, params, batch: Dict[str, jax.Array]):
+    log_probs = forward(cfg, params, batch['frames'])
+    nll = ctc.ctc_loss(log_probs, batch['labels'],
+                       batch['frame_len'], batch['label_len'])
+    return jnp.mean(nll)
+
+
+def init_state(cfg: ArchConfig, batch: int):
+    """Streaming state: (h, c) per layer — the chip's retained internal state."""
+    n_h = cfg.lstm_hidden
+    states = tuple(
+        (jnp.zeros((batch, n_h), cfg.dtype()), jnp.zeros((batch, n_h), cfg.dtype()))
+        for _ in range(cfg.n_layers))
+    ax = tuple((('batch', 'lstm_row'), ('batch', 'lstm_row'))
+               for _ in range(cfg.n_layers))
+    return states, ax
+
+
+def stream_step(cfg: ArchConfig, params: LSTMStackParams, states, frames):
+    """One 10 ms frame through the network (the Table-2 deadline workload).
+
+    frames: (B, 1, n_in).  Returns (log-probs (B, 1, n_out), new states).
+    """
+    from ..core.lstm import lstm_cell
+    x = frames[:, 0]
+    new_states = []
+    for lp, (h, c) in zip(params.layers, states):
+        h, c = lstm_cell(lp, x, h, c)
+        new_states.append((h, c))
+        x = h
+    y = jnp.einsum('oh,bh->bo', params.w_out, x) + params.b_out
+    return jax.nn.log_softmax(y, axis=-1)[:, None], tuple(new_states)

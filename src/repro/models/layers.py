@@ -1,0 +1,595 @@
+"""Composable transformer layers with logical-axis sharding annotations.
+
+Everything here is pure-JAX (dry-run lowerable on any backend); the Pallas
+kernels in repro.kernels are drop-in replacements on TPU (cfg.use_pallas).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import logical
+
+f32 = jnp.float32
+
+
+# ---------------------------------------------------------------- param utils
+def mk_param(key, shape, axes, dtype, scale: Optional[float] = None,
+             fan_in_dims: Tuple[int, ...] = (0,)):
+    """Truncated-normal fan-in init; returns the array (axes tracked by caller)."""
+    if scale is None:
+        fan_in = int(np.prod([shape[d] for d in fan_in_dims]))
+        scale = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape, f32) * scale
+            ).astype(dtype)
+
+
+def keygen(key):
+    def gen():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+    return gen
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(f32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(f32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def apply_norm(cfg, p, x, prefix=''):
+    if cfg.norm == 'layernorm':
+        return layer_norm(x, p[prefix + 'scale'], p[prefix + 'bias'])
+    return rms_norm(x, p[prefix + 'scale'])
+
+
+def init_norm(cfg, dtype):
+    params = {'scale': jnp.ones((cfg.d_model,), dtype)}
+    axes = {'scale': ('embed',)}
+    if cfg.norm == 'layernorm':
+        params['bias'] = jnp.zeros((cfg.d_model,), dtype)
+        axes['bias'] = ('embed',)
+    return params, axes
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=f32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, n_heads, head_dim); positions: (S,) or (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions.astype(f32)[..., None] * freqs     # (..., S, d/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------- chunked flash attention
+NEG_INF = -1e30
+
+
+def _chunk_mask(q_pos, k_pos, causal, window, kv_len):
+    """q_pos: (Sq,), k_pos: (ck,) absolute positions -> (Sq, ck) bool.
+
+    ``window`` may be a *traced* f32 scalar (jnp.inf = no window) so hybrid
+    models can switch layers between SWA and global attention inside a scan.
+    """
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), jnp.bool_)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]).astype(f32) < window
+    if kv_len is not None:
+        m &= k_pos[None, :] < kv_len
+    return m
+
+
+_QG_AXES = ('batch', 'kv_heads', None, 'seq_q', 'head_dim_act')
+_KV_AXES = ('batch', 'kv_heads', None, 'head_dim_act')
+
+
+def _attn_fwd_scan(q, k, v, scale, causal, window, chunk, offset, kv_len):
+    """Online-softmax forward.  q: (B,Hk,G,Sq,D); k,v: (B,Hk,Sk,D).
+    Returns (o, lse) with o: (B,Hk,G,Sq,D), lse: (B,Hk,G,Sq) fp32.
+
+    Shardings are pinned here (not only at the projection outputs) so XLA
+    cannot re-shard the score contraction dim mid-loop — that would turn
+    every score block into an all-reduce (measured: 1.7 TB/chip/step on
+    qwen3 train before this constraint)."""
+    b, hk, g, sq, d = q.shape
+    sk = k.shape[2]
+    n_chunks = sk // chunk
+    q = logical(q, *_QG_AXES)
+    k = logical(k, *_KV_AXES)
+    v = logical(v, *_KV_AXES)
+    q32 = q.astype(f32)
+    q_pos = jnp.arange(sq) + offset
+
+    kc = k.reshape(b, hk, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hk, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        c_idx, k_c, v_c = inp
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum('bhgqd,bhkd->bhgqk', q32, k_c.astype(f32),
+                       preferred_element_type=f32) * scale
+        mask = _chunk_mask(q_pos, k_pos, causal, window, kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+        # masked s is NEG_INF, so exp() already zeroes those entries — no
+        # second score-sized select (saves one full score-block HBM pass)
+        p = jnp.exp(s - m_safe[..., None])
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            'bhgqk,bhkd->bhgqd', p, v_c.astype(f32), preferred_element_type=f32)
+        acc = logical(acc, *_QG_AXES)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hk, g, sq), NEG_INF, f32)
+    l0 = jnp.zeros((b, hk, g, sq), f32)
+    acc0 = jnp.zeros((b, hk, g, sq, d), f32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                  (jnp.arange(n_chunks), kc, vc))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o = acc / l_safe[..., None]
+    lse = jnp.where(l == 0.0, NEG_INF, m + jnp.log(l_safe))
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _chunked_attention(q, k, v, window, scale, causal, chunk, offset):
+    o, _ = _attn_fwd_scan(q, k, v, scale, causal, window, chunk, offset, None)
+    return o
+
+
+def _ca_fwd(q, k, v, window, scale, causal, chunk, offset):
+    o, lse = _attn_fwd_scan(q, k, v, scale, causal, window, chunk, offset, None)
+    return o, (q, k, v, o, lse, window)
+
+
+def _ca_bwd(scale, causal, chunk, offset, res, do):
+    """FlashAttention-2 style backward: recompute p per chunk from (q,k,lse)."""
+    q, k, v, o, lse, window = res
+    b, hk, g, sq, d = q.shape
+    sk = k.shape[2]
+    n_chunks = sk // chunk
+    q = logical(q, *_QG_AXES)
+    k = logical(k, *_KV_AXES)
+    v = logical(v, *_KV_AXES)
+    do = logical(do, *_QG_AXES)
+    q32, do32, o32 = q.astype(f32), do.astype(f32), o.astype(f32)
+    q_pos = jnp.arange(sq) + offset
+    delta = jnp.sum(do32 * o32, axis=-1)                       # (B,Hk,G,Sq)
+    lse_safe = jnp.where(lse == NEG_INF, 0.0, lse)
+
+    kc = k.reshape(b, hk, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hk, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def step(dq_acc, inp):
+        c_idx, k_c, v_c = inp
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum('bhgqd,bhkd->bhgqk', q32, k_c.astype(f32),
+                       preferred_element_type=f32) * scale
+        mask = _chunk_mask(q_pos, k_pos, causal, window, None)
+        p = jnp.where(mask, jnp.exp(s - lse_safe[..., None]), 0.0)
+        dv_c = jnp.einsum('bhgqk,bhgqd->bhkd', p, do32,
+                          preferred_element_type=f32)
+        dp = jnp.einsum('bhgqd,bhkd->bhgqk', do32, v_c.astype(f32),
+                        preferred_element_type=f32)
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum('bhgqk,bhkd->bhgqd', ds, k_c.astype(f32),
+                                     preferred_element_type=f32)
+        dq_acc = logical(dq_acc, *_QG_AXES)
+        dk_c = jnp.einsum('bhgqk,bhgqd->bhkd', ds, q32,
+                          preferred_element_type=f32)
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros_like(q32)
+    dq, (dk_c, dv_c) = jax.lax.scan(step, dq0,
+                                    (jnp.arange(n_chunks), kc, vc))
+    dk = dk_c.transpose(1, 2, 0, 3, 4).reshape(b, hk, sk, d)
+    dv = dv_c.transpose(1, 2, 0, 3, 4).reshape(b, hk, sk, d)
+    dwin = None if window is None else jnp.zeros_like(window)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), dwin
+
+
+_chunked_attention.defvjp(_ca_fwd, _ca_bwd)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, chunk=512,
+                      offset=None, kv_len=None, sm_scale=None):
+    """Memory-bounded attention.  q: (B,H,Sq,D); k,v: (B,Hkv,Sk,D).
+
+    kv_len (traced) selects the inference path (no vjp); otherwise the
+    FA2-style custom-vjp path is used (residuals O(S), not O(S^2)).
+    """
+    b, h, sq, d = q.shape
+    hk, sk = k.shape[1], k.shape[2]
+    group = h // hk
+    scale = (d ** -0.5) if sm_scale is None else sm_scale
+    if offset is None:
+        offset = sk - sq if causal else 0
+    chunk = min(chunk, sk)
+    if sk % chunk != 0:                # pad keys; masked out via kv_len
+        pad = (-sk) % chunk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_len = sk if kv_len is None else kv_len
+    if isinstance(window, int):
+        window = jnp.float32(window)
+    qg = q.reshape(b, hk, group, sq, d)
+    if kv_len is None:
+        o = _chunked_attention(qg, k, v, window, scale, causal, chunk, offset)
+    else:
+        o, _ = _attn_fwd_scan(qg, k, v, scale, causal, window, chunk, offset,
+                              kv_len)
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+# ----------------------------------------------------------------- attention
+def init_attention(cfg, gen, dtype, cross=False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, hk = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        'wq': mk_param(gen(), (d, h, hd), None, dtype),
+        'wk': mk_param(gen(), (d, hk, hd), None, dtype),
+        'wv': mk_param(gen(), (d, hk, hd), None, dtype),
+        'wo': mk_param(gen(), (h, hd, d), None, dtype, fan_in_dims=(0, 1)),
+    }
+    axes = {
+        'wq': ('embed', 'heads', 'head_dim'),
+        'wk': ('embed', 'kv_heads', 'head_dim'),
+        'wv': ('embed', 'kv_heads', 'head_dim'),
+        'wo': ('heads', 'head_dim', 'embed'),
+    }
+    if cfg.qkv_bias and not cross:
+        for n, sh, ax in (('bq', (h, hd), ('heads', 'head_dim')),
+                          ('bk', (hk, hd), ('kv_heads', 'head_dim')),
+                          ('bv', (hk, hd), ('kv_heads', 'head_dim'))):
+            p[n] = jnp.zeros(sh, dtype)
+            axes[n] = ax
+    if cfg.qk_norm and not cross:
+        p['q_norm'] = jnp.ones((hd,), dtype)
+        p['k_norm'] = jnp.ones((hd,), dtype)
+        axes['q_norm'] = ('head_dim',)
+        axes['k_norm'] = ('head_dim',)
+    return p, axes
+
+
+def _project_qkv(cfg, p, x, kv_src=None, positions=None, rope=True):
+    kv_src = x if kv_src is None else kv_src
+    q = jnp.einsum('bsd,dhk->bshk', x, p['wq'])
+    k = jnp.einsum('bsd,dhk->bshk', kv_src, p['wk'])
+    v = jnp.einsum('bsd,dhk->bshk', kv_src, p['wv'])
+    if 'bq' in p:
+        q, k, v = q + p['bq'], k + p['bk'], v + p['bv']
+    if 'q_norm' in p:
+        q = rms_norm(q, p['q_norm'])
+        k = rms_norm(k, p['k_norm'])
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # Attention activation sharding (see sharding.rules_for_arch): either
+    # kv_heads carries the TP axis (divisible case) or seq_q/kv_seq do
+    # (context parallelism).  head_dim_act is never sharded — sharding the
+    # score-contraction dim would all-reduce every score block.
+    q = logical(q, 'batch', 'seq_q', 'heads', 'head_dim_act')
+    # K/V stay replicated over the TP axis on the seq dim (every q shard
+    # needs every key); 'kv_heads' still claims TP when divisible.
+    k = logical(k, 'batch', None, 'kv_heads', 'head_dim_act')
+    v = logical(v, 'batch', None, 'kv_heads', 'head_dim_act')
+    return q, k, v
+
+
+def attention_block(cfg, p, x, *, positions, causal=True, window=None,
+                    kv_src=None, cross=False):
+    """Self or cross attention over full sequences (train/prefill)."""
+    q, k, v = _project_qkv(cfg, p, x, kv_src=kv_src, positions=positions,
+                           rope=not cross)
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    o = chunked_attention(qh, kh, vh, causal=causal and not cross,
+                          window=window, chunk=cfg.attn_chunk)
+    o = o.transpose(0, 2, 1, 3)
+    # seq_q claims TP first under context parallelism; heads only when the
+    # policy is off — keeps o's sharding identical to the scan's accumulator
+    # (mismatched constraints here caused per-chunk resharding copies).
+    o = logical(o, 'batch', 'seq_q', 'heads', 'head_dim_act')
+    out = jnp.einsum('bshk,hkd->bsd', o, p['wo'])
+    return logical(out, 'batch', 'seq', 'embed')
+
+
+def attention_decode(cfg, p, x, cache, *, pos, window=None, cross_kv=None):
+    """One-token decode against a (ring or linear) KV cache.
+
+    cache: {'k','v': (B, W, Hkv, hd), 'pos': (W,) int32 slot->abs position}.
+    Softmax is permutation-invariant over keys, so ring order needs no unrolling.
+    """
+    if cross_kv is not None:
+        k_all, v_all = cross_kv                      # (B, F, Hk, hd) static
+        q, _, _ = _project_qkv(cfg, p, x, kv_src=x, positions=None, rope=False)
+        # cross-attn k/v are precomputed from the encoder/image source
+        qh = q.transpose(0, 2, 1, 3)
+        o = chunked_attention(qh, k_all.transpose(0, 2, 1, 3),
+                              v_all.transpose(0, 2, 1, 3), causal=False,
+                              chunk=cfg.attn_chunk)
+        o = o.transpose(0, 2, 1, 3)
+        return jnp.einsum('bshk,hkd->bsd', o, p['wo']), cache
+
+    w = cache['k'].shape[1]
+    positions = jnp.full((1,), pos)
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions=positions)
+    slot = pos % w
+    k_cache = jax.lax.dynamic_update_slice(cache['k'], k_new.astype(cache['k'].dtype),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache['v'], v_new.astype(cache['v'].dtype),
+                                           (0, slot, 0, 0))
+    pos_arr = cache['pos'].at[slot].set(pos)
+    cache = {'k': k_cache, 'v': v_cache, 'pos': pos_arr}
+
+    qh = q.transpose(0, 2, 1, 3)                       # (B, H, 1, hd)
+    kh = k_cache.transpose(0, 2, 1, 3)                 # (B, Hk, W, hd)
+    vh = v_cache.transpose(0, 2, 1, 3)
+    b, h, _, hd = qh.shape
+    hk = kh.shape[1]
+    scale = cfg.resolved_head_dim ** -0.5
+    # Validity mask from absolute slot positions (handles ring wrap + window).
+    valid = (pos_arr >= 0) & (pos_arr <= pos)
+    if window is not None:
+        valid &= (pos - pos_arr) < window
+    s = jnp.einsum('bhgd,bhkd->bhgk', qh.reshape(b, hk, h // hk, hd),
+                   kh, preferred_element_type=f32) * scale
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pmax = jnp.max(s, axis=-1, keepdims=True)
+    pr = jnp.exp(s - pmax)
+    pr = pr / jnp.sum(pr, axis=-1, keepdims=True)
+    o = jnp.einsum('bhgk,bhkd->bhgd', pr.astype(vh.dtype), vh)
+    o = o.reshape(b, h, 1, hd).transpose(0, 2, 1, 3)
+    return jnp.einsum('bshk,hkd->bsd', o, p['wo']), cache
+
+
+# ----------------------------------------------------------------------- MLP
+def init_mlp(cfg, gen, dtype, d_ff=None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == 'silu':   # SwiGLU
+        p = {'w_gate': mk_param(gen(), (d, ff), None, dtype),
+             'w_up': mk_param(gen(), (d, ff), None, dtype),
+             'w_down': mk_param(gen(), (ff, d), None, dtype)}
+        axes = {'w_gate': ('embed', 'mlp'), 'w_up': ('embed', 'mlp'),
+                'w_down': ('mlp', 'embed')}
+    else:
+        p = {'w_up': mk_param(gen(), (d, ff), None, dtype),
+             'b_up': jnp.zeros((ff,), dtype),
+             'w_down': mk_param(gen(), (ff, d), None, dtype),
+             'b_down': jnp.zeros((d,), dtype)}
+        axes = {'w_up': ('embed', 'mlp'), 'b_up': ('mlp',),
+                'w_down': ('mlp', 'embed'), 'b_down': ('embed',)}
+    return p, axes
+
+
+def mlp_block(cfg, p, x):
+    if cfg.act == 'silu':
+        h = jax.nn.silu(x @ p['w_gate']) * (x @ p['w_up'])
+        h = logical(h, 'batch', 'seq', 'mlp')
+        out = h @ p['w_down']
+    else:
+        h = jax.nn.gelu(x @ p['w_up'] + p['b_up'])
+        h = logical(h, 'batch', 'seq', 'mlp')
+        out = h @ p['w_down'] + p['b_down']
+    return logical(out, 'batch', 'seq', 'embed')
+
+
+# ----------------------------------------------------------------------- MoE
+def init_moe(cfg, gen, dtype):
+    d, m = cfg.d_model, cfg.moe
+    p = {
+        'router': mk_param(gen(), (d, m.n_experts), None, f32),
+        'w_gate': mk_param(gen(), (m.n_experts, d, m.d_ff), None, dtype,
+                           fan_in_dims=(1,)),
+        'w_up': mk_param(gen(), (m.n_experts, d, m.d_ff), None, dtype,
+                         fan_in_dims=(1,)),
+        'w_down': mk_param(gen(), (m.n_experts, m.d_ff, d), None, dtype,
+                           fan_in_dims=(1,)),
+    }
+    axes = {
+        'router': ('embed', None),
+        'w_gate': ('experts', 'embed', 'expert_mlp'),
+        'w_up': ('experts', 'embed', 'expert_mlp'),
+        'w_down': ('experts', 'expert_mlp', 'embed'),
+    }
+    return p, axes
+
+
+def _moe_group_count(n: int, target_group: int = 4096) -> int:
+    """Token groups: at least one per DP shard (dispatch stays shard-local)."""
+    from ..sharding import current_rules
+    r = current_rules()
+    dp = 1
+    if r is not None and r.mesh is not None:
+        sizes = dict(zip(r.mesh.axis_names, r.mesh.devices.shape))
+        dp = sizes.get('pod', 1) * sizes.get('data', 1)
+    g = min(n, max(dp, n // target_group))
+    while n % g:
+        g -= 1
+    return max(g, 1)
+
+
+def moe_block(cfg, p, x):
+    """Top-k MoE with *hierarchical* dispatch: per-group local sort/scatter,
+    one expert-axis all-to-all (via resharding constraint), grouped GEMM.
+
+    Chipmunk C3 at pod scale: the expert weights (2 TB for kimi-k2) stay
+    stationary, sharded EP x TP; only activation slots move.  The earlier
+    global-argsort dispatch (kept as moe_block_global for ablation) made
+    SPMD lower every cross-shard gather to a full all-reduce — measured
+    117 TB/chip/step on kimi-k2 train.  Here every sort/scatter/gather is
+    *within* a token group that lives on one DP shard, so the only
+    communication is the intrinsic buf exchange: ~n*k*cf*d bytes/layer.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    k, e = m.top_k, m.n_experts
+    g = _moe_group_count(n)
+    sg = n // g                                     # tokens per group
+    pairs = sg * k
+    cap = max(int(np.ceil(pairs / e * m.capacity_factor / 8)) * 8, 8)
+
+    xg = logical(x.reshape(g, sg, d), 'batch', None, None)
+    router_logits = xg.astype(f32) @ p['router']               # (G, Sg, E)
+    gate_vals, idx = jax.lax.top_k(router_logits, k)           # (G, Sg, k)
+    gate_vals = jax.nn.softmax(gate_vals, axis=-1)
+
+    pair_expert = idx.reshape(g, pairs)                        # (G, P)
+    order = jnp.argsort(pair_expert, axis=-1)                  # local sort
+    sorted_expert = jnp.take_along_axis(pair_expert, order, axis=-1)
+    # position within expert: rank - first occurrence (vmapped searchsorted)
+    starts = jax.vmap(lambda row: jnp.searchsorted(
+        row, jnp.arange(e), side='left'))(sorted_expert)       # (G, E)
+    pos = jnp.arange(pairs)[None, :] - jnp.take_along_axis(
+        starts, sorted_expert, axis=-1)
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_expert * cap + pos, e * cap)  # (G, P)
+
+    token_of_pair = order // k                                 # (G, P)
+    xk = jnp.take_along_axis(
+        xg, token_of_pair[..., None], axis=1)                  # (G, P, d) local
+    # Dispatch as a *batched gather* (slot -> source pair), not a scatter:
+    # SPMD replicates batched scatters ("involuntary full rematerialization",
+    # measured 53 TB/chip on kimi-k2), but partitions batched gathers cleanly.
+    counts = jnp.concatenate([starts[:, 1:], jnp.full((g, 1), pairs)],
+                             axis=1) - starts                  # (G, E)
+    cgrid = jnp.arange(cap)[None, None, :]                     # (1, 1, C)
+    src_pair = jnp.where(cgrid < counts[..., None],
+                         starts[..., None] + cgrid, pairs)     # (G, E, C)
+    xk_pad = jnp.concatenate([xk, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    buf = jnp.take_along_axis(
+        xk_pad, src_pair.reshape(g, e * cap)[..., None], axis=1)
+    buf = buf.reshape(g, e, cap, d)
+
+    # ---- the all-to-all: token-sharded -> expert+cap-sharded (EP x TP) ----
+    # cap (not expert_mlp) carries the TP axis: each (expert, cap-slice) GEMM
+    # contracts over unsharded d/f, so no down-projection all-reduce exists,
+    # and the dispatch all-to-all moves 1/TP of the buffer per chip.
+    buf_e = logical(jnp.swapaxes(buf, 0, 1), 'experts', None, 'moe_cap', 'embed')
+    h = jax.nn.silu(jnp.einsum('egcd,edf->egcf', buf_e, p['w_gate'])) \
+        * jnp.einsum('egcd,edf->egcf', buf_e, p['w_up'])
+    h = logical(h, 'experts', None, 'moe_cap', None)
+    y_e = jnp.einsum('egcf,efd->egcd', h, p['w_down'])
+    y_e = logical(y_e, 'experts', None, 'moe_cap', 'embed')
+    # ---- reverse all-to-all: expert-sharded -> token-sharded ----
+    y_buf = logical(jnp.swapaxes(y_e, 0, 1), 'batch', None, None, None)
+    y_buf = y_buf.reshape(g, e * cap, d)
+
+    y_sorted = jnp.take_along_axis(
+        y_buf, jnp.minimum(slot, e * cap - 1)[..., None], axis=1)
+    y_sorted = y_sorted * keep[..., None].astype(x.dtype)
+    inv = jnp.argsort(order, axis=-1)
+    y_pairs = jnp.take_along_axis(y_sorted, inv[..., None], axis=1)
+    out = jnp.sum(y_pairs.reshape(g, sg, k, d)
+                  * gate_vals[..., None].astype(x.dtype), axis=2)
+
+    # GShard load-balance aux loss from per-group expert loads.
+    probs_mean = jnp.mean(jax.nn.softmax(router_logits, -1), axis=(0, 1))
+    load = jnp.mean((jax.nn.one_hot(idx, e, dtype=f32)).sum(2), axis=(0, 1)) / k
+    ce = jnp.sum(probs_mean * load) * e
+    return logical(out.reshape(b, s, d), 'batch', 'seq', 'embed'), ce
+
+
+def moe_block_global(cfg, p, x):
+    """Reference dispatch with one global argsort (ablation baseline; see
+    moe_block docstring for why this is catastrophic under SPMD)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    k, e = m.top_k, m.n_experts
+    xf = x.reshape(n, d)
+    xf = logical(xf, 'batch', None)
+
+    router_logits = (xf.astype(f32) @ p['router'])            # (N, E)
+    gate_vals, idx = jax.lax.top_k(router_logits, k)          # (N, k)
+    gate_vals = jax.nn.softmax(gate_vals, axis=-1)
+
+    pair_expert = idx.reshape(-1)                             # (N*k,)
+    perm = jnp.argsort(pair_expert)
+    sorted_expert = pair_expert[perm]
+    sorted_token = perm // k                                  # pair -> token id
+    counts = jnp.bincount(pair_expert, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos_within = jnp.arange(n * k) - starts[sorted_expert]
+    cap = int(np.ceil(n * k / e * m.capacity_factor / 8)) * 8
+    keep = pos_within < cap
+    slot = jnp.where(keep, sorted_expert * cap + pos_within, e * cap)
+
+    xg = jnp.take(xf, sorted_token, axis=0)                   # (N*k, d) gather
+    buf = jnp.zeros((e * cap, d), x.dtype).at[slot].set(xg, mode='drop')
+    buf = logical(buf.reshape(e, cap, d), 'experts', None, 'embed')
+
+    h = jax.nn.silu(jnp.einsum('ecd,edf->ecf', buf, p['w_gate'])) \
+        * jnp.einsum('ecd,edf->ecf', buf, p['w_up'])
+    h = logical(h, 'experts', None, 'expert_mlp')
+    y_e = jnp.einsum('ecf,efd->ecd', h, p['w_down'])
+    y_e = logical(y_e, 'experts', None, 'embed')
+
+    y_sorted = jnp.take(y_e.reshape(e * cap, d), jnp.minimum(slot, e * cap - 1),
+                        axis=0) * keep[:, None].astype(x.dtype)
+    y_pairs = jnp.zeros((n * k, d), x.dtype).at[perm].set(y_sorted)
+    out = jnp.sum(y_pairs.reshape(n, k, d)
+                  * gate_vals[..., None].astype(x.dtype), axis=1)
+    me = jnp.mean(jax.nn.softmax(router_logits, -1), axis=0)
+    ce = jnp.mean((jnp.bincount(pair_expert, length=e) / (n * k)).astype(f32) * me) * e * e
+    return logical(out.reshape(b, s, d), 'batch', 'seq', 'embed'), ce
+
+
+# ----------------------------------------------------------------- embedding
+def init_embedding(cfg, gen, dtype):
+    p = {'table': mk_param(gen(), (cfg.vocab_size, cfg.d_model), None, dtype,
+                           scale=0.02)}
+    axes = {'table': ('vocab', 'embed')}
+    if not cfg.tie_embeddings:
+        p['unembed'] = mk_param(gen(), (cfg.d_model, cfg.vocab_size), None, dtype)
+        axes['unembed'] = ('embed', 'vocab')
+    return p, axes
+
+
+def embed(cfg, p, tokens):
+    x = jnp.take(p['table'], tokens, axis=0)
+    return logical(x.astype(cfg.adtype()), 'batch', 'seq', 'embed')
+
+
+def unembed(cfg, p, x):
+    w = p['table'].T if cfg.tie_embeddings else p['unembed']
+    logits = jnp.einsum('bsd,dv->bsv', x, w.astype(x.dtype))
+    return logical(logits, 'batch', 'seq', 'vocab')
+
+
+def softmax_xent(logits, labels):
+    """Token-mean cross entropy, fp32 logsumexp over (sharded) vocab."""
+    logits = logits.astype(f32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,544 @@
+"""Recurrent / hybrid architectures: xLSTM (mLSTM + sLSTM), Mamba, Hymba.
+
+These are the families where the paper's technique applies directly (DESIGN.md §4):
+the sLSTM block is an LSTM-descendant recurrence (Chipmunk's exact workload — its
+recurrent mat-vec follows the same weight-stationary systolic schedule), and the
+Mamba/mLSTM state updates are weight-stationary scans.
+
+mLSTM uses the *chunkwise-parallel* form (matrix memory C (dh x dh) materialised
+only at chunk boundaries) — the recurrent form would store T x dh^2 residuals.
+Mamba uses an associative scan (diagonal SSM).  sLSTM is a true nonlinear
+recurrence and scans sequentially, exactly like the silicon's column loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ArchConfig
+from ..sharding import logical
+from . import layers as L
+
+f32 = jnp.float32
+
+
+# =============================================================== mLSTM block
+def init_mlstm(cfg: ArchConfig, key):
+    gen = L.keygen(key)
+    d = cfg.d_model
+    di = 2 * d                      # projection factor 2 (xLSTM paper)
+    h = cfg.n_heads
+    dtype = cfg.dtype()
+    p = {
+        'ln': jnp.ones((d,), dtype),
+        'w_up': L.mk_param(gen(), (d, 2 * di), None, dtype),
+        'conv_w': L.mk_param(gen(), (cfg.conv_kernel, di), None, dtype,
+                             scale=cfg.conv_kernel ** -0.5),
+        'wq': L.mk_param(gen(), (di, di), None, dtype),
+        'wk': L.mk_param(gen(), (di, di), None, dtype),
+        'wv': L.mk_param(gen(), (di, di), None, dtype),
+        'w_if': L.mk_param(gen(), (di, 2 * h), None, dtype, scale=0.01),
+        'b_if': jnp.concatenate([jnp.zeros((h,), dtype),
+                                 jnp.linspace(3.0, 6.0, h).astype(dtype)]),
+        'out_norm': jnp.ones((di,), dtype),
+        'w_down': L.mk_param(gen(), (di, d), None, dtype),
+    }
+    # Megatron-style block sharding: gather the post-conv stream ONCE, run
+    # q/k/v with *output*-sharded weights (local GEMMs), reduce once at
+    # w_down.  Input-sharded q/k/v weights would all-reduce (B,S,di) three
+    # times per block (measured on the xlstm-1.3b train hillclimb).
+    axes = {
+        'ln': ('embed',), 'w_up': ('embed', 'mlp'), 'conv_w': (None, None),
+        'wq': (None, 'mlp'), 'wk': (None, 'mlp'), 'wv': (None, 'mlp'),
+        'w_if': (None, None), 'b_if': (None,),
+        'out_norm': ('mlp',), 'w_down': ('mlp', 'embed'),
+    }
+    return p, axes
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: (B,S,C); w: (K,C).  state: (B,K-1,C) or None."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return out, new_state
+
+
+def mlstm_chunkwise(q, k, v, log_f, log_i, chunk: int, state=None):
+    """Stabilised chunkwise mLSTM.  q,k,v: (B,H,S,dh); log_f, log_i: (B,H,S).
+
+    Returns (y (B,H,S,dh), final state (C, n, m)).  Within-chunk: attention-like
+    masked decay matrix; across chunks: matrix memory recurrence at boundaries.
+    """
+    b, h, s, dh = q.shape
+    nc = s // chunk
+    q = q.reshape(b, h, nc, chunk, dh)   # k is pre-scaled by dh^-0.5 upstream
+    k = k.reshape(b, h, nc, chunk, dh)
+    v = v.reshape(b, h, nc, chunk, dh)
+    lf = log_f.astype(f32).reshape(b, h, nc, chunk)
+    li = log_i.astype(f32).reshape(b, h, nc, chunk)
+
+    csum_f = jnp.cumsum(lf, axis=-1)                    # within-chunk cumulative
+    total_f = csum_f[..., -1]                           # (B,H,nc)
+    # decay from step t to end of chunk / from chunk start to step t
+    dec_to_end = total_f[..., None] - csum_f            # (B,H,nc,T)
+    # source weight for boundary state update: i_t * f_{t+1..T}
+    src = li + dec_to_end
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), f32)
+        n0 = jnp.zeros((b, h, dh), f32)
+        m0 = jnp.full((b, h), -1e30, f32)
+    else:
+        c0, n0, m0 = state
+
+    def outer(carry, xs):
+        c_prev, n_prev, m_prev = carry
+        qc, kc, vc, lf_c, li_c, csum_c, tot_c, src_c = xs
+        # (B,H,T) intra-chunk log weights: D_ts = csum_t - csum_s + li_s (s<=t)
+        dmat = csum_c[..., :, None] - csum_c[..., None, :] + li_c[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(tri, dmat, -1e30)
+        # stabiliser per row: max(intra max, inter bound m_prev + csum_t)
+        inter_bound = m_prev[..., None] + csum_c                  # (B,H,T)
+        m_row = jnp.maximum(jnp.max(dmat, axis=-1), inter_bound)
+        m_row = jnp.maximum(m_row, -1e29)
+        dmat = jnp.exp(dmat - m_row[..., None])
+        inter_w = jnp.exp(inter_bound - m_row)                    # (B,H,T)
+
+        s_qk = jnp.einsum('bhtd,bhsd->bhts', qc.astype(f32), kc.astype(f32),
+                          preferred_element_type=f32)
+        y_intra = jnp.einsum('bhts,bhsd->bhtd', s_qk * dmat, vc.astype(f32))
+        y_inter = jnp.einsum('bhtd,bhde->bhte', qc.astype(f32), c_prev) \
+            * inter_w[..., None]
+        n_intra = jnp.einsum('bhts,bhs->bht', s_qk * dmat,
+                             jnp.ones((b, h, chunk), f32))
+        # normaliser: |q . n| terms
+        n_inter = jnp.einsum('bhtd,bhd->bht', qc.astype(f32), n_prev) \
+            * inter_w
+        denom = jnp.maximum(jnp.abs(n_intra + n_inter), jnp.exp(-m_row))
+        y = (y_intra + y_inter) / denom[..., None]
+
+        # boundary update (new running max at chunk end)
+        m_new = jnp.maximum(m_prev + tot_c, jnp.max(li_c + (tot_c[..., None]
+                            - csum_c), axis=-1))
+        w_src = jnp.exp(src_c - m_new[..., None])                 # (B,H,T)
+        c_new = c_prev * jnp.exp(m_prev + tot_c - m_new)[..., None, None] \
+            + jnp.einsum('bhtd,bhte,bht->bhde', kc.astype(f32),
+                         vc.astype(f32), w_src)
+        n_new = n_prev * jnp.exp(m_prev + tot_c - m_new)[..., None] \
+            + jnp.einsum('bhtd,bht->bhd', kc.astype(f32), w_src)
+        return (c_new, n_new, m_new), y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in
+               (q, k, v, lf, li, csum_f, total_f, src))
+    (c_f, n_f, m_f), ys = jax.lax.scan(outer, (c0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 2).reshape(b, h, s, dh)
+    return y.astype(v.dtype), (c_f, n_f, m_f)
+
+
+def mlstm_block(cfg: ArchConfig, p, x, *, chunk=256, state=None):
+    """x: (B,S,D) -> (B,S,D), optionally carrying (conv_state, (C,n,m))."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di = 2 * d
+    dh = di // h
+    res = x
+    xn = L.rms_norm(x, p['ln'])
+    up = xn @ p['w_up']
+    m_in, z = jnp.split(up, 2, axis=-1)
+    conv_state = state[0] if state is not None else None
+    cx, conv_state = _causal_conv(m_in, p['conv_w'], conv_state)
+    cx = jax.nn.silu(cx)
+    # conv/silu run TP-sharded (elementwise in di); gather only the matmul
+    # inputs (full-matrix q/k/v projections need the whole di stream)
+    cx = L.logical(cx, 'batch', 'seq', None)
+    m_in = L.logical(m_in, 'batch', 'seq', None)
+    q = (cx @ p['wq']).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = (cx @ p['wk']).reshape(b, s, h, dh).transpose(0, 2, 1, 3) * dh ** -0.5
+    v = (m_in @ p['wv']).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    gates = m_in @ p['w_if'] + p['b_if']          # (B,S,2H)
+    log_i = gates[..., :h].astype(f32).transpose(0, 2, 1)
+    log_f = jax.nn.log_sigmoid(gates[..., h:].astype(f32)).transpose(0, 2, 1)
+
+    chunk_eff = min(chunk, s)
+    if s % chunk_eff:
+        chunk_eff = s                               # smoke shapes
+    mem_state = state[1] if state is not None else None
+    y, mem_state = mlstm_chunkwise(q, k, v, log_f, log_i, chunk_eff, mem_state)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, di)
+    y = L.rms_norm(y, p['out_norm']) * jax.nn.silu(z)
+    out = (res + y @ p['w_down']).astype(res.dtype)
+    return out, (conv_state, mem_state)
+
+
+# =============================================================== sLSTM block
+def init_slstm(cfg: ArchConfig, key):
+    gen = L.keygen(key)
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    dtype = cfg.dtype()
+    ffd = int(d * 4 / 3)
+    p = {
+        'ln': jnp.ones((d,), dtype),
+        'w_in': L.mk_param(gen(), (4, d, d), None, dtype, fan_in_dims=(1,)),
+        'r': L.mk_param(gen(), (4, h, dh, dh), None, dtype, fan_in_dims=(2,)),
+        'b': jnp.zeros((4, d), dtype),
+        'out_norm': jnp.ones((d,), dtype),
+        'ln_ff': jnp.ones((d,), dtype),
+        'w_ff1': L.mk_param(gen(), (d, 2 * ffd), None, dtype),
+        'w_ff2': L.mk_param(gen(), (ffd, d), None, dtype),
+    }
+    axes = {
+        'ln': ('embed',), 'w_in': (None, 'embed', 'state'),
+        # recurrent weights sharded on the OUTPUT dh (contraction dim must
+        # stay local or every timestep all-reduces the gate pre-activations)
+        'r': (None, 'heads', None, 'state'), 'b': (None, 'state'),
+        'out_norm': ('state',), 'ln_ff': ('embed',),
+        'w_ff1': ('embed', 'mlp'), 'w_ff2': ('mlp', 'embed'),
+    }
+    return p, axes
+
+
+def slstm_scan(p, zx, state, n_heads):
+    """Sequential sLSTM recurrence (exp input gate, normaliser + stabiliser).
+
+    zx: (B,S,4,D) pre-computed input contributions (gate order z,i,f,o).
+    The recurrent mat-vec r @ h is block-diagonal per head — the exact
+    structure Chipmunk's systolic tiles execute (core/systolic.py).
+    """
+    b, s, _, d = zx.shape
+    h = n_heads
+    dh = d // h
+
+    def step(carry, zx_t):
+        c, n, m, hid = carry
+        hh = hid.reshape(b, h, dh)
+        rec = jnp.einsum('ghde,bhd->bghe', p['r'].astype(f32), hh
+                         ).reshape(b, 4, d)
+        pre = zx_t.astype(f32) + rec
+        z = jnp.tanh(pre[:, 0])
+        log_i = pre[:, 1]
+        log_f = jax.nn.log_sigmoid(pre[:, 2])
+        o = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_s = jnp.exp(log_i - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+        hid_new = o * (c_new / n_new)
+        return (c_new, n_new, m_new, hid_new), hid_new
+
+    if state is None:
+        zeros = jnp.zeros((b, d), f32)
+        state = (zeros, zeros + 1e-6, zeros - 10.0, zeros)
+    state, ys = jax.lax.scan(step, state, jnp.moveaxis(zx, 1, 0))
+    return jnp.moveaxis(ys, 0, 1), state     # (B,S,D)
+
+
+def slstm_block(cfg: ArchConfig, p, x, state=None):
+    b, s, d = x.shape
+    res = x
+    xn = L.rms_norm(x, p['ln'])
+    zx = jnp.einsum('bsd,gde->bsge', xn, p['w_in']) + p['b']   # (B,S,4,D)
+    y, state = slstm_scan(p, zx, state, cfg.n_heads)
+    y = L.rms_norm(y.astype(x.dtype), p['out_norm'])
+    x = (res + y).astype(res.dtype)
+    # post-FFN (proj factor 4/3, gated)
+    h2 = L.rms_norm(x, p['ln_ff'])
+    u = h2 @ p['w_ff1']
+    a, g = jnp.split(u, 2, axis=-1)
+    return (x + (jax.nn.silu(g) * a) @ p['w_ff2']).astype(res.dtype), state
+
+
+# ================================================================ xLSTM model
+def init_xlstm(cfg: ArchConfig, key):
+    gen = L.keygen(key)
+    dtype = cfg.dtype()
+    per = cfg.xlstm_slstm_every
+    n_groups = cfg.n_layers // per
+    params: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    params['embed'], axes['embed'] = L.init_embedding(cfg, gen, dtype)
+
+    from .transformer import _stack_init
+    params['mlstm'], axes['mlstm'] = _stack_init(
+        lambda k: _stack_init(lambda kk: init_mlstm(cfg, kk), k, per - 1),
+        gen(), n_groups)
+    params['slstm'], axes['slstm'] = _stack_init(
+        lambda k: init_slstm(cfg, k), gen(), n_groups)
+    params['final_norm'] = {'scale': jnp.ones((cfg.d_model,), dtype)}
+    axes['final_norm'] = {'scale': ('embed',)}
+    return params, axes
+
+
+def forward_xlstm(cfg: ArchConfig, params, tokens, states=None):
+    """(B,S) -> logits.  states: per-layer recurrent states for decode."""
+    x = L.embed(cfg, params['embed'], tokens)
+    per = cfg.xlstm_slstm_every
+
+    decode = states is not None
+
+    def body(x, xs):
+        if decode:
+            (mgroup, sblk), (mstates, sstate) = xs
+        else:
+            mgroup, sblk = xs
+            mstates = sstate = None
+        new_m = []
+        for i in range(per - 1):
+            blk = jax.tree.map(lambda a: a[i], mgroup)
+            st = jax.tree.map(lambda a: a[i], mstates) if decode else None
+            x, st = mlstm_block(cfg, blk, x, state=st)
+            new_m.append(st)
+        x, sstate = slstm_block(cfg, sblk, x, state=sstate)
+        stacked_m = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
+        return x, (stacked_m, sstate)
+
+    def scan_body(x, xs):
+        x, sts = body(x, xs)
+        return x, sts
+
+    fn = scan_body
+    if cfg.remat != 'none' and not decode:
+        fn = jax.checkpoint(scan_body)
+    xs = (params['mlstm'], params['slstm'])
+    if decode:
+        xs = (xs, states)
+    x, new_states = jax.lax.scan(fn, x, xs)
+    x = L.rms_norm(x, params['final_norm']['scale'])
+    return L.unembed(cfg, params['embed'], x), new_states
+
+
+def init_xlstm_state(cfg: ArchConfig, batch: int):
+    """Recurrent state stand-in for decode (replaces the KV cache)."""
+    per = cfg.xlstm_slstm_every
+    n_groups = cfg.n_layers // per
+    d = cfg.d_model
+    di, h = 2 * d, cfg.n_heads
+    dh = di // h
+    dt = cfg.adtype()
+    conv = jnp.zeros((n_groups, per - 1, batch, cfg.conv_kernel - 1, di), dt)
+    mem = (jnp.zeros((n_groups, per - 1, batch, h, dh, dh), f32),
+           jnp.zeros((n_groups, per - 1, batch, h, dh), f32),
+           jnp.full((n_groups, per - 1, batch, h), -1e30, f32))
+    zeros = jnp.zeros((n_groups, batch, d), f32)
+    sstate = (zeros, zeros + 1e-6, zeros - 10.0, zeros)
+    states = ((conv, mem), sstate)
+    conv_ax = ('layers', None, 'batch', None, 'mlp')
+    mem_ax = (('layers', None, 'batch', 'heads', 'head_dim', None),
+              ('layers', None, 'batch', 'heads', 'head_dim'),
+              ('layers', None, 'batch', 'heads'))
+    s_ax = ('layers', 'batch', 'embed')
+    axes = ((conv_ax, mem_ax), (s_ax, s_ax, s_ax, s_ax))
+    return states, axes
+
+
+# ================================================================ Mamba block
+def init_mamba(cfg: ArchConfig, key):
+    gen = L.keygen(key)
+    d = cfg.d_model
+    di = d                          # hymba: mamba heads span d_model
+    n = cfg.ssm_state
+    dtype = cfg.dtype()
+    dt_rank = max(d // 16, 1)
+    p = {
+        'w_in': L.mk_param(gen(), (d, 2 * di), None, dtype),
+        'conv_w': L.mk_param(gen(), (cfg.conv_kernel, di), None, dtype,
+                             scale=cfg.conv_kernel ** -0.5),
+        'w_bdt': L.mk_param(gen(), (di, 2 * n + dt_rank), None, dtype),
+        'w_dt': L.mk_param(gen(), (dt_rank, di), None, dtype),
+        'b_dt': jnp.asarray(
+            np.log(np.expm1(np.random.RandomState(0).uniform(
+                1e-3, 1e-1, size=(di,)))), dtype),
+        'a_log': jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=f32), (di, 1))),
+        'd_skip': jnp.ones((di,), dtype),
+        'w_out': L.mk_param(gen(), (di, d), None, dtype),
+    }
+    axes = {
+        'w_in': ('embed', 'mlp'), 'conv_w': (None, 'mlp'),
+        'w_bdt': ('mlp', None), 'w_dt': (None, 'mlp'), 'b_dt': ('mlp',),
+        'a_log': ('mlp', None), 'd_skip': ('mlp',), 'w_out': ('mlp', 'embed'),
+    }
+    return p, axes
+
+
+def mamba_mix(cfg: ArchConfig, p, x, state=None):
+    """Selective SSM (Mamba-1) via associative scan.  x: (B,S,D)."""
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    dt_rank = p['w_dt'].shape[0]
+    u, z = jnp.split(x @ p['w_in'], 2, axis=-1)       # (B,S,di) each
+    conv_state = state[0] if state is not None else None
+    u_c, conv_state = _causal_conv(u, p['conv_w'], conv_state)
+    u_c = jax.nn.silu(u_c)
+
+    bdt = u_c @ p['w_bdt']
+    b_mat = bdt[..., :n].astype(f32)                  # (B,S,N)
+    c_mat = bdt[..., n:2 * n].astype(f32)
+    dt = jax.nn.softplus(bdt[..., 2 * n:] @ p['w_dt'] + p['b_dt']).astype(f32)
+    a = -jnp.exp(p['a_log'])                          # (di,N)
+
+    a_bar = jnp.exp(dt[..., None] * a)                # (B,S,di,N)
+    bx = dt[..., None] * b_mat[..., None, :] * u_c.astype(f32)[..., None]
+
+    ssm_prev = state[1] if state is not None else None
+    if ssm_prev is not None:
+        # seed the scan with the carried state via a virtual step 0
+        bx = bx.at[:, 0].add(a_bar[:, 0] * ssm_prev)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, hs = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+    y = jnp.einsum('bsdn,bsn->bsd', hs, c_mat).astype(x.dtype)
+    y = y + u_c * p['d_skip']
+    y = y * jax.nn.silu(z)
+    return y @ p['w_out'], (conv_state, hs[:, -1])
+
+
+# ================================================================ Hymba model
+def init_hymba_block(cfg: ArchConfig, key):
+    gen = L.keygen(key)
+    dtype = cfg.dtype()
+    p, ax = {}, {}
+    p['ln1'], ax['ln1'] = L.init_norm(cfg, dtype)
+    p['attn'], ax['attn'] = L.init_attention(cfg, gen, dtype)
+    p['mamba'], ax['mamba'] = init_mamba(cfg, gen())
+    p['attn_norm'] = jnp.ones((cfg.d_model,), dtype)
+    p['mamba_norm'] = jnp.ones((cfg.d_model,), dtype)
+    ax['attn_norm'] = ('embed',)
+    ax['mamba_norm'] = ('embed',)
+    p['ln2'], ax['ln2'] = L.init_norm(cfg, dtype)
+    p['mlp'], ax['mlp'] = L.init_mlp(cfg, gen, dtype)
+    return p, ax
+
+
+def init_hymba(cfg: ArchConfig, key):
+    from .transformer import _stack_init
+    gen = L.keygen(key)
+    dtype = cfg.dtype()
+    params, axes = {}, {}
+    params['embed'], axes['embed'] = L.init_embedding(cfg, gen, dtype)
+    params['blocks'], axes['blocks'] = _stack_init(
+        lambda k: init_hymba_block(cfg, k), gen(), cfg.n_layers)
+    params['meta'] = L.mk_param(gen(), (128, cfg.d_model), None, dtype, scale=0.02)
+    axes['meta'] = (None, 'embed')
+    params['final_norm'], axes['final_norm'] = L.init_norm(cfg, dtype)
+    return params, axes
+
+
+def hymba_block(cfg, blk, x, positions, is_global, state=None, pos=None,
+                cache=None):
+    """Parallel attention + mamba heads, fused by normalised averaging."""
+    res_dt = x.dtype
+    h = L.apply_norm(cfg, blk['ln1'], x)
+    if cache is None:
+        # Traced window: global layers see everything (inf), others SWA —
+        # one attention program serves both inside the layer scan.
+        window = jnp.where(is_global, jnp.inf,
+                           jnp.float32(cfg.sliding_window))
+        attn_out = L.attention_block(cfg, blk['attn'], h, positions=positions,
+                                     causal=True, window=window)
+        new_cache = None
+    else:
+        window = None if is_global else cfg.sliding_window
+        attn_out, new_cache = L.attention_decode(cfg, blk['attn'], h, cache,
+                                                 pos=pos, window=window)
+    mamba_out, state = mamba_mix(cfg, blk['mamba'], h, state=state)
+    fused = 0.5 * (L.rms_norm(attn_out, blk['attn_norm'])
+                   + L.rms_norm(mamba_out, blk['mamba_norm']))
+    x = (x + fused).astype(res_dt)
+    h2 = L.apply_norm(cfg, blk['ln2'], x)
+    return (x + L.mlp_block(cfg, blk['mlp'], h2)).astype(res_dt), state, new_cache
+
+
+def forward_hymba(cfg: ArchConfig, params, tokens):
+    x = L.embed(cfg, params['embed'], tokens)
+    b = x.shape[0]
+    meta = jnp.broadcast_to(params['meta'][None].astype(x.dtype),
+                            (b,) + params['meta'].shape)
+    x = jnp.concatenate([meta, x], axis=1)           # prepend meta tokens
+    positions = jnp.arange(x.shape[1])
+    n_meta = params['meta'].shape[0]
+    glob = jnp.zeros((cfg.n_layers,), bool)
+    for i in cfg.global_layer_ids:
+        glob = glob.at[i].set(True)
+
+    def body(x, xs):
+        blk, is_g = xs
+        x, _, _ = hymba_block(cfg, blk, x, positions, is_g)
+        return x, None
+
+    fn = jax.checkpoint(body) if cfg.remat != 'none' else body
+    x, _ = jax.lax.scan(fn, x, (params['blocks'], glob))
+    x = L.apply_norm(cfg, params['final_norm'], x)[:, n_meta:]
+    return L.unembed(cfg, params['embed'], x)
+
+
+def init_hymba_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    """Per-layer cache list: global layers hold the full span + meta tokens,
+    SWA layers a ring buffer of the window — the point of the hybrid design
+    (O(window) memory for 29 of 32 layers even at 524k context)."""
+    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.adtype()
+    n_meta = 128
+    span = max_seq + n_meta
+    di = cfg.d_model
+    caches, axes = [], []
+    kv_ax = {'k': ('batch', 'kv_seq', 'kv_heads', 'head_dim_act'),
+             'v': ('batch', 'kv_seq', 'kv_heads', 'head_dim_act'),
+             'pos': ('kv_seq',),
+             'conv': ('batch', None, 'mlp'),
+             'ssm': ('batch', 'mlp', None)}
+    for layer in range(cfg.n_layers):
+        w = span if layer in cfg.global_layer_ids \
+            else min(cfg.sliding_window or span, span)
+        caches.append({
+            'k': jnp.zeros((batch, w, hk, hd), dt),
+            'v': jnp.zeros((batch, w, hk, hd), dt),
+            'pos': jnp.full((w,), -1, jnp.int32),
+            'conv': jnp.zeros((batch, cfg.conv_kernel - 1, di), dt),
+            'ssm': jnp.zeros((batch, di, cfg.ssm_state), f32),
+        })
+        axes.append(dict(kv_ax))
+    return caches, axes
+
+
+def hymba_decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    """One-token decode; unrolled over the 32 layers (heterogeneous caches)."""
+    x = L.embed(cfg, params['embed'], tokens)
+    pos_eff = pos + 128               # meta tokens occupy the cache prefix
+
+    new_cache = []
+    for layer in range(cfg.n_layers):
+        blk = jax.tree.map(lambda a: a[layer], params['blocks'])
+        c = cache[layer]
+        is_g = layer in cfg.global_layer_ids
+        h = L.apply_norm(cfg, blk['ln1'], x)
+        kv = {k: c[k] for k in ('k', 'v', 'pos')}
+        attn_out, kv = L.attention_decode(
+            cfg, blk['attn'], h, kv, pos=pos_eff,
+            window=None if is_g else cfg.sliding_window)
+        mamba_out, (cv, sm) = mamba_mix(cfg, blk['mamba'], h,
+                                        state=(c['conv'], c['ssm']))
+        fused = 0.5 * (L.rms_norm(attn_out, blk['attn_norm'])
+                       + L.rms_norm(mamba_out, blk['mamba_norm']))
+        x = (x + fused).astype(cfg.adtype())
+        h2 = L.apply_norm(cfg, blk['ln2'], x)
+        x = (x + L.mlp_block(cfg, blk['mlp'], h2)).astype(cfg.adtype())
+        new_cache.append({**kv, 'conv': cv, 'ssm': sm})
+
+    x = L.apply_norm(cfg, params['final_norm'], x)
+    return L.unembed(cfg, params['embed'], x), new_cache

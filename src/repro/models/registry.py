@@ -1,0 +1,173 @@
+"""Model registry: one uniform bundle per architecture family.
+
+The launchers (dryrun/train/serve), benchmarks and tests all go through
+``get_bundle(cfg)`` — models are selected by ``--arch`` name.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ArchConfig, ShapeConfig
+from . import chipmunk_net, recurrent, transformer
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable                      # key -> (params, axes)
+    loss_fn: Callable                   # (params, batch) -> scalar
+    forward: Callable                   # (params, batch) -> logits
+    init_cache: Optional[Callable]      # (batch, max_seq) -> (cache, axes)
+    decode_step: Optional[Callable]     # (params, cache, tokens, pos) -> (logits, cache)
+
+    def param_count(self, params) -> int:
+        return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+    def active_param_count(self, params) -> int:
+        """MoE: experts count at top_k/E weight; used for MODEL_FLOPS=6*N_active*D."""
+        total = self.param_count(params)
+        if self.cfg.moe is None:
+            return total
+        m = self.cfg.moe
+        expert = 0
+        if isinstance(params, dict) and 'blocks' in params:
+            moe_p = params['blocks'].get('moe')
+            if moe_p is not None:
+                expert = sum(int(np.prod(p.shape)) for k, p in moe_p.items()
+                             if k != 'router')
+        return total - expert + int(expert * m.top_k / m.n_experts)
+
+
+# ------------------------------------------------------------------- builders
+def _lm_bundle(cfg: ArchConfig) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(transformer.init_lm, cfg),
+        loss_fn=functools.partial(transformer.loss_fn, cfg),
+        forward=lambda p, batch: transformer.forward_lm(
+            cfg, p, batch['tokens'], source=batch.get('source'))[0],
+        init_cache=functools.partial(transformer.init_cache, cfg),
+        decode_step=functools.partial(transformer.decode_step, cfg),
+    )
+
+
+def _xlstm_bundle(cfg: ArchConfig) -> ModelBundle:
+    def loss(p, batch):
+        logits, _ = recurrent.forward_xlstm(cfg, p, batch['tokens'])
+        from .layers import softmax_xent
+        return softmax_xent(logits, batch['labels'])
+
+    def fwd(p, batch):
+        return recurrent.forward_xlstm(cfg, p, batch['tokens'])[0]
+
+    def decode(p, states, tokens, pos):
+        logits, states = recurrent.forward_xlstm(cfg, p, tokens, states=states)
+        return logits, states
+
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(recurrent.init_xlstm, cfg),
+        loss_fn=loss, forward=fwd,
+        init_cache=lambda b, s: recurrent.init_xlstm_state(cfg, b),
+        decode_step=decode,
+    )
+
+
+def _hymba_bundle(cfg: ArchConfig) -> ModelBundle:
+    def loss(p, batch):
+        logits = recurrent.forward_hymba(cfg, p, batch['tokens'])
+        from .layers import softmax_xent
+        return softmax_xent(logits, batch['labels'])
+
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(recurrent.init_hymba, cfg),
+        loss_fn=loss,
+        forward=lambda p, batch: recurrent.forward_hymba(cfg, p, batch['tokens']),
+        init_cache=functools.partial(recurrent.init_hymba_cache, cfg),
+        decode_step=functools.partial(recurrent.hymba_decode_step, cfg),
+    )
+
+
+def _chipmunk_bundle(cfg: ArchConfig) -> ModelBundle:
+    def decode(p, states, frames, pos):
+        return chipmunk_net.stream_step(cfg, p, states, frames)
+
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(chipmunk_net.init, cfg),
+        loss_fn=functools.partial(chipmunk_net.loss_fn, cfg),
+        forward=lambda p, batch: chipmunk_net.forward(cfg, p, batch['frames']),
+        init_cache=lambda b, s: chipmunk_net.init_state(cfg, b),
+        decode_step=decode,
+    )
+
+
+def get_bundle(cfg: ArchConfig) -> ModelBundle:
+    if cfg.family == 'lstm':
+        return _chipmunk_bundle(cfg)
+    if cfg.family == 'ssm':
+        return _xlstm_bundle(cfg)
+    if cfg.family == 'hybrid':
+        return _hymba_bundle(cfg)
+    return _lm_bundle(cfg)          # dense | moe | audio | vlm
+
+
+# --------------------------------------------------------------- input specs
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this (arch, shape).
+
+    Train/prefill: token batch (+ stub frontend embeddings for audio/vlm).
+    Decode: one new token (+ pos); the cache is produced by init_cache.
+    """
+    b = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ('train', 'prefill'):
+        s = shape.seq_len
+        batch = {'tokens': sds((b, s), jnp.int32)}
+        if shape.kind == 'train':
+            batch['labels'] = sds((b, s), jnp.int32)
+        if cfg.family == 'audio':
+            batch['source'] = sds((b, cfg.n_source_tokens, cfg.d_model), f32)
+        if cfg.family == 'vlm':
+            batch['source'] = sds((b, cfg.n_source_tokens, cfg.d_model), f32)
+        if cfg.family == 'lstm':
+            # 10 ms MFCC frames; seq_len frames of 123 coefficients
+            batch = {'frames': sds((b, s, cfg.lstm_inputs), f32)}
+            if shape.kind == 'train':
+                batch.update({
+                    'labels': sds((b, s // 8), jnp.int32),
+                    'frame_len': sds((b,), jnp.int32),
+                    'label_len': sds((b,), jnp.int32)})
+        return batch
+    # decode
+    if cfg.family == 'lstm':
+        return {'frames': sds((b, 1, cfg.lstm_inputs), f32),
+                'pos': sds((), jnp.int32)}
+    return {'tokens': sds((b, 1), jnp.int32), 'pos': sds((), jnp.int32)}
+
+
+def batch_axes(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Logical sharding axes matching input_specs."""
+    if cfg.family == 'lstm':
+        if shape.kind == 'train':
+            return {'frames': ('batch', 'seq', None),
+                    'labels': ('batch', None),
+                    'frame_len': ('batch',), 'label_len': ('batch',)}
+        return {'frames': ('batch', None, None), 'pos': ()}
+    ax: Dict[str, Any] = {'tokens': ('batch', 'seq')}
+    if shape.kind == 'train':
+        ax['labels'] = ('batch', 'seq')
+    if cfg.family in ('audio', 'vlm') and shape.kind in ('train', 'prefill'):
+        ax['source'] = ('batch', 'frames', 'embed')
+    if shape.kind == 'decode':
+        ax = {'tokens': ('batch', None), 'pos': ()}
+    return ax

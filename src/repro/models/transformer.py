@@ -1,0 +1,293 @@
+"""Decoder-only LM (dense / MoE / VLM cross-attn) + encoder-decoder (audio).
+
+Layers are scanned (stacked params) so 61-100 layer graphs lower quickly at
+512 devices.  VLM interleaving (1 cross layer per N) scans over *groups* of
+(N-1 self + 1 cross) layers, keeping the stack homogeneous.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ArchConfig
+from ..sharding import logical
+from . import layers as L
+
+f32 = jnp.float32
+
+
+# ------------------------------------------------------------------ init
+def _init_block(cfg: ArchConfig, key, cross: bool = False):
+    gen = L.keygen(key)
+    dtype = cfg.dtype()
+    p, ax = {}, {}
+    p['ln1'], ax['ln1'] = L.init_norm(cfg, dtype)
+    p['attn'], ax['attn'] = L.init_attention(cfg, gen, dtype, cross=cross)
+    p['ln2'], ax['ln2'] = L.init_norm(cfg, dtype)
+    if cfg.moe is not None:
+        p['moe'], ax['moe'] = L.init_moe(cfg, gen, dtype)
+    else:
+        p['mlp'], ax['mlp'] = L.init_mlp(cfg, gen, dtype)
+    return p, ax
+
+
+def _stack_init(init_fn, key, n):
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(keys[0])
+    axes = jax.tree.map(lambda a: ('layers',) + a, axes,
+                        is_leaf=lambda v: isinstance(v, tuple) and all(
+                            x is None or isinstance(x, str) for x in v))
+    return params, axes
+
+
+def init_lm(cfg: ArchConfig, key):
+    gen = L.keygen(key)
+    dtype = cfg.dtype()
+    params: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    params['embed'], axes['embed'] = L.init_embedding(cfg, gen, dtype)
+    if cfg.cross_attn_every:                     # vlm: groups of (N-1 self + 1 cross)
+        per, n_groups = cfg.cross_attn_every, cfg.n_layers // cfg.cross_attn_every
+        params['blocks'], axes['blocks'] = _stack_init(
+            lambda k: _stack_init(lambda kk: _init_block(cfg, kk), k, per - 1),
+            gen(), n_groups)
+        params['cross'], axes['cross'] = _stack_init(
+            lambda k: _init_block(cfg, k, cross=True), gen(), n_groups)
+    else:
+        params['blocks'], axes['blocks'] = _stack_init(
+            lambda k: _init_block(cfg, k), gen(), cfg.n_layers)
+    if cfg.n_encoder_layers:                     # audio enc-dec
+        params['enc_blocks'], axes['enc_blocks'] = _stack_init(
+            lambda k: _init_block(cfg, k), gen(), cfg.n_encoder_layers)
+        params['enc_cross'], axes['enc_cross'] = _stack_init(
+            lambda k: _init_block(cfg, k, cross=True), gen(), cfg.n_layers)
+        params['enc_norm'], axes['enc_norm'] = L.init_norm(cfg, dtype)
+    params['final_norm'], axes['final_norm'] = L.init_norm(cfg, dtype)
+    return params, axes
+
+
+# ------------------------------------------------------------------ blocks
+def _self_block(cfg, p, x, positions, window):
+    dt = x.dtype
+    h = L.apply_norm(cfg, p['ln1'], x)
+    x = (x + L.attention_block(cfg, p['attn'], h, positions=positions,
+                               causal=True, window=window)).astype(dt)
+    h = L.apply_norm(cfg, p['ln2'], x)
+    if cfg.moe is not None:
+        y, aux = L.moe_block(cfg, p['moe'], h)
+    else:
+        y, aux = L.mlp_block(cfg, p['mlp'], h), 0.0
+    return (x + y).astype(dt), aux
+
+
+def _cross_block(cfg, p, x, source):
+    dt = x.dtype
+    h = L.apply_norm(cfg, p['ln1'], x)
+    x = (x + L.attention_block(cfg, p['attn'], h, positions=None,
+                               causal=False, kv_src=source, cross=True)
+         ).astype(dt)
+    h = L.apply_norm(cfg, p['ln2'], x)
+    if cfg.moe is not None:
+        y, aux = L.moe_block(cfg, p['moe'], h)
+    else:
+        y, aux = L.mlp_block(cfg, p['mlp'], h), 0.0
+    return (x + y).astype(dt), aux
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == 'none':
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat == 'dots' else None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _encoder(cfg, params, frames):
+    """Audio encoder over stub frame embeddings (B, F, D): bidirectional."""
+    x = frames.astype(cfg.adtype())
+    pos = jnp.arange(x.shape[1])
+
+    def body(x, blk):
+        dt = x.dtype
+        h = L.apply_norm(cfg, blk['ln1'], x)
+        x = (x + L.attention_block(cfg, blk['attn'], h, positions=pos,
+                                   causal=False)).astype(dt)
+        h = L.apply_norm(cfg, blk['ln2'], x)
+        return (x + L.mlp_block(cfg, blk['mlp'], h)).astype(dt), None
+
+    x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params['enc_blocks'])
+    return L.apply_norm(cfg, params['enc_norm'], x)
+
+
+def forward_lm(cfg: ArchConfig, params, tokens, source: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (train / prefill).  Returns (logits, aux_loss).
+
+    source: stub frontend embeddings — audio frames or image patches (B,F,D).
+    """
+    x = L.embed(cfg, params['embed'], tokens)
+    positions = jnp.arange(tokens.shape[1])
+    window = cfg.sliding_window
+    aux_total = 0.0
+
+    if cfg.n_encoder_layers:
+        enc = _encoder(cfg, params, source)
+
+        def body(x, blks):
+            blk, xblk = blks
+            x, aux = _self_block(cfg, blk, x, positions, window)
+            x2, aux2 = _cross_block(cfg, xblk, x, enc)
+            return x2, aux + aux2
+
+        x, auxs = jax.lax.scan(_maybe_remat(cfg, body), x,
+                               (params['blocks'], params['enc_cross']))
+        aux_total = jnp.sum(auxs)
+    elif cfg.cross_attn_every:
+        src = source.astype(cfg.adtype())
+
+        def body(x, blks):
+            group, xblk = blks
+            aux = 0.0
+            for i in range(cfg.cross_attn_every - 1):
+                blk_i = jax.tree.map(lambda a: a[i], group)
+                x, a = _self_block(cfg, blk_i, x, positions, window)
+                aux += a
+            x, a = _cross_block(cfg, xblk, x, src)
+            return x, aux + a
+
+        x, auxs = jax.lax.scan(_maybe_remat(cfg, body), x,
+                               (params['blocks'], params['cross']))
+        aux_total = jnp.sum(auxs)
+    else:
+        def body(x, blk):
+            return _self_block(cfg, blk, x, positions, window)
+
+        x, auxs = jax.lax.scan(_maybe_remat(cfg, body), x, params['blocks'])
+        aux_total = jnp.sum(auxs)
+
+    x = L.apply_norm(cfg, params['final_norm'], x)
+    return L.unembed(cfg, params['embed'], x), aux_total
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    logits, aux = forward_lm(cfg, params, batch['tokens'],
+                             source=batch.get('source'))
+    return L.softmax_xent(logits, batch['labels']) + 0.01 * aux
+
+
+# ------------------------------------------------------------------ serving
+def _cache_window(cfg, layer_id, max_seq):
+    if cfg.sliding_window is None:
+        return max_seq
+    return max_seq if layer_id in cfg.global_layer_ids \
+        else min(cfg.sliding_window, max_seq)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    """KV cache pytree (+ logical axes).  Ring-buffered for SWA layers."""
+    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.adtype()
+    w = min(cfg.sliding_window or max_seq, max_seq)
+    n = cfg.n_layers
+    if cfg.cross_attn_every:
+        n = cfg.n_layers - cfg.n_layers // cfg.cross_attn_every
+    cache = {
+        'k': jnp.zeros((n, batch, w, hk, hd), dt),
+        'v': jnp.zeros((n, batch, w, hk, hd), dt),
+        'pos': jnp.full((n, w), -1, jnp.int32),
+    }
+    axes = {'k': ('layers', 'batch', 'kv_seq', 'kv_heads', 'head_dim_act'),
+            'v': ('layers', 'batch', 'kv_seq', 'kv_heads', 'head_dim_act'),
+            'pos': ('layers', 'kv_seq')}
+    return cache, axes
+
+
+def precompute_cross_kv(cfg, params, source):
+    """Encoder/image K,V per cross layer — computed once per request."""
+    if cfg.n_encoder_layers:
+        src = _encoder(cfg, params, source)
+        blocks = params['enc_cross']
+    elif cfg.cross_attn_every:
+        src = source.astype(cfg.adtype())
+        blocks = params['cross']
+    else:
+        return None
+
+    def kv_of(blk):
+        k = jnp.einsum('bfd,dhk->bfhk', src, blk['attn']['wk'])
+        v = jnp.einsum('bfd,dhk->bfhk', src, blk['attn']['wv'])
+        return k, v
+
+    return jax.lax.map(kv_of, blocks)
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos,
+                cross_kv=None):
+    """One decode step.  tokens: (B, 1); pos: scalar int32.  Returns
+    (logits (B, 1, V), new cache)."""
+    x = L.embed(cfg, params['embed'], tokens)
+    window = cfg.sliding_window
+
+    def self_body(x, blk_cache):
+        blk, c = blk_cache
+        h = L.apply_norm(cfg, blk['ln1'], x)
+        o, c = L.attention_decode(cfg, blk['attn'], h, c, pos=pos,
+                                  window=window)
+        x = (x + o).astype(cfg.adtype())
+        h = L.apply_norm(cfg, blk['ln2'], x)
+        if cfg.moe is not None:
+            y, _ = L.moe_block(cfg, blk['moe'], h)
+        else:
+            y = L.mlp_block(cfg, blk['mlp'], h)
+        return (x + y).astype(cfg.adtype()), c
+
+    if cfg.cross_attn_every:
+        per = cfg.cross_attn_every
+        n_groups = cfg.n_layers // per
+
+        def body(x, xs):
+            group, xblk, c_group, ckv = xs
+            new_c = []
+            for i in range(per - 1):
+                blk_i = jax.tree.map(lambda a: a[i], group)
+                c_i = jax.tree.map(lambda a: a[i], c_group)
+                x, c_i = self_body(x, (blk_i, c_i))
+                new_c.append(c_i)
+            h = L.apply_norm(cfg, xblk['ln1'], x)
+            o, _ = L.attention_decode(cfg, xblk['attn'], h, None, pos=pos,
+                                      cross_kv=ckv)
+            x = (x + o).astype(cfg.adtype())
+            h = L.apply_norm(cfg, xblk['ln2'], x)
+            x = (x + L.mlp_block(cfg, xblk['mlp'], h)).astype(cfg.adtype())
+            c_group = jax.tree.map(lambda *xs_: jnp.stack(xs_), *new_c)
+            return x, c_group
+
+        c_grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, per - 1) + a.shape[1:]), cache)
+        x, new_cache = jax.lax.scan(
+            body, x, (params['blocks'], params['cross'], c_grouped, cross_kv))
+        new_cache = jax.tree.map(
+            lambda a: a.reshape((n_groups * (per - 1),) + a.shape[2:]), new_cache)
+    elif cfg.n_encoder_layers:
+        def body(x, xs):
+            blk, xblk, c, ckv = xs
+            x, c = self_body(x, (blk, c))
+            h = L.apply_norm(cfg, xblk['ln1'], x)
+            o, _ = L.attention_decode(cfg, xblk['attn'], h, None, pos=pos,
+                                      cross_kv=ckv)
+            x = (x + o).astype(cfg.adtype())
+            h = L.apply_norm(cfg, xblk['ln2'], x)
+            x = (x + L.mlp_block(cfg, xblk['mlp'], h)).astype(cfg.adtype())
+            return x, c
+
+        x, new_cache = jax.lax.scan(
+            body, x, (params['blocks'], params['enc_cross'], cache, cross_kv))
+    else:
+        x, new_cache = jax.lax.scan(self_body, x, (params['blocks'], cache))
+
+    x = L.apply_norm(cfg, params['final_norm'], x)
+    return L.unembed(cfg, params['embed'], x), new_cache

@@ -1,0 +1,7 @@
+"""Optimizers, LR schedules, gradient clipping + compression (from scratch)."""
+from .compress import (compress_tensor, compress_with_feedback,
+                       decompress_tensor, init_error_state, psum_compressed)
+from .optimizers import (AdafactorState, AdamWState, Optimizer, SGDState,
+                         adafactor, adamw, apply_updates, clip_by_global_norm,
+                         cosine_schedule, global_norm, make_optimizer,
+                         optimizer_state_axes, sgd, wsd_schedule)

@@ -1,0 +1,70 @@
+"""Gradient compression for the data-parallel axis — int8 + error feedback.
+
+Distributed-optimization trick for 1000+ node scale: the DP all-reduce of a
+1T-param model moves 2 TB/step in bf16.  Quantizing gradients to int8 with
+per-tensor scales quarters that; the residual (quantization error) is carried
+into the next step (error feedback, 1-bit-Adam style) so convergence is
+preserved.  Used inside shard_map on the ('pod','data') axes — see
+launch/train.py.  Chipmunk analogy: 8-bit state exchange between engines (C2).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
+
+
+def compress_tensor(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """g -> (int8 codes, scale).  Symmetric per-tensor abs-max."""
+    g = g.astype(f32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_tensor(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(f32) * scale
+
+
+def compress_with_feedback(grads, err_state):
+    """Returns (codes, scales, new_err).  new_err = (g + err) - dequant."""
+    def one(g, e):
+        corrected = g.astype(f32) + e
+        q, s = compress_tensor(corrected)
+        return q, s, corrected - decompress_tensor(q, s)
+
+    out = jax.tree.map(one, grads, err_state)
+    outer = jax.tree.structure(grads)
+    inner = jax.tree.structure((0, 0, 0))
+    return jax.tree.transpose(outer, inner, out)
+
+
+def psum_compressed(grads, err_state, axis_names):
+    """int8 all-reduce with error feedback, inside shard_map.
+
+    The int32 sum of int8 codes is exact (no overflow below ~16M replicas),
+    dequantised with the mean of scales — an unbiased contraction when
+    per-replica scales are close, with the residual swallowed by feedback.
+    """
+    codes, scales, new_err = compress_with_feedback(grads, err_state)
+    summed = jax.tree.map(
+        lambda q: jax.lax.psum(q.astype(jnp.int32), axis_names), codes)
+    scale_sum = jax.tree.map(lambda s: jax.lax.psum(s, axis_names), scales)
+    reduced = jax.tree.map(
+        lambda q, s: q.astype(f32) * (s / _axis_size(axis_names)), summed,
+        scale_sum)
+    return reduced, new_err
+
+
+def _axis_size(axis_names):
+    import numpy as np
+    if isinstance(axis_names, str):
+        return jax.lax.axis_size(axis_names)
+    return int(np.prod([jax.lax.axis_size(a) for a in axis_names]))

@@ -1,0 +1,207 @@
+"""Self-contained optimizers (no optax in this environment): SGD-momentum,
+AdamW, and Adafactor (factored second moments — required to fit the 1T-param
+MoE's optimizer state on 512 chips), plus LR schedules (cosine + the WSD
+schedule MiniCPM trains with) and global-norm clipping.
+
+API mirrors optax: ``opt.init(params) -> state``; ``opt.update(grads, state,
+params) -> (updates, state)``; apply with ``apply_updates``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(f32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+# ------------------------------------------------------------------ schedules
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, f32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): flat LR for most of
+    training, then a sharp exponential-ish decay over the last decay_frac."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, f32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+        decay = peak_lr * jnp.exp(jnp.log(final_frac) * t)
+        stable = jnp.where(step >= decay_start, decay, peak_lr)
+        return jnp.where(step < warmup, warm, stable)
+    return lr
+
+
+# ----------------------------------------------------------------- optimizers
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw(lr: Callable, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, f32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params), jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(f32),
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2)
+                         * jnp.square(g.astype(f32)), state.v, grads)
+        bc1 = 1 - b1 ** step.astype(f32)
+        bc2 = 1 - b2 ** step.astype(f32)
+        lr_t = lr(step)
+
+        def upd(mm, vv, p):
+            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            return -lr_t * (u + weight_decay * p.astype(f32))
+
+        return jax.tree.map(upd, m, v, params), AdamWState(step, m, v)
+
+    return Optimizer(init, update)
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any       # row second moments (or full v for <2D params)
+    vc: Any
+
+
+def adafactor(lr: Callable, eps=1e-30, clip_threshold=1.0,
+              decay_rate=0.8, weight_decay=0.0) -> Optimizer:
+    """Factored Adam (Shazeer & Stern): O(n+m) state for (n, m) matrices.
+
+    Factors the *last two* dims of >=2-D params (stacked layer weights keep
+    their leading dims unfactored, matching t5x behaviour).
+    """
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vrow(p):
+            return jnp.zeros(p.shape[:-1], f32) if _factored(p) \
+                else jnp.zeros(p.shape, f32)
+
+        def vcol(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], f32) if _factored(p) \
+                else jnp.zeros((), f32)
+
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree.map(vrow, params),
+                              jax.tree.map(vcol, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        beta = 1.0 - step.astype(f32) ** -decay_rate
+        lr_t = lr(step)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(f32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr_n = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc_n = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr_n, axis=-1, keepdims=True), eps)
+                row_factor = jax.lax.rsqrt(vr_n / denom)     # (..., R)
+                col_factor = jax.lax.rsqrt(vc_n)             # (..., C)
+                u = g * row_factor[..., None] * col_factor[..., None, :]
+            else:
+                vr_n = beta * vr + (1 - beta) * g2
+                vc_n = vc
+                u = g * jax.lax.rsqrt(vr_n)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            upd_ = -lr_t * u
+            if weight_decay:
+                upd_ = upd_ - lr_t * weight_decay * p.astype(f32)
+            return upd_, vr_n, vc_n
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        # transpose tree-of-(u, vr, vc) -> (tree, tree, tree); robust to
+        # NamedTuple param containers (plain is_leaf=tuple checks are not).
+        outer = jax.tree.structure(params)
+        inner = jax.tree.structure((0, 0, 0))
+        updates, vr, vc = jax.tree.transpose(outer, inner, out)
+        return updates, AdafactorState(step, vr, vc)
+
+    return Optimizer(init, update)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    mom: Any
+
+
+def sgd(lr: Callable, momentum=0.9) -> Optimizer:
+    def init(params):
+        return SGDState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        mom = jax.tree.map(lambda m, g: momentum * m + g.astype(f32),
+                           state.mom, grads)
+        lr_t = lr(step)
+        return jax.tree.map(lambda m: -lr_t * m, mom), SGDState(step, mom)
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr_fn: Callable) -> Optimizer:
+    return {'adamw': adamw, 'adafactor': adafactor, 'sgd': sgd}[name](lr_fn)
+
+
+def optimizer_state_axes(name: str, param_axes):
+    """Logical axes for optimizer state (inherits the param sharding — ZeRO)."""
+    scalar = ()
+    if name == 'adamw':
+        return AdamWState(scalar, param_axes, param_axes)
+    if name == 'adafactor':
+        drop_last = jax.tree.map(
+            lambda a: a[:-1] if len(a) >= 2 else a, param_axes,
+            is_leaf=lambda v: isinstance(v, tuple) and all(
+                x is None or isinstance(x, str) for x in v))
+        drop_row = jax.tree.map(
+            lambda a: a[:-2] + a[-1:] if len(a) >= 2 else (), param_axes,
+            is_leaf=lambda v: isinstance(v, tuple) and all(
+                x is None or isinstance(x, str) for x in v))
+        return AdafactorState(scalar, drop_last, drop_row)
+    if name == 'sgd':
+        return SGDState(scalar, param_axes)
+    raise ValueError(name)

@@ -1,0 +1,150 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step *per chip*:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_operand_bytes_per_chip / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the post-SPMD per-device
+module).  Collective bytes are NOT in cost_analysis: we parse the optimized
+HLO text and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute / ragged-all-to-all op.
+Ring-algorithm factors (~2x for all-reduce) are not modelled; terms are
+lower bounds, consistent across configurations (what the hillclimb needs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+from .launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    'pred': 1, 's8': 1, 'u8': 1, 'f8e4m3fn': 1, 'f8e5m2': 1,
+    's16': 2, 'u16': 2, 'bf16': 2, 'f16': 2,
+    's32': 4, 'u32': 4, 'f32': 4,
+    's64': 8, 'u64': 8, 'f64': 8, 'c64': 8, 'c128': 16,
+}
+
+COLLECTIVE_OPS = ('all-gather', 'all-reduce', 'reduce-scatter', 'all-to-all',
+                  'collective-permute', 'ragged-all-to-all')
+
+_SHAPE_RE = re.compile(r'\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]')
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(','):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from (post-SPMD) HLO text."""
+    totals = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # match only op definitions: "%name = type[shape] op-name(operands...)"
+        m = re.match(r'%?[\w.\-]+\s*=\s*[^=]*?\b([a-z\-]+)\(', stripped)
+        if not m:
+            continue
+        op = m.group(1)
+        kind = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op == c + '-start' or op == c + '-done':
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith('-done'):
+            continue  # counted at -start
+        # operand shapes appear inside the parens; result shape before the '='
+        paren = stripped[stripped.index('('):]
+        for dm in _SHAPE_RE.finditer(paren):
+            totals[kind] += _shape_bytes(dm.group(1), dm.group(2))
+    return totals
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-chip HLO flops
+    hbm_bytes: float             # per-chip HLO bytes accessed
+    collective_bytes: float      # per-chip collective operand bytes
+    per_collective: Dict[str, int]
+    model_flops: Optional[float] = None   # 6*N*D (dense) / 6*N_active*D (MoE)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {'compute': self.compute_s, 'memory': self.memory_s,
+                 'collective': self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound_s(self) -> float:
+        # no-overlap upper bound is the sum; perfect overlap is the max
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        if not self.model_flops or not self.flops:
+            return None
+        return self.model_flops / self.flops
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """MFU-like score: useful-compute time / achievable step time."""
+        if not self.model_flops:
+            return None
+        ideal = self.model_flops / PEAK_FLOPS_BF16
+        return ideal / self.step_time_lower_bound_s \
+            if self.step_time_lower_bound_s else None
+
+    def to_dict(self) -> Dict:
+        return {
+            'flops': self.flops, 'hbm_bytes': self.hbm_bytes,
+            'collective_bytes': self.collective_bytes,
+            'per_collective': self.per_collective,
+            'model_flops': self.model_flops,
+            'compute_s': self.compute_s, 'memory_s': self.memory_s,
+            'collective_s': self.collective_s, 'bottleneck': self.bottleneck,
+            'useful_flops_fraction': self.useful_flops_fraction,
+            'roofline_fraction': self.roofline_fraction,
+        }
+
+
+def analyze(compiled, model_flops_per_chip: Optional[float] = None
+            ) -> RooflineTerms:
+    """Derive terms from a compiled (SPMD-partitioned) executable.
+
+    Uses the trip-count-weighted HLO walker (repro.hlo_cost) because XLA's
+    cost_analysis counts while-loop bodies once — scanned layers/microbatches
+    would otherwise under-report FLOPs and collective bytes by 10-500x
+    (validated in tests/test_roofline.py).
+    """
+    from .hlo_cost import HloCostModel
+    model = HloCostModel(compiled.as_text())
+    cost = model.entry_cost()
+    per = {k: int(v) for k, v in cost.coll.items()}
+    return RooflineTerms(
+        flops=float(cost.flops), hbm_bytes=float(cost.bytes),
+        collective_bytes=float(sum(per.values())),
+        per_collective=per, model_flops=model_flops_per_chip)

@@ -1,0 +1,1 @@
+from .fault import FaultConfig, FaultTolerantRunner, StepTimer

@@ -1,0 +1,197 @@
+"""Logical-axis sharding rules (MaxText-style) + parameter placement.
+
+Model code annotates activations with *logical* axis names via ``logical(x, ...)``
+and parameters carry logical axes in their initializers.  A ``ShardingRules``
+context maps logical names to mesh axes; the dry-run / train / serve drivers
+install the rules for their mesh and shape-kind.
+
+The LM stack uses jit + sharding constraints (GSPMD), which tolerates non-divisible
+dims by padding (40 heads on a 16-way axis, vocab 122753, 8 experts on 32-way EP).
+The chipmunk systolic core instead uses exact-tiled shard_map (core/systolic.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+# Logical axis vocabulary used across the model zoo.
+#   batch      — global batch                   (DP: pod+data)
+#   seq        — sequence/time                  (SP when enabled)
+#   embed      — d_model residual stream        (FSDP dim for weights)
+#   heads      — attention query heads          (TP)
+#   kv_heads   — attention kv heads             (TP)
+#   head_dim   — per-head feature dim
+#   mlp        — FFN hidden dim                 (TP)
+#   vocab      — embedding/logits vocabulary    (TP)
+#   experts    — MoE expert dim                 (EP: pod+data)
+#   expert_mlp — expert FFN hidden              (TP)
+#   state      — recurrent state dim            (TP)
+#   frames     — audio/image source positions
+#   stage      — pipeline stage (core/pipeline.py only)
+
+TRAIN_RULES: Dict[str, MeshAxes] = {
+    'batch': ('pod', 'data'),
+    'seq': None,
+    'embed': ('pod', 'data'),       # FSDP shard of params on the embed dim
+    'heads': 'model',
+    'kv_heads': 'model',
+    'head_dim': 'model',            # fallback TP dim when head counts don't divide
+    'mlp': 'model',
+    'vocab': 'model',
+    'experts': ('pod', 'data'),     # expert parallelism
+    'expert_mlp': 'model',
+    'state': 'model',
+    'frames': None,
+    'lstm_row': 'model',            # chipmunk systolic: output-row tiling
+    'lstm_col': ('pod', 'data'),    # chipmunk systolic: input-column tiling
+    # Attention activation policy (set per-arch by rules_for_arch):
+    #   kv-heads divide TP  -> classic head-sharded attention
+    #   otherwise           -> context parallelism: q seq sharded, K/V
+    #                          replicated, scores local (no all-reduce)
+    'seq_q': None,
+    'kv_seq': None,
+    'head_dim_act': None,           # NEVER shard the score contraction dim
+    # MoE expert-buffer capacity dim: sharding it over TP keeps every
+    # expert GEMM contraction local (no Megatron down-proj all-reduce) and
+    # divides the dispatch all-to-all by the TP degree.
+    'moe_cap': 'model',
+}
+
+
+def rules_for_arch(base: Dict[str, MeshAxes], n_kv_heads: int,
+                   tp_size: int = 16, family: str = '') -> Dict[str, MeshAxes]:
+    """Specialise the policy for an architecture (see above)."""
+    r = dict(base)
+    if n_kv_heads % tp_size != 0:
+        r['seq_q'] = 'model'        # context-parallel scores
+        r['kv_seq'] = 'model'       # flash-decoding-style cache split
+    if family == 'lstm':
+        # A 3.8M-param LSTM cannot use 16-way TP on a production mesh
+        # (421 hidden units shard nowhere) — without this, all 16 model
+        # ranks redundantly compute the same batch (measured useful-flops
+        # fraction 0.062).  Run pure DP over the whole mesh; the paper's
+        # C3 tiling runs on the exact-geometry mesh (dryrun --systolic).
+        r['batch'] = ('pod', 'data', 'model')
+    return r
+
+# Inference: no FSDP on embed (weights stay TP-sharded; gathering weights per
+# token would dominate decode), batch over DP, experts over EP.
+SERVE_RULES: Dict[str, MeshAxes] = {
+    **TRAIN_RULES,
+    'embed': None,
+}
+
+# Serving very large models (kimi-k2 1T, llama-90b-vision): weights must also
+# shard over the data axes or they cannot fit (2 TB bf16 / 16-way TP = 128 GB).
+SERVE_BIG_RULES: Dict[str, MeshAxes] = {
+    **SERVE_RULES,
+    'embed': ('pod', 'data'),
+}
+
+
+class ShardingRules:
+    def __init__(self, mesh: Optional[Mesh], rules: Dict[str, MeshAxes]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def spec(self, axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """Logical axes -> PartitionSpec.
+
+        Greedy left-to-right assignment with two constraints jit arguments
+        demand: (a) each mesh axis used at most once per spec; (b) when
+        ``shape`` is given, a dim only claims the longest *prefix* of its
+        candidate mesh axes whose size product divides the dim.  Combined with
+        fallback rules (e.g. head_dim -> model) this shards 40-head GQA,
+        odd vocabularies, 8-expert MoE etc. without manual per-arch specs.
+        """
+        used = set()
+        out = []
+        dims = list(shape) if shape is not None else [None] * len(axes)
+        for a, dim in zip(axes, dims):
+            v = self.rules.get(a) if a else None
+            if v is None:
+                out.append(None)
+                continue
+            cand = [(v,) if isinstance(v, str) else tuple(v)][0]
+            avail = [m for m in cand if m not in used]
+            if self.mesh is not None:
+                sizes = dict(zip(self.mesh.axis_names,
+                                 self.mesh.devices.shape))
+            else:
+                sizes = {}
+            best: Tuple[str, ...] = ()
+            prod = 1
+            cur = []
+            for m in avail:
+                cur.append(m)
+                prod *= sizes.get(m, 1)
+                if dim is None or (prod > 0 and dim % prod == 0):
+                    best = tuple(cur)
+            if best:
+                used.update(best)
+                out.append(best if len(best) > 1 else best[0])
+            else:
+                out.append(None)
+        return P(*out)
+
+    def sharding(self, axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None
+                 ) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+
+_CTX = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_CTX, 'rules', None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = current_rules()
+    _CTX.rules = rules
+    try:
+        yield rules
+    finally:
+        _CTX.rules = prev
+
+
+def logical(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain activation sharding by logical axis names (no-op w/o rules)."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, r.sharding(axes, x.shape))
+
+
+def _is_axes_leaf(v) -> bool:
+    return isinstance(v, tuple) and all(
+        a is None or isinstance(a, str) for a in v)
+
+
+def param_sharding_tree(param_axes, params_shaped, mesh: Mesh,
+                        rules: Dict[str, MeshAxes]):
+    """Map pytrees of (logical axes, shaped arrays) to NamedShardings.
+
+    Shapes are needed for the divisibility-aware assignment (jit argument
+    shardings must divide exactly — GSPMD padding applies only to internal
+    constraints)."""
+    r = ShardingRules(mesh, rules)
+    flat_axes = jax.tree.leaves(param_axes, is_leaf=_is_axes_leaf)
+    flat_shapes = jax.tree.leaves(params_shaped)
+    assert len(flat_axes) == len(flat_shapes), 'axes/param tree mismatch'
+    shardings = [r.sharding(a, s.shape) for a, s in zip(flat_axes, flat_shapes)]
+    treedef = jax.tree.structure(params_shaped)
+    return jax.tree.unflatten(treedef, shardings)

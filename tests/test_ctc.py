@@ -1,0 +1,102 @@
+"""CTC loss: brute-force path enumeration oracle + properties."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ctc
+
+
+def _collapse(path, blank=0):
+    out = []
+    prev = None
+    for s in path:
+        if s != prev and s != blank:
+            out.append(s)
+        prev = s
+    return tuple(out)
+
+
+def _brute_force_nll(log_probs, label, blank=0):
+    """Sum probability over every alignment that collapses to `label`."""
+    T, K = log_probs.shape
+    total = -np.inf
+    for path in itertools.product(range(K), repeat=T):
+        if _collapse(path, blank) == tuple(label):
+            lp = sum(log_probs[t, s] for t, s in enumerate(path))
+            total = np.logaddexp(total, lp)
+    return -total
+
+
+def _rand_logprobs(key, T, B, K):
+    logits = jax.random.normal(key, (T, B, K))
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+@pytest.mark.parametrize('T,K,label', [(3, 3, [1]), (4, 3, [1, 2]),
+                                       (5, 4, [2, 2]), (4, 3, []),
+                                       (5, 3, [1, 2, 1])])
+def test_ctc_matches_brute_force(T, K, label):
+    lp = _rand_logprobs(jax.random.PRNGKey(hash((T, K, len(label))) % 2**31), T, 1, K)
+    L = max(len(label), 1)
+    labels = jnp.zeros((1, L), jnp.int32).at[0, :len(label)].set(jnp.array(label, jnp.int32))
+    nll = ctc.ctc_loss(lp, labels, jnp.array([T]), jnp.array([len(label)]))
+    ref = _brute_force_nll(np.asarray(lp[:, 0]), label)
+    np.testing.assert_allclose(nll[0], ref, rtol=1e-4, atol=1e-4)
+
+
+def test_ctc_batch_consistency():
+    """Batched loss == per-sequence loss (masking across ragged lengths)."""
+    key = jax.random.PRNGKey(0)
+    T, B, K, L = 8, 4, 5, 3
+    lp = _rand_logprobs(key, T, B, K)
+    labels = jax.random.randint(jax.random.PRNGKey(1), (B, L), 1, K)
+    in_lens = jnp.array([8, 6, 7, 5])
+    lab_lens = jnp.array([3, 2, 1, 3])
+    batched = ctc.ctc_loss(lp, labels, in_lens, lab_lens)
+    for b in range(B):
+        single = ctc.ctc_loss(lp[:, b:b + 1], labels[b:b + 1],
+                              in_lens[b:b + 1], lab_lens[b:b + 1])
+        np.testing.assert_allclose(batched[b], single[0], rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 4), st.integers(0, 2), st.integers(0, 2**31 - 1))
+def test_ctc_loss_is_valid_nll(T, K, L, seed):
+    """Property: loss is finite and positive whenever an alignment exists."""
+    if 2 * L + 1 > T + L:  # need T >= L (+ repeats); keep feasible cases only
+        return
+    lp = _rand_logprobs(jax.random.PRNGKey(seed), T, 1, K + 1)
+    label = (np.arange(L) % K) + 1
+    labels = jnp.zeros((1, max(L, 1)), jnp.int32).at[0, :L].set(jnp.array(label, jnp.int32))
+    nll = ctc.ctc_loss(lp, labels, jnp.array([T]), jnp.array([L]))
+    assert np.isfinite(np.asarray(nll)).all()
+    assert float(nll[0]) > 0  # -log p, p < 1
+
+
+def test_ctc_gradient_flows():
+    lp_logits = jax.random.normal(jax.random.PRNGKey(0), (6, 2, 4))
+    labels = jnp.array([[1, 2], [3, 1]], jnp.int32)
+
+    def loss_fn(logits):
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        return ctc.ctc_loss(lp, labels, jnp.array([6, 6]), jnp.array([2, 2])).sum()
+
+    g = jax.grad(loss_fn)(lp_logits)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.abs(g).sum()) > 0
+
+
+def test_greedy_decode():
+    # Construct log-probs where the argmax path is [1,1,0,2,2,0] -> [1,2].
+    T, B, K = 6, 1, 3
+    path = [1, 1, 0, 2, 2, 0]
+    lp = np.full((T, B, K), -10.0)
+    for t, s in enumerate(path):
+        lp[t, 0, s] = 0.0
+    seqs, lens = ctc.ctc_greedy_decode(jnp.asarray(lp))
+    assert int(lens[0]) == 2
+    assert list(np.asarray(seqs[0][:2])) == [1, 2]

@@ -1,0 +1,156 @@
+"""Per-kernel shape/dtype sweeps: pallas_call (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lstm, quant
+from repro.kernels.flash_attention import attention_ref, flash_attention, mha
+from repro.kernels.lstm_gates import lstm_cell_fused, lstm_gates, lstm_gates_ref
+from repro.kernels.quant_matmul import (quant_matmul, quant_matmul_ref,
+                                        quantize_weights, quantized_linear)
+
+
+# ---------------------------------------------------------------- quant_matmul
+@pytest.mark.parametrize('m,k,n,bm,bn,bk', [
+    (128, 128, 128, 128, 128, 128),
+    (256, 384, 128, 128, 128, 128),
+    (8, 256, 512, 8, 128, 64),
+    (64, 64, 64, 32, 32, 32),
+])
+def test_quant_matmul_sweep(m, k, n, bm, bn, bk):
+    key = jax.random.PRNGKey(m * 7 + n)
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    xs = quant.abs_max_scale(x, axis=-1)
+    ws = quant.abs_max_scale(w, axis=0)
+    xq, wq = quant.quantize_scaled(x, xs), quant.quantize_scaled(w, ws)
+    out = quant_matmul(xq, wq, xs, ws, bm=bm, bn=bn, bk=bk, interpret=True)
+    ref = quant_matmul_ref(xq, wq, xs, ws)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize('out_dtype', [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_dtypes(out_dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 64))
+    xs, ws = quant.abs_max_scale(x, -1), quant.abs_max_scale(w, 0)
+    xq, wq = quant.quantize_scaled(x, xs), quant.quantize_scaled(w, ws)
+    out = quant_matmul(xq, wq, xs, ws, bm=64, bn=64, bk=64,
+                       out_dtype=out_dtype, interpret=True)
+    assert out.dtype == out_dtype
+    ref = quant_matmul_ref(xq, wq, xs, ws, out_dtype)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref.astype(jnp.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_quantized_linear_unaligned_and_batched():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 100))  # ragged M, K
+    w = jax.random.normal(jax.random.PRNGKey(1), (100, 75))
+    wq, ws = quantize_weights(w)
+    out = quantized_linear(x, wq, ws)
+    assert out.shape == (3, 5, 75)
+    rel = float(jnp.max(jnp.abs(out - x @ w)) / jnp.max(jnp.abs(x @ w)))
+    assert rel < 0.03, rel
+
+
+# ------------------------------------------------------------------ lstm_gates
+@pytest.mark.parametrize('n_x,n_h,b,bn,bk', [
+    (128, 128, 8, 128, 128),
+    (100, 150, 4, 64, 64),
+    (96, 421, 2, 128, 128),   # the paper's CTC layer width
+    (32, 32, 1, 32, 32),
+])
+def test_lstm_gates_sweep(n_x, n_h, b, bn, bk):
+    p = lstm.init_lstm_params(jax.random.PRNGKey(n_x + n_h), n_x, n_h)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, n_x))
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (b, n_h)) * 0.3
+    c0 = jax.random.normal(jax.random.PRNGKey(3), (b, n_h)) * 0.3
+    h_ref, c_ref = lstm.lstm_cell(p, x, h0, c0)
+    h_k, c_k = lstm_cell_fused(p, x, h0, c0, bn=bn, bk=bk)
+    np.testing.assert_allclose(h_k, h_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_k, c_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_lstm_gates_oracle_matches_core():
+    """ref.py (packed-weight oracle) must equal the canonical equations."""
+    p = lstm.init_lstm_params(jax.random.PRNGKey(0), 11, 13)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 11))
+    h0 = jnp.zeros((5, 13))
+    c0 = jnp.zeros((5, 13))
+    xh = jnp.concatenate([x, h0], -1)
+    w = jnp.concatenate([p.w_x, p.w_h], -1)
+    h_r, c_r = lstm_gates_ref(xh, w, p.w_peep, p.b, c0)
+    h_c, c_c = lstm.lstm_cell(p, x, h0, c0)
+    np.testing.assert_allclose(h_r, h_c, rtol=1e-6)
+    np.testing.assert_allclose(c_r, c_c, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_lstm_gates_property_random_shapes(seed):
+    rng = np.random.RandomState(seed)
+    n_x = int(rng.randint(8, 200))
+    n_h = int(rng.randint(8, 200))
+    b = int(rng.randint(1, 6))
+    p = lstm.init_lstm_params(jax.random.PRNGKey(seed), n_x, n_h)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, n_x))
+    h0 = jnp.zeros((b, n_h))
+    c0 = jnp.zeros((b, n_h))
+    h_ref, c_ref = lstm.lstm_cell(p, x, h0, c0)
+    h_k, c_k = lstm_cell_fused(p, x, h0, c0, bn=64, bk=64)
+    np.testing.assert_allclose(h_k, h_ref, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- flash_attention
+@pytest.mark.parametrize('causal,window', [(True, None), (False, None),
+                                           (True, 16), (True, 64)])
+@pytest.mark.parametrize('sq,sk', [(64, 64), (128, 128), (1, 128), (80, 80)])
+def test_flash_attention_sweep(causal, window, sq, sk):
+    if sq > sk:
+        pytest.skip('query longer than keys undefined here')
+    B, H, Hk, D = 2, 4, 2, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, sq, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Hk, sk, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Hk, sk, D))
+    out = mha(q, k, v, causal=causal, window=window, bq=32, bk=32)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize('dtype', [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    B, H, S, D = 1, 2, 64, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, S, D), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, D), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, D), dtype)
+    out = mha(q, k, v, bq=32, bk=32)
+    assert out.dtype == dtype
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32))
+    tol = 1e-3 if dtype == jnp.float32 else 2e-2  # bf16: taxonomy Part E
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, rtol=tol, atol=tol)
+
+
+def test_flash_attention_fully_masked_rows_are_zero():
+    """Sliding window so small that early KV blocks are fully masked."""
+    B, H, S, D = 1, 1, 128, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, S, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, D))
+    out = mha(q, k, v, causal=True, window=8, bq=32, bk=32)
+    ref = attention_ref(q, k, v, causal=True, window=8)
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_flash_attention_decode_offset():
+    """Decode: 1 query against a 96-entry cache, absolute position = 95."""
+    B, H, D = 2, 2, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, 96, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, 96, D))
+    out = mha(q, k, v, causal=True, bq=8, bk=32)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,140 @@
+"""Core LSTM + systolic execution: correctness against the paper's equations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lstm, quant, systolic
+from _subproc import run_with_devices
+
+
+def _rand_lstm(key, n_x, n_h):
+    return lstm.init_lstm_params(key, n_x, n_h)
+
+
+def test_lstm_cell_matches_equations():
+    """Check Eqs. (1)-(5) element by element against a numpy transcription."""
+    key = jax.random.PRNGKey(0)
+    n_x, n_h, B = 5, 7, 3
+    p = _rand_lstm(key, n_x, n_h)
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (B, n_x)))
+    h0 = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (B, n_h))) * 0.3
+    c0 = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (B, n_h))) * 0.3
+
+    w_x, w_h, w_p, b = map(np.asarray, p)
+    sig = lambda z: 1 / (1 + np.exp(-z))
+    pre = np.einsum('ghx,bx->bgh', w_x, x) + np.einsum('ghk,bk->bgh', w_h, h0)
+    i = sig(pre[:, 0] + w_p[0] * c0 + b[0])
+    f = sig(pre[:, 1] + w_p[1] * c0 + b[1])
+    g = np.tanh(pre[:, 2] + b[2])
+    c = f * c0 + i * g
+    o = sig(pre[:, 3] + w_p[2] * c + b[3])
+    h = o * np.tanh(c)
+
+    h_j, c_j = lstm.lstm_cell(p, jnp.asarray(x), jnp.asarray(h0), jnp.asarray(c0))
+    np.testing.assert_allclose(h_j, h, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_j, c, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize('n_x,n_h,tile', [(23, 37, 16), (96, 96, 96),
+                                          (123, 421, 96), (8, 8, 8)])
+def test_systolic_tiled_equals_dense(n_x, n_h, tile):
+    p = _rand_lstm(jax.random.PRNGKey(0), n_x, n_h)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (6, 2, n_x)) * 0.5
+    hs_ref, _ = lstm.lstm_layer(p, xs)
+    packed = systolic.pack_lstm(p, systolic.SystolicPlan(n_x, n_h, tile))
+    hs = systolic.systolic_layer_tiled(packed, xs)
+    np.testing.assert_allclose(hs, hs_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_systolic_quantized_error_bounded():
+    """8-bit storage / 16-bit accumulation path stays within a few LSBs of fp32."""
+    p = _rand_lstm(jax.random.PRNGKey(0), 48, 64)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (12, 4, 48)) * 0.5
+    hs_ref, _ = lstm.lstm_layer(p, xs)
+    packed = systolic.pack_lstm(p, systolic.SystolicPlan(48, 64, 16))
+    qp = systolic.quantize_packed(packed)
+    hs_q = systolic.systolic_layer_quantized(qp, quant.quantize(xs, quant.STATE_FMT))
+    hs = quant.dequantize(hs_q, quant.STATE_FMT)
+    err = np.abs(np.asarray(hs) - np.asarray(hs_ref))
+    lsb = quant.STATE_FMT.scale
+    assert err.mean() < 2 * lsb, f'mean err {err.mean()} vs LSB {lsb}'
+    assert err.max() < 8 * lsb, f'max err {err.max()}'
+
+
+def test_quantized_is_pure_integer():
+    """The quantized path must consume/produce int8 codes only (HW-faithful)."""
+    p = _rand_lstm(jax.random.PRNGKey(0), 8, 8)
+    packed = systolic.pack_lstm(p, systolic.SystolicPlan(8, 8, 8))
+    qp = systolic.quantize_packed(packed)
+    assert qp.tiles_q.dtype == jnp.int8
+    assert qp.bias_q.dtype == jnp.int16
+    xs_q = quant.quantize(jnp.ones((3, 2, 8)) * 0.25, quant.STATE_FMT)
+    hs = systolic.systolic_layer_quantized(qp, xs_q)
+    assert hs.dtype == jnp.int8
+
+
+def test_systolic_shard_map_multi_device():
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from repro.core import lstm, systolic
+p = lstm.init_lstm_params(jax.random.PRNGKey(0), 23, 37)
+xs = jax.random.normal(jax.random.PRNGKey(1), (7, 4, 23)) * 0.5
+hs_ref, _ = lstm.lstm_layer(p, xs)
+plan = systolic.SystolicPlan(23, 37, tile=16)
+packed = systolic.shard_packed_lstm(
+    systolic.pack_lstm(p, plan), systolic.make_systolic_mesh(plan.rows, plan.cols))
+xs_pad = jnp.zeros((7, 4, plan.padded_in), xs.dtype).at[..., :23].set(xs)
+hs = systolic.systolic_lstm_shard_map(
+    packed, systolic.make_systolic_mesh(plan.rows, plan.cols), xs_pad)
+err = float(jnp.max(jnp.abs(hs - hs_ref)))
+assert err < 1e-5, err
+print('OK', err)
+""", n_devices=16)
+    assert 'OK' in out
+
+
+def test_systolic_pipeline_multi_device():
+    """The paper's 3x(RxC) layer pipeline matches sequential execution."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from repro.core import lstm, systolic, pipeline
+keys = jax.random.split(jax.random.PRNGKey(0), 3)
+layers = [lstm.init_lstm_params(keys[0], 13, 21)] + \\
+         [lstm.init_lstm_params(k, 21, 21) for k in keys[1:]]
+xs = jax.random.normal(jax.random.PRNGKey(1), (9, 3, 13)) * 0.5
+h = xs
+for lp in layers:
+    h, _ = lstm.lstm_layer(lp, h)
+packed, plan = pipeline.pack_pipeline(layers, tile=8)
+mesh = systolic.make_systolic_mesh(plan.rows, plan.cols, stage=3)
+packed = pipeline.shard_pipeline(packed, mesh)
+xs_pad = jnp.zeros((9, 3, plan.padded_x), xs.dtype).at[..., :13].set(xs)
+hs = pipeline.systolic_pipeline(packed, mesh, xs_pad)
+err = float(jnp.max(jnp.abs(hs - h)))
+assert err < 1e-5, err
+print('OK', err)
+""", n_devices=64)
+    assert 'OK' in out
+
+
+def test_plan_geometry_matches_paper():
+    """CTC-3L-421H-UNI on 96-unit engines: 5 row chunks (421/96) as in Sec. 4.2."""
+    plan = systolic.SystolicPlan(123, 421, 96)
+    assert plan.rows == 5
+    assert plan.cols_x == 2 and plan.cols_h == 5
+    # 5x5 engines => 2 temporal passes per layer (paper: reconfig/multi-pass).
+    import math
+    passes = math.ceil(plan.rows / 5) * math.ceil(plan.cols / 5)
+    assert passes == 2
+
+
+def test_lstm_stack_shapes():
+    params = lstm.init_lstm_stack(jax.random.PRNGKey(0), 123, 421, 3, n_out=62)
+    xs = jnp.zeros((5, 2, 123))
+    ys, finals = lstm.lstm_stack_apply(params, xs)
+    assert ys.shape == (5, 2, 62)
+    assert len(finals) == 3
+    # ~3.8M weights, matching the paper's statement for CTC-3L-421H-UNI.
+    n = params.num_params()
+    assert 3.7e6 < n < 3.9e6, n

@@ -1,0 +1,77 @@
+"""Silicon model must reproduce the paper's published numbers (Tables 1, 2, Fig. 5)."""
+import pytest
+
+from repro.core import perf_model as pm
+
+
+def test_peak_performance_matches_table1():
+    assert pm.peak_gops(1.24) == pytest.approx(32.2, rel=0.01)   # 32.3 Gop/s row
+    assert pm.peak_gops(0.75) == pytest.approx(3.8, rel=0.02)
+
+
+def test_energy_efficiency_matches_abstract():
+    # 3.08 Gop/s/mW at the 0.75 V corner (abstract + Table 1).
+    assert pm.efficiency_gops_per_mw(0.75) == pytest.approx(3.08, rel=0.02)
+    assert pm.efficiency_gops_per_mw(1.24) == pytest.approx(1.11, rel=0.01)
+
+
+def test_area_efficiency():
+    assert pm.area_efficiency_gops_per_mm2() == pytest.approx(34.4, rel=0.01)
+
+
+def test_power_model_predicts_low_corner():
+    # C_eff fit at 1.24 V predicts the 0.75 V measurement within 2.5 %.
+    assert pm.power_w(0.75) * 1e3 == pytest.approx(1.24, rel=0.025)
+    assert pm.power_w(1.24) * 1e3 == pytest.approx(29.03, rel=1e-6)
+
+
+def test_shmoo_monotone():
+    vs = [0.75 + 0.05 * i for i in range(10)]
+    fs = [pm.freq_hz(v) for v in vs]
+    ps = [pm.power_w(v) for v in vs]
+    assert all(b > a for a, b in zip(fs, fs[1:]))
+    assert all(b > a for a, b in zip(ps, ps[1:]))
+
+
+def test_network_size_matches_paper():
+    total = sum(l.weight_bytes() for l in pm.CTC_3L_421H)
+    assert 3.7e6 < total < 3.9e6  # "~3.8e6 weights"
+
+
+def test_table2_reproduction():
+    """Every execution-time cell within 4 % of the paper; powers within 3 %."""
+    paper_power = {  # (config, V) -> (peak mW, avg mW or None)
+        ('systolic 3x5x5', 1.24): (1833.75, 16.53),
+        ('systolic 5x5', 1.24): (611.25, 96.89),
+        ('single', 1.24): (24.45, None),
+        ('systolic 3x5x5', 0.75): (165.75, 12.55),
+        ('systolic 5x5', 0.75): (55.25, None),
+        ('single', 0.75): (2.21, None),
+    }
+    rows = pm.table2()
+    assert len(rows) == 6
+    for row in rows:
+        key = (row['config'], row['voltage'])
+        want_ms = pm.PAPER_TABLE2_MS[key]
+        assert row['exec_time_ms'] == pytest.approx(want_ms, rel=0.04), key
+        peak, avg = paper_power[key]
+        assert row['peak_power_mw'] == pytest.approx(peak, rel=0.01), key
+        if avg is not None and row['meets_deadline']:
+            assert row['avg_power_mw'] == pytest.approx(avg, rel=0.03), key
+
+
+def test_deadline_verdicts_match_paper_bold():
+    """Paper bolds configs meeting the 10 ms deadline: 3x5x5 @both V, 5x5 @1.24 V."""
+    verdicts = {(r['config'], r['voltage']): r['meets_deadline'] for r in pm.table2()}
+    assert verdicts[('systolic 3x5x5', 1.24)]
+    assert verdicts[('systolic 3x5x5', 0.75)]
+    assert verdicts[('systolic 5x5', 1.24)]
+    assert not verdicts[('systolic 5x5', 0.75)]
+    assert not verdicts[('single', 1.24)]
+    assert not verdicts[('single', 0.75)]
+
+
+def test_calibration_is_two_point_fit():
+    beta, cpb = pm.fit_calibration()
+    assert beta == pytest.approx(pm.BETA, rel=1e-6)
+    assert cpb == pytest.approx(pm.LOAD_CPB, rel=1e-4)

@@ -1,0 +1,79 @@
+"""Fixed-point quantization properties (hypothesis) — contribution C2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-3.9, 3.9, allow_nan=False), min_size=1, max_size=64))
+def test_quantize_roundtrip_error_bounded(vals):
+    """|dequant(quant(x)) - x| <= scale/2 inside the representable range."""
+    x = jnp.array(vals, jnp.float32)
+    fmt = quant.STATE_FMT
+    err = np.abs(np.asarray(quant.dequantize(quant.quantize(x, fmt), fmt) - x))
+    assert (err <= fmt.scale / 2 + 1e-7).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2, max_size=32))
+def test_quantize_monotone(vals):
+    """Quantization preserves ordering (monotone non-decreasing)."""
+    x = jnp.sort(jnp.array(vals, jnp.float32))
+    q = np.asarray(quant.quantize(x, quant.STATE_FMT), np.int32)
+    assert (np.diff(q) >= 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_int8_matmul_matches_float(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (4, 32))
+    w = jax.random.normal(k2, (32, 16))
+    xs, ws = quant.abs_max_scale(x), quant.abs_max_scale(w, axis=0)
+    out = quant.int8_matmul(quant.quantize_scaled(x, xs),
+                            quant.quantize_scaled(w, ws), xs, ws)
+    ref = x @ w
+    # int8 x int8 error: bounded relative to the operand magnitudes.
+    tol = 32 * float(xs) * float(np.max(np.asarray(ws))) * 130
+    assert float(jnp.max(jnp.abs(out - ref))) < tol
+
+
+def test_fake_quant_straight_through_gradient():
+    x = jnp.array([0.1, 3.0, -5.0])  # -5 is out of Q2.5 range -> grad masked
+    g = jax.grad(lambda v: quant.fake_quant(v, quant.STATE_FMT).sum())(x)
+    np.testing.assert_allclose(g, [1.0, 1.0, 0.0])
+
+
+def test_lut_matches_quantized_activation():
+    """The 256-entry LUT equals quantize(sigmoid(dequant(code))) for every code."""
+    fmt, out_fmt = quant.STATE_FMT, quant.GATE_FMT
+    lut = quant.build_act_lut(lambda z: 1 / (1 + np.exp(-z)), fmt, out_fmt)
+    codes = jnp.arange(-128, 128, dtype=jnp.int8)
+    got = quant.apply_lut(jnp.asarray(lut), codes, fmt)
+    want = quant.quantize(jax.nn.sigmoid(quant.dequantize(codes, fmt)), out_fmt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_saturating_add():
+    a = jnp.array([32760, -32760, 100], jnp.int32)
+    b = jnp.array([100, -100, 200], jnp.int32)
+    out = np.asarray(quant.saturating_add_int16(a, b))
+    np.testing.assert_array_equal(out, [32767, -32768, 300])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_requantize_shift_matches_float_rescale(seed):
+    rng = np.random.RandomState(seed)
+    acc_fmt = quant.QFormat(5, 10)
+    out_fmt = quant.STATE_FMT
+    acc = jnp.asarray(rng.randint(-30000, 30000, size=(32,)), jnp.int32)
+    got = quant.requantize(acc, acc_fmt, out_fmt)
+    want = np.clip(np.round(np.asarray(acc) * acc_fmt.scale / out_fmt.scale
+                            + 1e-9), -128, 127)  # round-half-up semantics
+    # Allow off-by-one on exact .5 ties (hardware rounds half-up).
+    assert (np.abs(np.asarray(got) - want) <= 1).all()

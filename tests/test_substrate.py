@@ -1,0 +1,258 @@
+"""Substrate tests: optimizers, data pipeline, checkpointing, fault tolerance,
+gradient compression, sharding rules."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs, sharding as shd
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticCTC, SyntheticLM, source_for
+from repro.optim import (adafactor, adamw, apply_updates, clip_by_global_norm,
+                         compress_with_feedback, cosine_schedule,
+                         decompress_tensor, init_error_state, global_norm,
+                         make_optimizer, optimizer_state_axes, sgd,
+                         wsd_schedule)
+from repro.runtime import FaultConfig, FaultTolerantRunner, StepTimer
+
+
+# ------------------------------------------------------------- optimizers
+def _quadratic_params():
+    return {'w': jnp.array([3.0, -2.0]), 'b': jnp.array([[1.0, 1.0], [1.0, 1.0]])}
+
+
+@pytest.mark.parametrize('name', ['adamw', 'adafactor', 'sgd'])
+def test_optimizer_converges_on_quadratic(name):
+    opt = make_optimizer(name, lambda step: 0.1)
+    params = _quadratic_params()
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p['w'] ** 2) + jnp.sum(p['b'] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        updates, state = opt.update(g, state, params)
+        params = apply_updates(params, updates)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(lambda s: 1e-2)
+    params = {'w': jnp.zeros((64, 32)), 'v': jnp.zeros((7,))}
+    state = opt.init(params)
+    assert state.vr['w'].shape == (64,)      # row stats
+    assert state.vc['w'].shape == (32,)      # col stats
+    assert state.vr['v'].shape == (7,)       # unfactored vector
+    # memory: factored state is O(n+m), not O(n*m)
+    assert state.vr['w'].size + state.vc['w'].size < params['w'].size
+
+
+def test_grad_clip():
+    tree = {'a': jnp.ones((4,)) * 3.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(6.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules():
+    cos = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(cos(5)) == pytest.approx(0.5)
+    assert float(cos(10)) == pytest.approx(1.0)
+    assert float(cos(100)) == pytest.approx(0.1, rel=1e-2)
+    wsd = wsd_schedule(1.0, warmup=10, total=100, decay_frac=0.2)
+    assert float(wsd(50)) == pytest.approx(1.0)      # stable plateau
+    assert float(wsd(99)) < 0.05                     # sharp decay tail
+
+
+def test_optimizer_state_axes_match_structure():
+    opt = adamw(lambda s: 1e-3)
+    params = {'w': jnp.zeros((8, 4))}
+    axes = {'w': ('embed', 'mlp')}
+    st_ = opt.init(params)
+    ax = optimizer_state_axes('adamw', axes)
+    assert jax.tree.structure(st_, is_leaf=lambda x: isinstance(x, jnp.ndarray)) \
+        .num_leaves == len(jax.tree.leaves(ax, is_leaf=shd._is_axes_leaf))
+
+
+# ------------------------------------------------- gradient compression
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_compression_error_feedback_reduces_bias(seed):
+    """With error feedback, the *accumulated* compressed sum tracks the true
+    sum far better than independent rounding (the 1-bit-Adam property)."""
+    rng = np.random.RandomState(seed)
+    g_true = jnp.asarray(rng.randn(64).astype(np.float32)) * 0.01
+    err = init_error_state({'g': g_true})['g']
+    acc_c, acc_t = np.zeros(64), np.zeros(64)
+    for _ in range(30):
+        (q, s, err2) = compress_with_feedback({'g': g_true}, {'g': err})
+        err = err2['g']
+        acc_c += np.asarray(decompress_tensor(q['g'], s['g']))
+        acc_t += np.asarray(g_true)
+    # residual bounded by one quantum, independent of number of steps
+    quantum = float(np.abs(np.asarray(g_true)).max()) / 127 * 1.5 + 1e-12
+    assert np.abs(acc_c - acc_t).max() < quantum * 2
+
+
+# -------------------------------------------------------------- pipeline
+def test_pipeline_deterministic_resume():
+    cfg = configs.get_smoke_config('qwen3-14b')
+    shape = configs.ShapeConfig('t', 'train', 16, 4)
+    src = SyntheticLM(cfg, shape, seed=7)
+    a = src.host_batch(5, 0, 4)
+    b = src.host_batch(5, 0, 4)          # same step -> identical batch
+    np.testing.assert_array_equal(a['tokens'], b['tokens'])
+    c = src.host_batch(6, 0, 4)
+    assert not np.array_equal(a['tokens'], c['tokens'])
+
+
+def test_pipeline_host_sharding_partitions_batch():
+    cfg = configs.get_smoke_config('qwen3-14b')
+    shape = configs.ShapeConfig('t', 'train', 16, 8)
+    src = SyntheticLM(cfg, shape, seed=0)
+    full = src.host_batch(0, 0, 8)
+    lo = src.host_batch(0, 0, 4)
+    hi = src.host_batch(0, 4, 8)
+    np.testing.assert_array_equal(full['tokens'][:4], lo['tokens'])
+    np.testing.assert_array_equal(full['tokens'][4:], hi['tokens'])
+
+
+def test_ctc_source_valid():
+    cfg = configs.get_smoke_config('chipmunk-ctc')
+    shape = configs.ShapeConfig('t', 'train', 32, 4)
+    b = SyntheticCTC(cfg, shape).host_batch(0, 0, 4)
+    assert b['frames'].shape == (4, 32, cfg.lstm_inputs)
+    assert (b['labels'] >= 1).all() and (b['labels'] < cfg.n_outputs).all()
+    assert (b['label_len'] * 2 <= b['frame_len']).all()   # CTC-feasible
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    m = CheckpointManager(tmp_path, keep=2)
+    state = {'w': jnp.arange(12.0).reshape(3, 4), 'step': jnp.int32(7),
+             'nested': {'b': jnp.ones((2,))}}
+    for s in (1, 2, 3):
+        m.save(s, state, blocking=True)
+    assert m.all_steps() == [2, 3]                 # gc keeps last 2
+    got = m.restore(jax.tree.map(jnp.zeros_like, state))
+    np.testing.assert_array_equal(got['w'], state['w'])
+    assert int(got['step']) == 7
+
+
+def test_checkpoint_async_and_validation(tmp_path):
+    m = CheckpointManager(tmp_path)
+    state = {'w': jnp.ones((128, 128))}
+    m.save(10, state, blocking=False)
+    m.wait()
+    # corrupt a leaf -> restore must fail checksum
+    d = pathlib.Path(tmp_path) / 'step_00000010'
+    leaf = next(d.glob('leaf_*.npy'))
+    arr = np.load(leaf)
+    arr[0, 0] += 1
+    np.save(leaf, arr)
+    with pytest.raises(IOError):
+        m.restore(state)
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Save under one sharding, restore under another (topology change)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.train import local_mesh
+    mesh = local_mesh()
+    m = CheckpointManager(tmp_path)
+    x = jnp.arange(64.0).reshape(8, 8)
+    m.save(1, {'x': jax.device_put(x, NamedSharding(mesh, P('data')))},
+           blocking=True)
+    out = m.restore({'x': jnp.zeros((8, 8))},
+                    shardings={'x': NamedSharding(mesh, P(None, 'data'))})
+    np.testing.assert_array_equal(out['x'], x)
+    assert out['x'].sharding.spec == P(None, 'data')
+
+
+# ------------------------------------------------------- fault tolerance
+def test_fault_runner_retries_and_restores():
+    calls = {'n': 0}
+
+    def step(state, batch):
+        calls['n'] += 1
+        return state + 1, {'loss': 0.0}
+
+    restored = {'n': 0}
+
+    def restore():
+        restored['n'] += 1
+        return jnp.int32(100)
+
+    runner = FaultTolerantRunner(
+        step, cfg=FaultConfig(max_retries=2, backoff_s=0.0),
+        restore_fn=restore,
+        fail_schedule=lambda s: s == 3)
+    state = jnp.int32(0)
+    for s in range(5):
+        state, _ = runner.run_step(s, state, None)
+    assert restored['n'] == 1                          # one injected fault
+    kinds = [e['kind'] for e in runner.events]
+    assert 'fault' in kinds and 'restore' in kinds
+    assert int(state) >= 100                           # resumed from restore
+
+
+def test_straggler_detection():
+    t = StepTimer(alpha=0.5, factor=2.0)
+    assert not t.observe(0, 1.0)
+    assert not t.observe(1, 1.1)
+    assert t.observe(2, 5.0)                           # 5x slower
+    assert len(t.stragglers) == 1
+    assert not t.observe(3, 1.0)                       # baseline unpoisoned
+
+
+def test_fault_runner_raises_after_max_retries():
+    def step(state, batch):
+        raise RuntimeError('permafail')
+
+    runner = FaultTolerantRunner(step,
+                                 cfg=FaultConfig(max_retries=1, backoff_s=0.0))
+    with pytest.raises(RuntimeError):
+        runner.run_step(0, None, None)
+
+
+# ---------------------------------------------------------------- sharding
+def test_sharding_divisibility_fallback():
+    """40 heads don't divide a 16-way axis -> head_dim takes the TP axis."""
+    from repro.launch.mesh import make_production_mesh, resolve_rules
+    out = __import__('subprocess')  # noqa — only to document intent; real
+    # multi-device check below runs in-process against an abstract mesh:
+    rules = shd.ShardingRules(None, shd.TRAIN_RULES)
+    # mesh=None path returns specs without divisibility info
+    spec = rules.spec(('embed', 'heads', 'head_dim'))
+    assert spec is not None
+
+
+def test_sharding_spec_dedup_and_fallback_multidevice():
+    from _subproc import run_with_devices
+    out = run_with_devices("""
+import jax
+from repro import sharding as shd
+from repro.launch.mesh import make_production_mesh, resolve_rules
+mesh = make_production_mesh(multi_pod=True)
+rules = shd.ShardingRules(mesh, resolve_rules(shd.TRAIN_RULES, mesh))
+# 40 q-heads don't divide 16 -> falls back to head_dim
+s = rules.spec(('embed','heads','head_dim'), (5120, 40, 128))
+assert s == jax.sharding.PartitionSpec(('pod','data'), None, 'model'), s
+# divisible head count claims model; head_dim then stays unsharded
+s = rules.spec(('embed','heads','head_dim'), (7168, 64, 112))
+assert s == jax.sharding.PartitionSpec(('pod','data'), 'model', None), s
+# 8 experts on a 32-way EP axis -> prefix (pod=2) only; embed picks data
+s = rules.spec(('experts','embed','expert_mlp'), (8, 6144, 16384))
+assert s == jax.sharding.PartitionSpec('pod', 'data', 'model'), s
+# batch=1 (long_500k): nothing divides -> replicated
+s = rules.spec(('batch','seq'), (1, 524288))
+assert s == jax.sharding.PartitionSpec(None, None), s
+print('OK')
+""", n_devices=512)
+    assert 'OK' in out
