@@ -1,7 +1,14 @@
-"""Shared benchmark utilities: wall-clock timing of jitted callables."""
+"""Shared benchmark utilities: wall-clock timing of jitted callables.
+
+Every ``emit`` both prints the CSV row and records it in ``RESULTS`` so the
+driver's ``--json`` mode can persist the run (BENCH_*.json) for trajectory
+tracking across PRs.
+"""
 import time
 
 import jax
+
+RESULTS = []
 
 
 def time_call(fn, *args, warmup=2, iters=5):
@@ -20,4 +27,6 @@ def time_call(fn, *args, warmup=2, iters=5):
 
 
 def emit(name: str, us: float, derived: str):
+    RESULTS.append({'name': name, 'us_per_call': round(us, 1),
+                    'derived': derived})
     print(f'{name},{us:.1f},{derived}')

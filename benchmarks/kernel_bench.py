@@ -1,16 +1,44 @@
 """Kernel-layer microbenchmarks (CPU wall-clock of the jnp reference paths;
-Pallas kernels are TPU-targeted and only correctness-checked here via
-interpret mode — CPU timings of interpret mode are not meaningful)."""
+Pallas kernels are TPU-targeted and correctness-checked here via interpret
+mode.  Interpret timings are an emulation, but the per-step vs whole-sequence
+LSTM comparison is still structurally meaningful: the per-step path pays T
+kernel invocations and T weight re-streams, the sequence kernel one — the
+same ratio that dominates on hardware)."""
 import jax
 import jax.numpy as jnp
 
 from repro.core import lstm, quant
 from repro.kernels.flash_attention import attention_ref
 from repro.kernels.lstm_gates import lstm_gates_ref
+from repro.kernels.lstm_gates import lstm_layer_fused as lstm_layer_step
+from repro.kernels.lstm_seq import lstm_layer_seq
 from repro.kernels.quant_matmul import quant_matmul_ref
 from repro.models.layers import chunked_attention
 
 from .common import emit, time_call
+
+
+def _lstm_seq_vs_step(T: int = 128, B: int = 8):
+    """The paper's CTC layer (123->421) over a T-frame utterance: old per-step
+    scan path vs the persistent whole-sequence kernel (acceptance row)."""
+    p = lstm.init_lstm_params(jax.random.PRNGKey(42), 123, 421)
+    xs = jax.random.normal(jax.random.PRNGKey(43), (T, B, 123)) * 0.5
+    tag = f'T={T} B={B} 123->421'
+
+    f_scan = jax.jit(lambda q, x: lstm.lstm_layer(q, x)[0])
+    t_scan = time_call(f_scan, p, xs, warmup=1, iters=3)
+    emit('kernels/lstm_layer_xla_scan', t_scan, tag)
+
+    f_step = jax.jit(lambda q, x: lstm_layer_step(q, x, interpret=True))
+    t_step = time_call(f_step, p, xs, warmup=1, iters=3)
+    emit('kernels/lstm_layer_pallas_step', t_step,
+         f'{tag} (T kernel launches, W re-streamed per step)')
+
+    f_seq = jax.jit(lambda q, x: lstm_layer_seq(q, x, interpret=True)[0])
+    t_seq = time_call(f_seq, p, xs, warmup=1, iters=3)
+    emit('kernels/lstm_layer_pallas_seq', t_seq,
+         f'{tag} (1 launch, weight-stationary; '
+         f'{t_step / t_seq:.2f}x vs per-step)')
 
 
 def run():
@@ -50,4 +78,6 @@ def run():
     emit('kernels/attention_naive', t_n, f'S={S}')
     emit('kernels/attention_chunked', t_c,
          f'S={S} chunk=256 max_err={err:.1e} (O(S) memory)')
+
+    _lstm_seq_vs_step()
     return t_c

@@ -1,0 +1,63 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern JAX API surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``) but must
+also run on the 0.4.x line, where ``shard_map`` lives under
+``jax.experimental``, replication checking is spelled ``check_rep`` instead of
+``check_vma``, and meshes have no axis types.  Everything that touches those
+APIs imports them from here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+try:  # modern spelling (jax >= 0.6)
+    from jax.sharding import AxisType
+    _HAS_AXIS_TYPES = True
+except ImportError:  # 0.4.x: axis types don't exist; Auto is the only behaviour
+    _HAS_AXIS_TYPES = False
+
+    class AxisType:  # type: ignore[no-redef]
+        Auto = 'auto'
+        Explicit = 'explicit'
+        Manual = 'manual'
+
+try:
+    from jax import shard_map as _shard_map  # jax >= 0.6
+    _CHECK_KW = 'check_vma'
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = 'check_rep'
+
+
+def shard_map(f=None, /, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the replication-check kwarg renamed per version."""
+    kwargs = {'mesh': mesh, 'in_specs': in_specs, 'out_specs': out_specs,
+              _CHECK_KW: check_vma}
+    if f is None:
+        return functools.partial(_shard_map, **kwargs)
+    return _shard_map(f, **kwargs)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              axis_types: Optional[Sequence] = None,
+              devices=None) -> Mesh:
+    """``jax.make_mesh`` accepting (and ignoring, pre-0.6) ``axis_types``."""
+    if _HAS_AXIS_TYPES and axis_types is not None:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types,
+                             devices=devices)
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def mesh_with_axis_types(devices_array, axis_names, axis_types=None) -> Mesh:
+    """``Mesh(...)`` constructor accepting (and ignoring, pre-0.6) axis types."""
+    if _HAS_AXIS_TYPES and axis_types is not None:
+        return Mesh(devices_array, axis_names, axis_types=axis_types)
+    return Mesh(devices_array, axis_names)
+
+
+__all__ = ['AxisType', 'shard_map', 'make_mesh', 'mesh_with_axis_types']

@@ -61,6 +61,7 @@ class ArchConfig:
     remat: str = 'full'                     # none | full | dots
     attn_chunk: int = 512                   # kv blocking for chunked attention
     use_pallas: bool = False                # TPU path; off for CPU/dry-run
+    lstm_backend: str = 'auto'              # auto | xla_scan | pallas_step | pallas_seq
     optimizer: str = 'adamw'                # adamw | adafactor | sgd
     scan_layers: bool = True
 

@@ -14,6 +14,7 @@ Weights are packed as W[4, N_h, N_in] so the systolic tiler can block them unifo
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -141,10 +142,9 @@ def _lsf_fwd(w_h, w_peep, b, pre_x, h0, c0):
     return (hs, (h_T, c_T)), (w_h, w_peep, hs, cs, gates, h0, c0)
 
 
-def _lsf_bwd(res, grads):
-    w_h, w_peep, hs, cs, gates, h0, c0 = res
-    dhs, (dh_T, dc_T) = grads
-    T = hs.shape[0]
+def lstm_bwd_core(w_h, w_peep, hs, cs, gates, h0, c0, dhs, dh_T, dc_T):
+    """Shared reverse-time scan: used by the scan VJP and the Pallas-sequence
+    kernel VJP (which recomputes ``gates`` instead of storing them)."""
     h_prevs = jnp.concatenate([h0[None], hs[:-1]], axis=0)
     c_prevs = jnp.concatenate([c0[None], cs[:-1]], axis=0)
 
@@ -179,19 +179,100 @@ def _lsf_bwd(res, grads):
     return dw_h, d_peep, db, dpre_x, dh0, dc0
 
 
+def _lsf_bwd(res, grads):
+    w_h, w_peep, hs, cs, gates, h0, c0 = res
+    dhs, (dh_T, dc_T) = grads
+    return lstm_bwd_core(w_h, w_peep, hs, cs, gates, h0, c0, dhs, dh_T, dc_T)
+
+
 lstm_scan_fused.defvjp(_lsf_fwd, _lsf_bwd)
+
+
+def lstm_bwd_recompute_gates(w_h, w_peep, b, pre_x, hs, cs, h0, c0, grads):
+    """Backward from the saved h/c trajectories only (no stored gates).
+
+    The Pallas kernels keep gate values on-chip, so their VJPs recompute them
+    with one wide matmul + elementwise — the same trade the scan VJP makes
+    for dW accumulation — then run the shared reverse-time scan.  Returns
+    (dw_h, d_peep, db, dpre_x, dh0, dc0).
+    """
+    dhs, (dh_T, dc_T) = grads
+    h_prevs = jnp.concatenate([h0[None], hs[:-1]], axis=0)
+    c_prevs = jnp.concatenate([c0[None], cs[:-1]], axis=0)
+    pre = pre_x + jnp.einsum('ghk,t...k->t...gh', w_h, h_prevs)
+    i = jax.nn.sigmoid(pre[..., I, :] + w_peep[PEEP_I] * c_prevs + b[I])
+    f = jax.nn.sigmoid(pre[..., F, :] + w_peep[PEEP_F] * c_prevs + b[F])
+    g = jnp.tanh(pre[..., G, :] + b[G])
+    o = jax.nn.sigmoid(pre[..., O, :] + w_peep[PEEP_O] * cs + b[O])
+    gates = jnp.stack([i, f, g, o], axis=-2)
+    return lstm_bwd_core(w_h, w_peep, hs, cs, gates, h0, c0, dhs, dh_T, dc_T)
+
+
+# ---------------------------------------------------------------------------
+# Backend dispatch: xla_scan | pallas_step | pallas_seq (DESIGN.md §3.3)
+# ---------------------------------------------------------------------------
+
+BACKENDS = ('auto', 'xla_scan', 'pallas_step', 'pallas_seq')
+
+# The sequence kernel keeps W_h + state resident in VMEM; leave headroom for
+# Mosaic's double-buffered streams out of the ~16 MB budget.
+_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+_SEQ_MIN_T = 8  # below this, per-launch savings don't pay for residency setup
+
+
+def select_lstm_backend(n_x: int, n_h: int, T: int, batch: int,
+                        *, platform: Optional[str] = None) -> str:
+    """Shape-based backend selection (see DESIGN.md §3.3).
+
+    On non-TPU platforms Pallas kernels only exist in interpret mode (an
+    emulation for validation, not speed), so ``auto`` resolves to the XLA scan
+    there; tests and benchmarks opt into the kernels explicitly.
+    """
+    platform = platform or jax.default_backend()
+    if platform != 'tpu':
+        return 'xla_scan'
+    from ..kernels.lstm_seq import vmem_bytes_estimate
+    if T >= _SEQ_MIN_T and vmem_bytes_estimate(n_h, batch) <= _VMEM_BUDGET_BYTES:
+        return 'pallas_seq'
+    if n_h * (n_x + n_h) * 4 * GATES <= _VMEM_BUDGET_BYTES:
+        return 'pallas_step'
+    return 'xla_scan'
 
 
 def lstm_layer_fused(params: LSTMParams, xs: jax.Array,
                      h0: Optional[jax.Array] = None,
-                     c0: Optional[jax.Array] = None):
-    """lstm_layer with the hand-written VJP (production training path)."""
+                     c0: Optional[jax.Array] = None, *,
+                     backend: str = 'auto'):
+    """lstm_layer with the hand-written VJP (production training path).
+
+    ``backend`` selects the execution engine: the XLA scan, the per-timestep
+    Pallas kernel, or the persistent whole-sequence Pallas kernel; ``auto``
+    picks by shape/platform (select_lstm_backend).
+    """
+    assert backend in BACKENDS, backend
     n_h = params.n_h
     batch_shape = xs.shape[1:-1]
+    if backend == 'auto':
+        backend = select_lstm_backend(params.n_x, n_h, xs.shape[0],
+                                      math.prod(batch_shape))
     if h0 is None:
         h0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
     if c0 is None:
         c0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
+    if backend == 'pallas_seq':
+        from ..kernels.lstm_seq import lstm_layer_seq
+        return lstm_layer_seq(params, xs, h0, c0)
+    if backend == 'pallas_step':
+        from ..kernels.lstm_gates import lstm_layer_fused as step_layer
+        T = xs.shape[0]
+        flat_b = math.prod(batch_shape)
+        hs, (h_T, c_T) = step_layer(
+            params, xs.reshape(T, flat_b, params.n_x),
+            h0=h0.reshape(flat_b, n_h), c0=c0.reshape(flat_b, n_h),
+            return_state=True, interpret=jax.default_backend() != 'tpu')
+        return (hs.reshape((T,) + batch_shape + (n_h,)),
+                (h_T.reshape(batch_shape + (n_h,)),
+                 c_T.reshape(batch_shape + (n_h,))))
     pre_x = jnp.einsum('ghx,t...x->t...gh', params.w_x, xs)
     return lstm_scan_fused(params.w_h, params.w_peep, params.b, pre_x, h0, c0)
 
@@ -223,7 +304,7 @@ def init_lstm_stack(key: jax.Array, n_x: int, n_h: int, n_layers: int,
 
 def lstm_stack_apply(params: LSTMStackParams, xs: jax.Array,
                      states: Optional[Sequence[Tuple[jax.Array, jax.Array]]] = None,
-                     ) -> Tuple[jax.Array, list]:
+                     backend: str = 'auto') -> Tuple[jax.Array, list]:
     """Full network: stacked LSTM layers + optional dense read-out (logits, no sigma).
 
     xs: (T, B, N_x).  Returns (ys (T, B, N_out or N_h), final states per layer).
@@ -232,7 +313,7 @@ def lstm_stack_apply(params: LSTMStackParams, xs: jax.Array,
     finals = []
     for l, lp in enumerate(params.layers):
         h0c0 = states[l] if states is not None else (None, None)
-        h, (h_T, c_T) = lstm_layer_fused(lp, h, *h0c0)
+        h, (h_T, c_T) = lstm_layer_fused(lp, h, *h0c0, backend=backend)
         finals.append((h_T, c_T))
     if params.w_out is not None:
         h = jnp.einsum('oh,tbh->tbo', params.w_out, h) + params.b_out

@@ -134,6 +134,13 @@ def saturate_int16(x: jax.Array) -> jax.Array:
     return jnp.clip(x, INT16_MIN, INT16_MAX)
 
 
+def rshift_round(x, shift: int):
+    """Arithmetic right shift with round-to-nearest — the silicon's alignment
+    step.  Single definition: the systolic cell and the sequence kernel must
+    stay bit-identical to each other."""
+    return (x + (1 << (shift - 1))) >> shift if shift > 0 else x
+
+
 # ---------------------------------------------------------------------------
 # LUT activations — the hardware's sigmoid/tanh
 # ---------------------------------------------------------------------------

@@ -36,9 +36,9 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
-from jax.sharding import AxisType, Mesh, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import AxisType, mesh_with_axis_types, shard_map
 from . import quant
 from .lstm import GATES, I, F, G, O, PEEP_I, PEEP_F, PEEP_O, LSTMParams
 
@@ -232,8 +232,7 @@ def _sat16(x):
     return quant.saturate_int16(x)
 
 
-def _rshift_round(x, shift):
-    return (x + (1 << (shift - 1))) >> shift if shift > 0 else x
+_rshift_round = quant.rshift_round
 
 
 def systolic_cell_quantized(qp: QuantizedPackedLSTM, x_q: jax.Array,
@@ -327,8 +326,8 @@ def make_systolic_mesh(rows: int, cols: int, stage: int = 1,
     if len(devices) < need:
         raise ValueError(f'need {need} devices, have {len(devices)}')
     arr = np.array(devices[:need]).reshape(stage, rows, cols)
-    return Mesh(arr, ('stage', 'row', 'col'),
-                axis_types=(AxisType.Auto,) * 3)
+    return mesh_with_axis_types(arr, ('stage', 'row', 'col'),
+                                axis_types=(AxisType.Auto,) * 3)
 
 
 def shard_packed_lstm(packed: PackedLSTM, mesh: Mesh) -> PackedLSTM:

@@ -9,6 +9,6 @@ Kernels are validated on CPU with interpret=True; the production dry-run uses
 the pure-JAX equivalents (``use_pallas=False``) since the CPU backend cannot
 lower Mosaic kernels.
 """
-from . import flash_attention, lstm_gates, quant_matmul
+from . import flash_attention, lstm_gates, lstm_seq, quant_matmul
 
-__all__ = ['flash_attention', 'lstm_gates', 'quant_matmul']
+__all__ = ['flash_attention', 'lstm_gates', 'lstm_seq', 'quant_matmul']

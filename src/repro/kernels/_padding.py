@@ -1,0 +1,28 @@
+"""Shared zero-padding helpers for the kernel ``ops`` wrappers.
+
+One definition, so the per-step and whole-sequence LSTM paths can never
+silently diverge in alignment semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def pad_axis_to(x: jax.Array, size: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` up to exactly ``size`` elements."""
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def pad_axis_to_multiple(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple of ``mult``."""
+    return pad_axis_to(x, round_up(x.shape[axis], mult), axis)

@@ -1,5 +1,6 @@
-from .kernel import lstm_gates
+from .kernel import lstm_gates, lstm_gates_rec
 from .ops import lstm_cell_fused, lstm_layer_fused
 from .ref import lstm_gates_ref
 
-__all__ = ['lstm_gates', 'lstm_cell_fused', 'lstm_layer_fused', 'lstm_gates_ref']
+__all__ = ['lstm_gates', 'lstm_gates_rec', 'lstm_cell_fused',
+           'lstm_layer_fused', 'lstm_gates_ref']

@@ -21,6 +21,22 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _gate_phase(pre, peep_ref, bias_ref, c_ref, h_out_ref, c_out_ref):
+    """Fused elementwise epilogue shared by both step kernels.
+
+    pre: (B, 4, bn) f32 accumulator; writes h/c output blocks."""
+    peep = peep_ref[...].astype(jnp.float32)   # (3, bn)
+    bias = bias_ref[...].astype(jnp.float32)   # (4, bn)
+    c_prev = c_ref[...].astype(jnp.float32)    # (B, bn)
+    i = jax.nn.sigmoid(pre[:, 0] + peep[0] * c_prev + bias[0])
+    f = jax.nn.sigmoid(pre[:, 1] + peep[1] * c_prev + bias[1])
+    g = jnp.tanh(pre[:, 2] + bias[2])
+    c_new = f * c_prev + i * g
+    o = jax.nn.sigmoid(pre[:, 3] + peep[2] * c_new + bias[3])
+    h_out_ref[...] = (o * jnp.tanh(c_new)).astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
 def _kernel(xh_ref, w_ref, peep_ref, bias_ref, c_ref, h_out_ref, c_out_ref,
             acc_ref, *, n_k: int):
     @pl.when(pl.program_id(1) == 0)
@@ -35,17 +51,64 @@ def _kernel(xh_ref, w_ref, peep_ref, bias_ref, c_ref, h_out_ref, c_out_ref,
 
     @pl.when(pl.program_id(1) == n_k - 1)
     def _elementwise():
-        pre = acc_ref[...]                 # (B, 4, bn)
-        peep = peep_ref[...].astype(jnp.float32)   # (3, bn)
-        bias = bias_ref[...].astype(jnp.float32)   # (4, bn)
-        c_prev = c_ref[...].astype(jnp.float32)    # (B, bn)
-        i = jax.nn.sigmoid(pre[:, 0] + peep[0] * c_prev + bias[0])
-        f = jax.nn.sigmoid(pre[:, 1] + peep[1] * c_prev + bias[1])
-        g = jnp.tanh(pre[:, 2] + bias[2])
-        c_new = f * c_prev + i * g
-        o = jax.nn.sigmoid(pre[:, 3] + peep[2] * c_new + bias[3])
-        h_out_ref[...] = (o * jnp.tanh(c_new)).astype(h_out_ref.dtype)
-        c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+        _gate_phase(acc_ref[...], peep_ref, bias_ref, c_ref,
+                    h_out_ref, c_out_ref)
+
+
+def _kernel_rec(h_ref, w_ref, pre_ref, peep_ref, bias_ref, c_ref, h_out_ref,
+                c_out_ref, acc_ref, *, n_k: int):
+    """Recurrent-only step: the accumulator starts from the hoisted W_x @ x_t
+    pre-activations instead of zero, so the scan body only pays the W_h MACs."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = pre_ref[...].astype(jnp.float32)
+
+    h = h_ref[...]                         # (B, bk)
+    for g in range(4):
+        acc_ref[:, g, :] += jax.lax.dot_general(
+            h, w_ref[g], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == n_k - 1)
+    def _elementwise():
+        _gate_phase(acc_ref[...], peep_ref, bias_ref, c_ref,
+                    h_out_ref, c_out_ref)
+
+
+@functools.partial(jax.jit, static_argnames=('bn', 'bk', 'interpret'))
+def lstm_gates_rec(h: jax.Array, w_h: jax.Array, pre: jax.Array,
+                   peep: jax.Array, bias: jax.Array, c_prev: jax.Array, *,
+                   bn: int = 128, bk: int = 128, interpret: bool = False):
+    """Recurrent step with hoisted input contribution.
+
+    h: (B, N_h); w_h: (4, N_h, N_h); pre: (B, 4, N_h) = W_x @ x_t;
+    peep: (3, N_h); bias: (4, N_h); c_prev: (B, N_h)."""
+    b, n_h = h.shape
+    assert n_h % bn == 0 and n_h % bk == 0, (n_h, bn, bk)
+    n_k = n_h // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel_rec, n_k=n_k),
+        grid=(n_h // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((b, bk), lambda j, kk: (0, kk)),
+            pl.BlockSpec((4, bn, bk), lambda j, kk: (0, j, kk)),
+            pl.BlockSpec((b, 4, bn), lambda j, kk: (0, 0, j)),
+            pl.BlockSpec((3, bn), lambda j, kk: (0, j)),
+            pl.BlockSpec((4, bn), lambda j, kk: (0, j)),
+            pl.BlockSpec((b, bn), lambda j, kk: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, bn), lambda j, kk: (0, j)),
+            pl.BlockSpec((b, bn), lambda j, kk: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_h), h.dtype),
+            jax.ShapeDtypeStruct((b, n_h), h.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((b, 4, bn), jnp.float32)],
+        interpret=interpret,
+    )(h, w_h, pre, peep, bias, c_prev)
 
 
 @functools.partial(jax.jit, static_argnames=('bn', 'bk', 'interpret'))

@@ -1,0 +1,8 @@
+from .kernel import lstm_seq, lstm_seq_quantized
+from .ops import (lstm_layer_seq, lstm_layer_seq_quantized, lstm_seq_fused,
+                  vmem_bytes_estimate)
+from .ref import lstm_seq_ref
+
+__all__ = ['lstm_seq', 'lstm_seq_quantized', 'lstm_layer_seq',
+           'lstm_layer_seq_quantized', 'lstm_seq_fused', 'lstm_seq_ref',
+           'vmem_bytes_estimate']

@@ -1,0 +1,253 @@
+"""Pallas TPU kernel: persistent whole-sequence LSTM (weight-stationary).
+
+This is the TPU analogue of Chipmunk's core loop (Sec. 3.2): the packed gate
+matrix stays resident in engine SRAM for the *entire* utterance and the
+``h``/``c`` state never leaves the local register file between timesteps.  The
+per-step kernel in ``kernels/lstm_gates`` re-streams ``W`` from HBM and
+round-trips ``h``/``c`` through HBM on every timestep; here one ``pallas_call``
+owns the whole sequence:
+
+  * grid ``(T, N_h/bn, N_h/bk)`` — time outermost, then the output-row blocks,
+    then the recurrent reduction blocks;
+  * the recurrent weight ``W_h`` (4, N_h, N_h), peepholes, and biases use
+    constant index maps, so Mosaic DMAs them into VMEM once and every grid step
+    revisits the same resident copy (weight-stationary block residency);
+  * ``h``/``c`` live in VMEM scratch across all T steps.  ``h`` is
+    double-buffered on t-parity because step t+1's reduction reads *all* of
+    ``h_t`` while step t is still writing it block by block; ``c`` is updated
+    in place (block j of ``c_t`` depends only on block j of ``c_{t-1}``);
+  * the non-recurrent contribution ``W_x @ x_t`` is hoisted out of the
+    recurrence into one wide matmul (exactly like ``core.lstm.lstm_layer``)
+    and streamed into the kernel per (t, j) block;
+  * the elementwise phase (peepholes, nonlinearities, state update) fuses into
+    the final K step, so gate pre-activations never touch HBM.
+
+The int8 variant (`lstm_seq_quantized`) runs the same persistent schedule over
+the bit-accurate systolic datapath of ``core.systolic.systolic_cell_quantized``:
+int8 weight tiles resident in VMEM, per-tile int32 MACs saturated to int16, a
+sequential saturating hop over the column blocks (x-region columns streamed,
+h-region columns read from the VMEM state), LUT nonlinearities, and the exact
+shift/clip alignment of the silicon.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core import quant
+from ...core.systolic import ACC_FMT, CELL_FMT
+
+
+# ---------------------------------------------------------------------------
+# f32 kernel
+# ---------------------------------------------------------------------------
+
+def _seq_kernel(pre_x_ref, w_ref, peep_ref, bias_ref, h0_ref, c0_ref,
+                hs_ref, cs_ref, h_scr, c_scr, acc_ref, *, n_k: int,
+                bn: int, bk: int):
+    t = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when((t == 0) & (j == 0) & (k == 0))
+    def _load_state():
+        h_scr[0] = h0_ref[...].astype(jnp.float32)
+        c_scr[...] = c0_ref[...].astype(jnp.float32)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Recurrent reduction: one (B, bk) x (bk, bn) MXU dot per gate against the
+    # VMEM-resident weight block.  h_{t-1} comes from the t-parity scratch slot.
+    h_prev = h_scr[t % 2, :, pl.ds(k * bk, bk)]                # (B, bk)
+    for g in range(4):
+        acc_ref[g] += jax.lax.dot_general(
+            h_prev, w_ref[g, pl.ds(j * bn, bn), pl.ds(k * bk, bk)],
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _elementwise():
+        sl = pl.ds(j * bn, bn)
+        pre = acc_ref[...] + pre_x_ref[0].astype(jnp.float32)  # (4, B, bn)
+        peep = peep_ref[:, sl].astype(jnp.float32)             # (3, bn)
+        bias = bias_ref[:, sl].astype(jnp.float32)             # (4, bn)
+        c_prev = c_scr[:, sl]                                  # (B, bn)
+        i = jax.nn.sigmoid(pre[0] + peep[0] * c_prev + bias[0])
+        f = jax.nn.sigmoid(pre[1] + peep[1] * c_prev + bias[1])
+        g = jnp.tanh(pre[2] + bias[2])
+        c_new = f * c_prev + i * g
+        o = jax.nn.sigmoid(pre[3] + peep[2] * c_new + bias[3])
+        h_new = o * jnp.tanh(c_new)
+        h_scr[(t + 1) % 2, :, sl] = h_new
+        c_scr[:, sl] = c_new
+        hs_ref[0] = h_new.astype(hs_ref.dtype)
+        cs_ref[0] = c_new.astype(cs_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=('bn', 'bk', 'interpret'))
+def lstm_seq(pre_x: jax.Array, w_h: jax.Array, peep: jax.Array,
+             bias: jax.Array, h0: jax.Array, c0: jax.Array, *,
+             bn: int = 128, bk: int = 128, interpret: bool = False):
+    """Whole-sequence fused LSTM.
+
+    pre_x: (T, 4, B, N_h) hoisted ``W_x @ x_t + (0)`` pre-activations;
+    w_h: (4, N_h, N_h); peep: (3, N_h); bias: (4, N_h); h0, c0: (B, N_h).
+    N_h must be a multiple of both bn and bk; B a multiple of 8.
+    Returns (hs, cs), each (T, B, N_h).
+    """
+    T, _, b, n_h = pre_x.shape
+    assert n_h % bn == 0 and n_h % bk == 0, (n_h, bn, bk)
+    n_k = n_h // bk
+
+    hs, cs = pl.pallas_call(
+        functools.partial(_seq_kernel, n_k=n_k, bn=bn, bk=bk),
+        grid=(T, n_h // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 4, b, bn), lambda t, j, k: (t, 0, 0, j)),
+            # Constant index maps: fetched once, resident for the whole grid.
+            pl.BlockSpec((4, n_h, n_h), lambda t, j, k: (0, 0, 0)),
+            pl.BlockSpec((3, n_h), lambda t, j, k: (0, 0)),
+            pl.BlockSpec((4, n_h), lambda t, j, k: (0, 0)),
+            pl.BlockSpec((b, n_h), lambda t, j, k: (0, 0)),
+            pl.BlockSpec((b, n_h), lambda t, j, k: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b, bn), lambda t, j, k: (t, 0, j)),
+            pl.BlockSpec((1, b, bn), lambda t, j, k: (t, 0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, b, n_h), pre_x.dtype),
+            jax.ShapeDtypeStruct((T, b, n_h), pre_x.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, b, n_h), jnp.float32),   # h double buffer (t parity)
+            pltpu.VMEM((b, n_h), jnp.float32),      # c, updated in place
+            pltpu.VMEM((4, b, bn), jnp.float32),    # gate pre-act accumulator
+        ],
+        interpret=interpret,
+    )(pre_x, w_h, peep, bias, h0, c0)
+    return hs, cs
+
+
+# ---------------------------------------------------------------------------
+# int8 kernel — bit-accurate systolic datapath (contribution C2)
+# ---------------------------------------------------------------------------
+
+_sat16 = quant.saturate_int16
+_rshift_round = quant.rshift_round
+
+
+def _seq_kernel_q(xs_ref, w_ref, peep_ref, bias_ref, sig_ref, tanh_ref,
+                  hs_ref, h_scr, c_scr, acc_ref, *, n_c: int, cols_x: int,
+                  tile: int):
+    t = pl.program_id(0)
+    r = pl.program_id(1)
+    c = pl.program_id(2)
+
+    @pl.when((t == 0) & (r == 0) & (c == 0))
+    def _zero_state():
+        h_scr[...] = jnp.zeros_like(h_scr)
+        c_scr[...] = jnp.zeros_like(c_scr)
+
+    @pl.when(c == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Column input: x-region columns consume the streamed frame slice, h-region
+    # columns read the resident hidden state (the chip's vertical re-broadcast).
+    h_off = jnp.maximum(c - cols_x, 0) * tile
+    h_col = jax.lax.dynamic_slice(h_scr[t % 2], (0, h_off),
+                                  (h_scr.shape[1], tile))
+    col_in = jnp.where(c < cols_x, xs_ref[0], h_col).astype(jnp.int32)
+
+    # Per-engine tile MAC in wide arithmetic, saturated to the 16-bit value an
+    # engine hands to its row neighbour, then the sequential saturating hop.
+    for g in range(4):
+        partial = _sat16(jax.lax.dot_general(
+            col_in, w_ref[g, pl.ds(r * tile, tile),
+                          pl.ds(c * tile, tile)].astype(jnp.int32),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32))
+        acc_ref[g] = _sat16(acc_ref[g] + partial)
+
+    @pl.when(c == n_c - 1)
+    def _elementwise():
+        sl = pl.ds(r * tile, tile)
+        c_prev32 = c_scr[:, sl].astype(jnp.int32)
+        peep32 = peep_ref[:, sl].astype(jnp.int32)
+        bias32 = bias_ref[:, sl].astype(jnp.int32)
+        sig_lut = sig_ref[0]
+        tanh_lut = tanh_ref[0]
+        shift8 = ACC_FMT.frac_bits - quant.STATE_FMT.frac_bits
+
+        def gate(idx, peep_idx, c_term, lut):
+            a = acc_ref[idx] + bias32[idx]
+            if peep_idx is not None:
+                a = a + peep32[peep_idx] * c_term
+            a = _sat16(a)
+            a8 = jnp.clip(_rshift_round(a, shift8), -128, 127)
+            return quant.apply_lut(lut, a8, quant.STATE_FMT).astype(jnp.int32)
+
+        i = gate(0, 0, c_prev32, sig_lut)
+        f = gate(1, 1, c_prev32, sig_lut)
+        g = gate(2, None, None, tanh_lut)
+        fc = f * c_prev32                        # Q0.7 * Q2.5 -> frac 12
+        ig = _rshift_round(i * g, 2)             # frac 14 -> 12
+        c_new = _sat16(fc + ig)                  # Q3.12
+        c_new8 = jnp.clip(
+            _rshift_round(c_new, CELL_FMT.frac_bits - quant.STATE_FMT.frac_bits),
+            -128, 127)
+        o = gate(3, 2, c_new8, sig_lut)
+        tanh_c = quant.apply_lut(tanh_lut, c_new8,
+                                 quant.STATE_FMT).astype(jnp.int32)
+        h_new = _rshift_round(o * tanh_c, 14 - quant.STATE_FMT.frac_bits)
+        h8 = jnp.clip(h_new, -128, 127).astype(jnp.int8)
+
+        h_scr[(t + 1) % 2, :, sl] = h8
+        c_scr[:, sl] = c_new8.astype(jnp.int8)
+        hs_ref[0] = h8
+
+
+@functools.partial(jax.jit, static_argnames=('tile', 'cols_x', 'interpret'))
+def lstm_seq_quantized(xs_q: jax.Array, w_q: jax.Array, peep_q: jax.Array,
+                       bias_q: jax.Array, sig_lut: jax.Array,
+                       tanh_lut: jax.Array, *, tile: int, cols_x: int,
+                       interpret: bool = False) -> jax.Array:
+    """Whole-sequence bit-accurate int8 LSTM.
+
+    xs_q: (T, B, padded_x) int8 frame codes; w_q: (4, padded_h, padded_in) int8
+    dense engine-tile layout (``[W_x | W_h]`` with the x-region padded to whole
+    tiles); peep_q: (3, padded_h) int8; bias_q: (4, padded_h) int16 in ACC_FMT;
+    sig_lut/tanh_lut: (1, 256) int8.  Returns hs_q (T, B, padded_h) int8,
+    bit-identical to scanning ``core.systolic.systolic_cell_quantized``.
+    """
+    T, b, padded_x = xs_q.shape
+    _, padded_h, padded_in = w_q.shape
+    assert padded_x == cols_x * tile and padded_in % tile == 0
+    n_c = padded_in // tile
+
+    return pl.pallas_call(
+        functools.partial(_seq_kernel_q, n_c=n_c, cols_x=cols_x, tile=tile),
+        grid=(T, padded_h // tile, n_c),
+        in_specs=[
+            pl.BlockSpec((1, b, tile),
+                         lambda t, r, c: (t, 0, jnp.minimum(c, cols_x - 1))),
+            pl.BlockSpec((4, padded_h, padded_in), lambda t, r, c: (0, 0, 0)),
+            pl.BlockSpec((3, padded_h), lambda t, r, c: (0, 0)),
+            pl.BlockSpec((4, padded_h), lambda t, r, c: (0, 0)),
+            pl.BlockSpec((1, 256), lambda t, r, c: (0, 0)),
+            pl.BlockSpec((1, 256), lambda t, r, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b, tile), lambda t, r, c: (t, 0, r)),
+        out_shape=jax.ShapeDtypeStruct((T, b, padded_h), jnp.int8),
+        scratch_shapes=[
+            pltpu.VMEM((2, b, padded_h), jnp.int8),   # h codes, t parity
+            pltpu.VMEM((b, padded_h), jnp.int8),      # c codes
+            pltpu.VMEM((4, b, tile), jnp.int32),      # saturating accumulator
+        ],
+        interpret=interpret,
+    )(xs_q, w_q, peep_q, bias_q, sig_lut, tanh_lut)

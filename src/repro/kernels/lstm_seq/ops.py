@@ -1,0 +1,161 @@
+"""Public ops for the persistent whole-sequence LSTM kernel.
+
+``lstm_layer_seq`` is a drop-in for ``core.lstm.lstm_layer`` (same contract,
+same custom-VJP training semantics as ``lstm_layer_fused``): padding to MXU
+tiles, the hoisted ``W_x @ x`` matmul, and un-padding all live here so call
+sites never see kernel geometry.  ``lstm_layer_seq_quantized`` is the
+whole-sequence form of ``core.systolic.systolic_layer_quantized`` —
+bit-identical output, one kernel launch instead of T.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.lstm import GATES, LSTMParams, lstm_bwd_recompute_gates
+from ...core.systolic import QuantizedPackedLSTM
+from .._padding import pad_axis_to as _pad_to, round_up as _round_up
+from .kernel import lstm_seq, lstm_seq_quantized
+
+
+def vmem_bytes_estimate(n_h: int, batch: int, bn: int = 128,
+                        bk: int = 128, dtype_bytes: int = 4) -> int:
+    """Resident VMEM working set of the f32 sequence kernel (for selection)."""
+    n_h_p = _round_up(n_h, math.lcm(bn, bk))
+    b_p = max(8, _round_up(batch, 8))
+    weights = GATES * n_h_p * n_h_p * dtype_bytes
+    consts = (3 + GATES) * n_h_p * dtype_bytes
+    state = 3 * b_p * n_h_p * 4 + 2 * b_p * n_h_p * dtype_bytes  # scratch + h0/c0
+    stream = 2 * (GATES * b_p * bn * dtype_bytes + 2 * b_p * bn * dtype_bytes)
+    return weights + consts + state + stream
+
+
+# ---------------------------------------------------------------------------
+# f32 path with the production training VJP
+# ---------------------------------------------------------------------------
+
+def _seq_forward(cfg, w_h, w_peep, b, pre_x, h0, c0):
+    """Pad, run the kernel, un-pad.  pre_x: (T, B, 4, N_h) core layout."""
+    bn, bk, interpret = cfg
+    T, B, _, n_h = pre_x.shape
+    n_h_p = _round_up(n_h, math.lcm(bn, bk))
+    b_p = max(8, _round_up(B, 8))
+
+    pre_k = jnp.transpose(pre_x, (0, 2, 1, 3))            # (T, 4, B, N_h)
+    pre_k = _pad_to(_pad_to(pre_k, n_h_p, 3), b_p, 2)
+    w_p = _pad_to(_pad_to(w_h, n_h_p, 1), n_h_p, 2)
+    peep_p = _pad_to(w_peep, n_h_p, 1)
+    bias_p = _pad_to(b, n_h_p, 1)
+    h0_p = _pad_to(_pad_to(h0, n_h_p, 1), b_p, 0)
+    c0_p = _pad_to(_pad_to(c0, n_h_p, 1), b_p, 0)
+
+    hs, cs = lstm_seq(pre_k, w_p, peep_p, bias_p, h0_p, c0_p,
+                      bn=bn, bk=bk, interpret=interpret)
+    return hs[:, :B, :n_h], cs[:, :B, :n_h]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def lstm_seq_fused(cfg, w_h, w_peep, b, pre_x, h0, c0):
+    """Same contract as ``core.lstm.lstm_scan_fused`` but one kernel launch.
+
+    cfg is the static (bn, bk, interpret) tuple; pre_x: (T, B, 4, N_h).
+    """
+    hs, cs = _seq_forward(cfg, w_h, w_peep, b, pre_x, h0, c0)
+    return hs, (hs[-1], cs[-1])
+
+
+def _seq_fwd(cfg, w_h, w_peep, b, pre_x, h0, c0):
+    hs, cs = _seq_forward(cfg, w_h, w_peep, b, pre_x, h0, c0)
+    return (hs, (hs[-1], cs[-1])), (w_h, w_peep, b, pre_x, hs, cs, h0, c0)
+
+
+def _seq_bwd(cfg, res, grads):
+    w_h, w_peep, b, pre_x, hs, cs, h0, c0 = res
+    return lstm_bwd_recompute_gates(w_h, w_peep, b, pre_x, hs, cs, h0, c0,
+                                    grads)
+
+
+lstm_seq_fused.defvjp(_seq_fwd, _seq_bwd)
+
+
+def lstm_layer_seq(params: LSTMParams, xs: jax.Array,
+                   h0: Optional[jax.Array] = None,
+                   c0: Optional[jax.Array] = None, *,
+                   bn: Optional[int] = None, bk: Optional[int] = None,
+                   interpret: Optional[bool] = None
+                   ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Drop-in for ``core.lstm.lstm_layer`` via the whole-sequence kernel.
+
+    xs: (T, B, N_x) -> (hs (T, B, N_h), (h_T, c_T)).  Differentiable (the VJP
+    recomputes gates from the saved h/c trajectories).
+
+    Default blocking is shape-aware: when the padded hidden row fits a single
+    block (N_h <= 512) the whole row is one grid step — the weights are
+    resident either way, and fewer grid steps means less per-step machinery.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != 'tpu'
+    if bn is None or bk is None:
+        # Largest block that divides the 128-padded width, so auto blocking
+        # never pads beyond what vmem_bytes_estimate (the backend-selection
+        # admission test) assumed.
+        n_h_p = _round_up(params.n_h, 128)
+        auto = next(b for b in (512, 256, 128) if n_h_p % b == 0)
+        bn = bn or auto
+        bk = bk or auto
+    n_h = params.n_h
+    T = xs.shape[0]
+    batch_shape = xs.shape[1:-1]
+    B = int(math.prod(batch_shape)) if batch_shape else 1
+    if h0 is None:
+        h0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
+    if c0 is None:
+        c0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
+    xs_flat = xs.reshape(T, B, params.n_x)
+    pre_x = jnp.einsum('ghx,tbx->tbgh', params.w_x, xs_flat)  # hoisted matmul
+    hs, (h_T, c_T) = lstm_seq_fused(
+        (bn, bk, bool(interpret)), params.w_h, params.w_peep, params.b,
+        pre_x, h0.reshape(B, n_h), c0.reshape(B, n_h))
+    hs = hs.reshape((T,) + batch_shape + (n_h,))
+    return hs, (h_T.reshape(batch_shape + (n_h,)),
+                c_T.reshape(batch_shape + (n_h,)))
+
+
+# ---------------------------------------------------------------------------
+# int8 path — whole-sequence systolic datapath
+# ---------------------------------------------------------------------------
+
+def _dense_from_tiles(qp: QuantizedPackedLSTM):
+    """(R, C, 4, t, t) engine tiles -> dense (4, R*t, C*t) VMEM layout."""
+    r, c, g, t, _ = qp.tiles_q.shape
+    w = jnp.transpose(qp.tiles_q, (2, 0, 3, 1, 4)).reshape(g, r * t, c * t)
+    peep = jnp.transpose(qp.peep_q, (1, 0, 2)).reshape(3, r * t)
+    bias = jnp.transpose(qp.bias_q, (1, 0, 2)).reshape(4, r * t)
+    return w, peep, bias
+
+
+def lstm_layer_seq_quantized(qp: QuantizedPackedLSTM, xs_q: jax.Array, *,
+                             interpret: Optional[bool] = None) -> jax.Array:
+    """Whole-sequence form of ``systolic_layer_quantized`` (bit-identical).
+
+    xs_q: (T, ..., n_x) int8 codes -> (T, ..., n_h) int8 hidden codes.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != 'tpu'
+    plan = qp.plan
+    batch_shape = xs_q.shape[1:-1]
+    T = xs_q.shape[0]
+    b = int(math.prod(batch_shape)) if batch_shape else 1
+    xs_flat = xs_q.reshape(T, b, plan.n_x)
+    xs_pad = jnp.zeros((T, b, plan.padded_x), jnp.int8
+                       ).at[..., :plan.n_x].set(xs_flat)
+    w_q, peep_q, bias_q = _dense_from_tiles(qp)
+    hs = lstm_seq_quantized(
+        xs_pad, w_q, peep_q, bias_q,
+        qp.sig_lut.reshape(1, 256), qp.tanh_lut.reshape(1, 256),
+        tile=plan.tile, cols_x=plan.cols_x, interpret=bool(interpret))
+    return hs[..., :plan.n_h].reshape((T,) + batch_shape + (plan.n_h,))

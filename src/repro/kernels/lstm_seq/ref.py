@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the whole-sequence kernel (hoisted-pre_x layout)."""
+import jax
+import jax.numpy as jnp
+
+
+def lstm_seq_ref(w_h, peep, bias, pre_x, h0, c0):
+    """pre_x: (T, B, 4, N_h); returns (hs, cs) each (T, B, N_h)."""
+
+    def step(carry, pre_x_t):
+        h, c = carry
+        pre = pre_x_t + jnp.einsum('ghk,bk->bgh', w_h, h)
+        i = jax.nn.sigmoid(pre[:, 0] + peep[0] * c + bias[0])
+        f = jax.nn.sigmoid(pre[:, 1] + peep[1] * c + bias[1])
+        g = jnp.tanh(pre[:, 2] + bias[2])
+        c = f * c + i * g
+        o = jax.nn.sigmoid(pre[:, 3] + peep[2] * c + bias[3])
+        h = o * jnp.tanh(c)
+        return (h, c), (h, c)
+
+    _, (hs, cs) = jax.lax.scan(step, (h0, c0), pre_x)
+    return hs, cs

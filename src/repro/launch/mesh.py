@@ -9,7 +9,9 @@ from __future__ import annotations
 from typing import Dict, Optional
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from ..compat import AxisType, make_mesh
 
 # TPU v5e constants used for the roofline analysis (per assignment).
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
@@ -20,8 +22,7 @@ ICI_BW = 50e9                 # B/s per link
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ('pod', 'data', 'model') if multi_pod else ('data', 'model')
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def resolve_rules(rules: Dict[str, object], mesh: Mesh) -> Dict[str, object]:

@@ -109,9 +109,13 @@ def main(argv=None):
     ap.add_argument('--requests', type=int, default=6)
     ap.add_argument('--slots', type=int, default=3)
     ap.add_argument('--max-new', type=int, default=8)
+    from ..core.lstm import BACKENDS
+    ap.add_argument('--lstm-backend', default='auto', choices=BACKENDS,
+                    help='LSTM execution engine (recurrent families)')
     args = ap.parse_args(argv)
 
-    cfg = configs.get_smoke_config(args.arch)
+    cfg = configs.get_smoke_config(args.arch).replace(
+        lstm_backend=args.lstm_backend)
     bundle = get_bundle(cfg)
     params, _ = bundle.init(jax.random.PRNGKey(0))
     server = SlotServer(cfg, params, num_slots=args.slots)

@@ -122,11 +122,11 @@ def local_mesh():
         if n % m == 0 and n >= m:
             model = m
             break
-    from jax.sharding import AxisType, Mesh
     import numpy as np
-    return Mesh(np.array(jax.devices()).reshape(n // model, model),
-                ('data', 'model'),
-                axis_types=(AxisType.Auto, AxisType.Auto))
+    from ..compat import AxisType, mesh_with_axis_types
+    return mesh_with_axis_types(
+        np.array(jax.devices()).reshape(n // model, model),
+        ('data', 'model'), axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 def main(argv=None):

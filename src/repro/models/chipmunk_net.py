@@ -38,10 +38,15 @@ def init(cfg: ArchConfig, key):
 
 
 def forward(cfg: ArchConfig, params: LSTMStackParams, frames: jax.Array):
-    """frames: (B, T, n_in) -> log-probs (T, B, n_out)."""
+    """frames: (B, T, n_in) -> log-probs (T, B, n_out).
+
+    The execution engine (XLA scan / per-step Pallas / whole-sequence Pallas)
+    is selected by ``cfg.lstm_backend`` — call sites never change (DESIGN.md
+    §3.3).
+    """
     xs = jnp.moveaxis(frames, 0, 1)                    # (T, B, n_in)
     xs = logical(xs, 'seq', 'batch', None)
-    ys, _ = lstm_stack_apply(params, xs)
+    ys, _ = lstm_stack_apply(params, xs, backend=cfg.lstm_backend)
     return jax.nn.log_softmax(ys, axis=-1)
 
 

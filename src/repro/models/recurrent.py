@@ -209,13 +209,22 @@ def init_slstm(cfg: ArchConfig, key):
     return p, axes
 
 
-def slstm_scan(p, zx, state, n_heads):
+def slstm_scan(p, zx, state, n_heads, backend: str = 'auto'):
     """Sequential sLSTM recurrence (exp input gate, normaliser + stabiliser).
 
     zx: (B,S,4,D) pre-computed input contributions (gate order z,i,f,o).
     The recurrent mat-vec r @ h is block-diagonal per head — the exact
     structure Chipmunk's systolic tiles execute (core/systolic.py).
+
+    ``backend`` follows the selector of ``core.lstm`` (DESIGN.md §3.3).  The
+    input contribution ``zx`` is already hoisted out of the loop (the
+    pallas_seq dataflow); the sLSTM elementwise phase (exp gates, normaliser,
+    stabiliser) is not yet ported into the sequence kernel, so every backend
+    currently resolves to the XLA scan here — the hook exists so call sites
+    are ready the day the kernel grows that epilogue.
     """
+    from ..core.lstm import BACKENDS
+    assert backend in BACKENDS, backend
     b, s, _, d = zx.shape
     h = n_heads
     dh = d // h
@@ -250,7 +259,8 @@ def slstm_block(cfg: ArchConfig, p, x, state=None):
     res = x
     xn = L.rms_norm(x, p['ln'])
     zx = jnp.einsum('bsd,gde->bsge', xn, p['w_in']) + p['b']   # (B,S,4,D)
-    y, state = slstm_scan(p, zx, state, cfg.n_heads)
+    y, state = slstm_scan(p, zx, state, cfg.n_heads,
+                          backend=cfg.lstm_backend)
     y = L.rms_norm(y.astype(x.dtype), p['out_norm'])
     x = (res + y).astype(res.dtype)
     # post-FFN (proj factor 4/3, gated)

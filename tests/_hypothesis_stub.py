@@ -1,0 +1,58 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (not installed in CI image).
+
+Implements just the surface the test-suite uses — ``given``, ``settings`` and
+the ``integers`` / ``floats`` / ``lists`` strategies — drawing a fixed number
+of pseudo-random examples from a seeded RNG.  No shrinking, no database; a
+failing example reproduces every run because the seed is constant.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, allow_nan=True, allow_infinity=True, **_kw):
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(lambda rnd: [elements.draw(rnd) for _ in
+                                  range(rnd.randint(min_size, max_size))])
+
+
+def given(*strats):
+    def deco(fn):
+        # NB: no functools.wraps — pytest must see the zero-arg signature of
+        # the wrapper, not the strategy parameters of the wrapped test.
+        def wrapper():
+            rnd = random.Random(0)
+            for _ in range(getattr(wrapper, '_max_examples', 10)):
+                fn(*[s.draw(rnd) for s in strats])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._max_examples = 10
+        return wrapper
+    return deco
+
+
+def settings(max_examples=10, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+strategies = types.ModuleType('hypothesis.strategies')
+strategies.integers = integers
+strategies.floats = floats
+strategies.lists = lists

@@ -1,0 +1,12 @@
+"""Test bootstrap: provide a hypothesis stand-in when it isn't installed."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+    sys.modules['hypothesis'] = _hypothesis_stub
+    sys.modules['hypothesis.strategies'] = _hypothesis_stub.strategies

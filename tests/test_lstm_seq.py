@@ -1,0 +1,145 @@
+"""Whole-sequence persistent LSTM kernel: interpret-mode equivalence sweeps.
+
+The f32 path must match ``core.lstm.lstm_layer`` (same recurrence, one
+kernel launch); the int8 path must be *bit-identical* to scanning
+``core.systolic.systolic_cell_quantized`` (the silicon datapath).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lstm, quant, systolic
+from repro.core.lstm import lstm_layer_fused, select_lstm_backend
+from repro.kernels.lstm_gates import lstm_layer_fused as lstm_layer_step
+from repro.kernels.lstm_seq import (lstm_layer_seq, lstm_layer_seq_quantized,
+                                    lstm_seq_ref, vmem_bytes_estimate)
+
+
+def _layer(key, n_x, n_h):
+    return lstm.init_lstm_params(jax.random.PRNGKey(key), n_x, n_h)
+
+
+# ------------------------------------------------------------------ f32 path
+@pytest.mark.parametrize('n_x,n_h,T,B,bn,bk', [
+    (64, 64, 4, 2, 64, 64),       # exact tiles
+    (64, 128, 6, 3, 64, 128),     # mixed block sizes (lcm padding)
+    (100, 150, 5, 3, 64, 64),     # ragged everything
+    (123, 421, 3, 2, 128, 128),   # the paper's CTC layer width
+    (32, 32, 1, 1, 32, 32),       # T=1, B=1 degenerate
+])
+def test_seq_matches_core_layer(n_x, n_h, T, B, bn, bk):
+    p = _layer(n_x + n_h, n_x, n_h)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (T, B, n_x)) * 0.5
+    hs_ref, (hT_ref, cT_ref) = lstm.lstm_layer(p, xs)
+    hs, (h_T, c_T) = lstm_layer_seq(p, xs, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(hs, hs_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h_T, hT_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_T, cT_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_seq_nonzero_initial_state():
+    p = _layer(0, 48, 80)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (7, 4, 48)) * 0.5
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (4, 80)) * 0.3
+    c0 = jax.random.normal(jax.random.PRNGKey(3), (4, 80)) * 0.3
+    hs_ref, (hT_ref, cT_ref) = lstm.lstm_layer(p, xs, h0, c0)
+    hs, (h_T, c_T) = lstm_layer_seq(p, xs, h0, c0, bn=64, bk=64,
+                                    interpret=True)
+    np.testing.assert_allclose(hs, hs_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_T, cT_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_seq_ref_oracle_matches_core():
+    p = _layer(7, 11, 13)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (6, 5, 11))
+    pre_x = jnp.einsum('ghx,tbx->tbgh', p.w_x, xs)
+    h0 = c0 = jnp.zeros((5, 13))
+    hs_r, cs_r = lstm_seq_ref(p.w_h, p.w_peep, p.b, pre_x, h0, c0)
+    hs_c, (_, c_T) = lstm.lstm_layer(p, xs)
+    np.testing.assert_allclose(hs_r, hs_c, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(cs_r[-1], c_T, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize('backend', ['pallas_seq', 'pallas_step'])
+def test_pallas_vjp_matches_scan_vjp(backend):
+    """Both kernel VJPs (gate recompute) == the hand-written scan VJP —
+    training must work whichever backend auto-selection picks."""
+    p = _layer(9, 32, 32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 2, 32)) * 0.5
+
+    def loss(params, be):
+        hs, (h_T, c_T) = lstm_layer_fused(params, xs, backend=be)
+        return jnp.sum(hs ** 2) + jnp.sum(h_T * c_T)
+
+    g_ref = jax.grad(lambda q: loss(q, 'xla_scan'))(p)
+    g_ker = jax.grad(lambda q: loss(q, backend))(p)
+    for name, a, b in zip(p._fields, g_ref, g_ker):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+# ------------------------------------------------------------------ int8 path
+@pytest.mark.parametrize('n_x,n_h,tile,T,B', [
+    (48, 64, 16, 12, 4),
+    (23, 37, 16, 5, 2),      # ragged vs tile
+    (96, 96, 96, 3, 2),      # single engine column/row pair
+])
+def test_seq_quantized_bit_identical(n_x, n_h, tile, T, B):
+    p = _layer(n_x * 31 + n_h, n_x, n_h)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (T, B, n_x)) * 0.5
+    qp = systolic.quantize_packed(
+        systolic.pack_lstm(p, systolic.SystolicPlan(n_x, n_h, tile)))
+    xs_q = quant.quantize(xs, quant.STATE_FMT)
+    hs_ref = systolic.systolic_layer_quantized(qp, xs_q)
+    hs = lstm_layer_seq_quantized(qp, xs_q, interpret=True)
+    assert hs.dtype == jnp.int8
+    assert bool(jnp.all(hs == hs_ref)), 'int8 sequence kernel diverged from ' \
+        'the bit-accurate systolic scan'
+
+
+# ------------------------------------------------- per-step kernel (hoisted)
+def test_step_layer_hoisted_matches_core():
+    p = _layer(3, 100, 150)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 3, 100)) * 0.5
+    hs_ref, (hT_ref, cT_ref) = lstm.lstm_layer(p, xs)
+    hs, (h_T, c_T) = lstm_layer_step(p, xs, bn=64, bk=64, interpret=True,
+                                     return_state=True)
+    np.testing.assert_allclose(hs, hs_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h_T, hT_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_T, cT_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_step_layer_initial_state():
+    p = _layer(4, 40, 56)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 40)) * 0.5
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (2, 56)) * 0.3
+    c0 = jax.random.normal(jax.random.PRNGKey(3), (2, 56)) * 0.3
+    hs_ref, _ = lstm.lstm_layer(p, xs, h0, c0)
+    hs = lstm_layer_step(p, xs, h0=h0, c0=c0, bn=64, bk=64, interpret=True)
+    np.testing.assert_allclose(hs, hs_ref, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------ backend select
+def test_backend_auto_is_xla_on_cpu():
+    assert select_lstm_backend(123, 421, 128, 8, platform='cpu') == 'xla_scan'
+
+
+def test_backend_auto_rules_on_tpu():
+    # the paper layer fits VMEM easily -> sequence kernel
+    assert select_lstm_backend(123, 421, 128, 8, platform='tpu') == 'pallas_seq'
+    # short sequences don't amortise residency -> per-step kernel
+    assert select_lstm_backend(123, 421, 2, 8, platform='tpu') == 'pallas_step'
+    # a hidden width whose resident weights blow VMEM -> never pallas_seq
+    big = select_lstm_backend(1024, 4096, 128, 8, platform='tpu')
+    assert big != 'pallas_seq'
+    assert vmem_bytes_estimate(4096, 8) > 12 * 1024 * 1024
+
+
+def test_all_backends_agree_forward():
+    p = _layer(11, 64, 64)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (6, 2, 64)) * 0.5
+    hs_scan, _ = lstm_layer_fused(p, xs, backend='xla_scan')
+    hs_step, _ = lstm_layer_fused(p, xs, backend='pallas_step')
+    hs_seq, _ = lstm_layer_fused(p, xs, backend='pallas_seq')
+    np.testing.assert_allclose(hs_step, hs_scan, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(hs_seq, hs_scan, rtol=1e-5, atol=1e-6)
