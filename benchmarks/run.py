@@ -10,9 +10,14 @@ tracked PR over PR.
   systolic_equivalence— Sec. 3 dataflow equivalence + int8 accuracy/timing
   kernel_bench        — kernel-layer reference timings (incl. the per-step vs
                         whole-sequence LSTM kernel comparison)
+  systolic_scaleout   — DESIGN.md §6: per-step vs persistent *distributed*
+                        execution on a multi-device mesh (subprocess with a
+                        forced host device count), incl. a scaled-down
+                        graves-75 configuration
   roofline_report     — roofline table from the multi-pod dry-run artifacts
 
   python -m benchmarks.run --suite kernels --json BENCH_kernels.json
+  python -m benchmarks.run --suite scaleout --json BENCH_systolic.json
 """
 import argparse
 import json
@@ -21,13 +26,15 @@ import platform
 
 def _suites():
     from . import (fig5_shmoo, kernel_bench, roofline_report,
-                   systolic_equivalence, table1_efficiency, table2_ctc)
+                   systolic_equivalence, systolic_scaleout, table1_efficiency,
+                   table2_ctc)
     return {
         'table1': table1_efficiency.run,
         'table2': table2_ctc.run,
         'fig5': fig5_shmoo.run,
         'systolic': systolic_equivalence.run,
         'kernels': kernel_bench.run,
+        'scaleout': systolic_scaleout.run,
         'roofline': roofline_report.run,
     }
 

@@ -1,0 +1,55 @@
+"""Execute every command in README.md's ```bash blocks (the CI smoke gate).
+
+Keeps the README honest: a command that rots fails CI.  Rules:
+  * only fenced blocks tagged ``bash`` are considered;
+  * blank lines and comment lines are skipped;
+  * lines containing ``pytest`` are skipped — the tier-1 gate runs in its own
+    CI job and would double the wall-clock here for no extra signal.
+
+Usage: python scripts/readme_smoke.py  (from the repo root or anywhere)
+"""
+import pathlib
+import re
+import subprocess
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+README = REPO / 'README.md'
+
+
+def readme_commands():
+    blocks = re.findall(r'```bash\n(.*?)```', README.read_text(), re.S)
+    cmds = []
+    for block in blocks:
+        for line in block.splitlines():
+            line = line.strip()
+            if not line or line.startswith('#') or 'pytest' in line:
+                continue
+            cmds.append(line)
+    return cmds
+
+
+def main() -> int:
+    cmds = readme_commands()
+    if not cmds:
+        print('no README commands found — README.md missing bash blocks?')
+        return 1
+    failures = []
+    for cmd in cmds:
+        print(f'[smoke] $ {cmd}', flush=True)
+        t0 = time.time()
+        proc = subprocess.run(cmd, shell=True, cwd=REPO, timeout=1800)
+        status = 'ok' if proc.returncode == 0 else f'FAIL({proc.returncode})'
+        print(f'[smoke] {status} in {time.time() - t0:.1f}s', flush=True)
+        if proc.returncode != 0:
+            failures.append(cmd)
+    print(f'[smoke] {len(cmds) - len(failures)}/{len(cmds)} README commands '
+          f'passed')
+    for cmd in failures:
+        print(f'[smoke] failed: {cmd}')
+    return 1 if failures else 0
+
+
+if __name__ == '__main__':
+    sys.exit(main())

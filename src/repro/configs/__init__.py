@@ -61,7 +61,9 @@ class ArchConfig:
     remat: str = 'full'                     # none | full | dots
     attn_chunk: int = 512                   # kv blocking for chunked attention
     use_pallas: bool = False                # TPU path; off for CPU/dry-run
-    lstm_backend: str = 'auto'              # auto | xla_scan | pallas_step | pallas_seq
+    # auto | xla_scan | pallas_step | pallas_seq | pallas_seq_systolic
+    # (core.lstm.BACKENDS; 'auto' also consults the installed systolic mesh)
+    lstm_backend: str = 'auto'
     optimizer: str = 'adamw'                # adamw | adafactor | sgd
     scan_layers: bool = True
 

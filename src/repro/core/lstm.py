@@ -209,10 +209,12 @@ def lstm_bwd_recompute_gates(w_h, w_peep, b, pre_x, hs, cs, h0, c0, grads):
 
 
 # ---------------------------------------------------------------------------
-# Backend dispatch: xla_scan | pallas_step | pallas_seq (DESIGN.md §3.3)
+# Backend dispatch: xla_scan | pallas_step | pallas_seq | pallas_seq_systolic
+# (DESIGN.md §3.3 and §6)
 # ---------------------------------------------------------------------------
 
-BACKENDS = ('auto', 'xla_scan', 'pallas_step', 'pallas_seq')
+BACKENDS = ('auto', 'xla_scan', 'pallas_step', 'pallas_seq',
+            'pallas_seq_systolic')
 
 # The sequence kernel keeps W_h + state resident in VMEM; leave headroom for
 # Mosaic's double-buffered streams out of the ~16 MB budget.
@@ -221,13 +223,26 @@ _SEQ_MIN_T = 8  # below this, per-launch savings don't pay for residency setup
 
 
 def select_lstm_backend(n_x: int, n_h: int, T: int, batch: int,
-                        *, platform: Optional[str] = None) -> str:
-    """Shape-based backend selection (see DESIGN.md §3.3).
+                        *, platform: Optional[str] = None,
+                        mesh=None) -> str:
+    """Shape-based backend selection (see DESIGN.md §3.3 and §6).
 
-    On non-TPU platforms Pallas kernels only exist in interpret mode (an
-    emulation for validation, not speed), so ``auto`` resolves to the XLA scan
-    there; tests and benchmarks opt into the kernels explicitly.
+    When a systolic mesh is installed (``core.systolic.install_mesh`` /
+    ``launch/mesh.py`` presets) and it admits the layer, ``auto`` resolves to
+    the multi-engine scale-out backend ``pallas_seq_systolic`` on ANY
+    platform — shard_map is real SPMD, not interpret-mode emulation, so it is
+    meaningful on CPU host devices too.  Otherwise, on non-TPU platforms
+    Pallas kernels only exist in interpret mode (an emulation for validation,
+    not speed), so ``auto`` resolves to the XLA scan there; tests and
+    benchmarks opt into the kernels explicitly.
     """
+    if mesh is None:
+        from .systolic import current_mesh
+        mesh = current_mesh()
+    if mesh is not None and T >= _SEQ_MIN_T:
+        from .systolic import seq_scaleout_admissible
+        if seq_scaleout_admissible(n_h, mesh):
+            return 'pallas_seq_systolic'
     platform = platform or jax.default_backend()
     if platform != 'tpu':
         return 'xla_scan'
@@ -246,8 +261,12 @@ def lstm_layer_fused(params: LSTMParams, xs: jax.Array,
     """lstm_layer with the hand-written VJP (production training path).
 
     ``backend`` selects the execution engine: the XLA scan, the per-timestep
-    Pallas kernel, or the persistent whole-sequence Pallas kernel; ``auto``
-    picks by shape/platform (select_lstm_backend).
+    Pallas kernel, the persistent whole-sequence Pallas kernel, or the
+    multi-engine systolic scale-out of the sequence kernel (which reads the
+    installed mesh — ``core.systolic.install_mesh``); ``auto`` picks by
+    shape/platform/mesh (select_lstm_backend).  All backends are numerically
+    interchangeable: forward allclose, backward through the same
+    gate-recompute VJP family.
     """
     assert backend in BACKENDS, backend
     n_h = params.n_h
@@ -259,6 +278,16 @@ def lstm_layer_fused(params: LSTMParams, xs: jax.Array,
         h0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
     if c0 is None:
         c0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
+    if backend == 'pallas_seq_systolic':
+        from .systolic import current_mesh, systolic_lstm_seq
+        T = xs.shape[0]
+        flat_b = math.prod(batch_shape)
+        hs, (h_T, c_T) = systolic_lstm_seq(
+            params, current_mesh(), xs.reshape(T, flat_b, params.n_x),
+            h0.reshape(flat_b, n_h), c0.reshape(flat_b, n_h))
+        return (hs.reshape((T,) + batch_shape + (n_h,)),
+                (h_T.reshape(batch_shape + (n_h,)),
+                 c_T.reshape(batch_shape + (n_h,))))
     if backend == 'pallas_seq':
         from ..kernels.lstm_seq import lstm_layer_seq
         return lstm_layer_seq(params, xs, h0, c0)

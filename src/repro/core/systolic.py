@@ -20,11 +20,30 @@ step 3 -> ``lax.psum`` over "col"; step 5 -> ``lax.all_gather`` over "row".  The
 pure-JAX tiled forms below are numerically identical and are what the production
 pjit path lowers (XLA emits the same collective schedule from sharding constraints).
 
-Three execution paths, all validated against ``core.lstm.lstm_cell``:
-  * ``systolic_cell_tiled``       — float, per-tile partials + row reduction.
-  * ``systolic_cell_quantized``   — bit-accurate int8 storage / int16 saturating hops
-                                    / LUT activations (contribution C2).
-  * ``systolic_lstm_shard_map``   — distributed over an explicit ("row","col") mesh.
+Four execution paths, all validated against ``core.lstm.lstm_cell``:
+  * ``systolic_cell_tiled``        — float, per-tile partials + row reduction.
+  * ``systolic_cell_quantized``    — bit-accurate int8 storage / int16 saturating
+                                     hops / LUT activations (contribution C2).
+  * ``systolic_lstm_shard_map``    — per-step distributed baseline over an
+                                     explicit ("row","col") mesh: one scan step
+                                     per timestep, the packed ``[x|h]`` column
+                                     re-assembled (and the x-region re-MACed)
+                                     every step.
+  * ``systolic_lstm_seq``          — the multi-engine scale-out of the
+                                     persistent whole-sequence kernel
+                                     (DESIGN.md §6): ``W_x @ x`` hoisted out of
+                                     the time loop, each device's weight block
+                                     tile-stationary for all T steps, per-step
+                                     ``psum`` over "col" and ``all_gather`` of
+                                     the ``h_t`` chunks over "row".  The int8
+                                     form (``systolic_lstm_seq_quantized``)
+                                     replays the 16-bit saturating hop in
+                                     engine order and is bit-identical to
+                                     ``systolic_cell_quantized``.
+
+A process-level mesh registry (``install_mesh`` / ``current_mesh``) lets the
+backend dispatch in ``core.lstm`` auto-select the scale-out path whenever a
+systolic mesh is installed (``launch/mesh.py`` topology presets).
 """
 from __future__ import annotations
 
@@ -43,6 +62,71 @@ from . import quant
 from .lstm import GATES, I, F, G, O, PEEP_I, PEEP_F, PEEP_O, LSTMParams
 
 N_LSTM_SILICON = 96  # rows per engine in the fabricated chip
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Process-level systolic mesh registry (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+_INSTALLED_MESH: Optional[Mesh] = None
+
+
+def install_mesh(mesh: Mesh) -> Mesh:
+    """Register ``mesh`` as the process-wide systolic mesh and return it.
+
+    ``core.lstm.select_lstm_backend`` consults this registry: when an
+    installed mesh admits the layer (``seq_scaleout_admissible``), ``auto``
+    resolves to the ``pallas_seq_systolic`` backend.  Numerics are unchanged
+    by installation — only dispatch is affected.
+    """
+    global _INSTALLED_MESH
+    _INSTALLED_MESH = mesh
+    return mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The installed systolic mesh, or None (dispatch then never scales out)."""
+    return _INSTALLED_MESH
+
+
+def clear_mesh() -> None:
+    """Uninstall the systolic mesh (dispatch reverts to single-engine rules)."""
+    global _INSTALLED_MESH
+    _INSTALLED_MESH = None
+
+
+def seq_scaleout_admissible(n_h: int, mesh: Optional[Mesh], *,
+                            row_axis: str = 'row', col_axis: str = 'col',
+                            vmem_budget: Optional[int] = None) -> bool:
+    """Tile-admission rule for ``systolic_lstm_seq`` (DESIGN.md §6).
+
+    True iff ``mesh`` has the two systolic axes, no other axis is >1 (a live
+    "stage" axis belongs to ``core.pipeline``), at least one systolic axis is
+    >1 (an all-1 mesh degenerates to the single-engine kernel, whose §3.3
+    platform/shape rules must keep deciding — interpret-mode emulation must
+    never be auto-picked on CPU), and one device's resident block — 4 gate
+    ``bn x bk`` tiles plus the row slice of peepholes/biases, where
+    ``bn = n_h_p/rows`` and ``bk = n_h_p/cols`` — fits the VMEM budget.
+    Admission never changes numerics, only whether ``auto`` dispatch picks
+    the scale-out backend.
+    """
+    if mesh is None:
+        return False
+    try:
+        mr, mc = _require_systolic_axes(mesh, row_axis, col_axis)
+    except ValueError:
+        return False
+    if mr == 1 and mc == 1:
+        return False
+    n_h_p = _round_up(n_h, math.lcm(mr, mc))
+    bn, bk = n_h_p // mr, n_h_p // mc
+    if vmem_budget is None:
+        from .lstm import _VMEM_BUDGET_BYTES as vmem_budget
+    return GATES * bn * bk * 4 + (3 + GATES) * bn * 4 <= vmem_budget
 
 
 # ---------------------------------------------------------------------------
@@ -101,7 +185,7 @@ class SystolicPlan:
 
 
 class PackedLSTM(NamedTuple):
-    """Weight tiles in engine layout."""
+    """Weight tiles in engine layout (a lossless relayout of LSTMParams)."""
 
     tiles: jax.Array   # (R, C, 4, tile, tile)
     peep: jax.Array    # (R, 3, tile)
@@ -115,7 +199,11 @@ class PackedLSTM(NamedTuple):
 
 
 def pack_lstm(params: LSTMParams, plan: SystolicPlan) -> PackedLSTM:
-    """Block [W_x | W_h] into (R, C, 4, t, t) engine tiles (zero padding)."""
+    """Block [W_x | W_h] into (R, C, 4, t, t) engine tiles (zero padding).
+
+    Layout-only and lossless: every downstream execution path over the packed
+    form reproduces ``core.lstm.lstm_cell`` on the original parameters.
+    """
     t = plan.tile
     w = jnp.zeros((GATES, plan.padded_h, plan.padded_in), params.w_x.dtype)
     w = w.at[:, :params.w_x.shape[1], :plan.n_x].set(params.w_x)
@@ -134,7 +222,11 @@ def pack_lstm(params: LSTMParams, plan: SystolicPlan) -> PackedLSTM:
 
 
 def pack_xh(x: jax.Array, h: jax.Array, plan: SystolicPlan) -> jax.Array:
-    """(..., n_x), (..., n_h) -> column blocks (..., C, tile)."""
+    """(..., n_x), (..., n_h) -> column blocks (..., C, tile).
+
+    Pure zero-padded relayout (exactly inverted by ``unpack_h`` on the
+    h-region); introduces no arithmetic.
+    """
     batch = x.shape[:-1]
     xh = jnp.zeros(batch + (plan.padded_in,), x.dtype)
     xh = xh.at[..., :plan.n_x].set(x)
@@ -143,7 +235,7 @@ def pack_xh(x: jax.Array, h: jax.Array, plan: SystolicPlan) -> jax.Array:
 
 
 def unpack_h(h_blocks: jax.Array, plan: SystolicPlan) -> jax.Array:
-    """(..., R, tile) -> (..., n_h)."""
+    """(..., R, tile) -> (..., n_h): drops the zero padding, no arithmetic."""
     return h_blocks.reshape(h_blocks.shape[:-2] + (plan.padded_h,))[..., :plan.n_h]
 
 
@@ -156,7 +248,9 @@ def systolic_cell_tiled(packed: PackedLSTM, x_t: jax.Array, h_prev: jax.Array,
                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One timestep in the systolic dataflow, float arithmetic.
 
-    c_prev_blocks: (..., R, tile).  Returns (h_full (..., n_h), h_blocks, c_blocks).
+    Numerics contract: allclose to ``core.lstm.lstm_cell`` on the unpacked
+    parameters (same math, re-associated per tile).  c_prev_blocks:
+    (..., R, tile).  Returns (h_full (..., n_h), h_blocks, c_blocks).
     """
     plan = packed.plan
     xh = pack_xh(x_t, h_prev, plan)                       # steps 1: column slices
@@ -174,7 +268,11 @@ def systolic_cell_tiled(packed: PackedLSTM, x_t: jax.Array, h_prev: jax.Array,
 
 
 def systolic_layer_tiled(packed: PackedLSTM, xs: jax.Array) -> jax.Array:
-    """Scan the tiled cell over time.  xs: (T, ..., n_x) -> (T, ..., n_h)."""
+    """Scan the tiled cell over time.  xs: (T, ..., n_x) -> (T, ..., n_h).
+
+    Allclose to ``core.lstm.lstm_layer`` and the float reference for the
+    distributed forms (``systolic_lstm_shard_map``, ``systolic_lstm_seq``).
+    """
     plan = packed.plan
     batch = xs.shape[1:-1]
     h0 = jnp.zeros(batch + (plan.n_h,), xs.dtype)
@@ -200,6 +298,8 @@ CELL_FMT = quant.QFormat(int_bits=3, frac_bits=12)  # f*c / i*g alignment format
 
 
 class QuantizedPackedLSTM(NamedTuple):
+    """Engine tiles in the silicon's fixed-point formats (see quantize_packed)."""
+
     tiles_q: jax.Array  # int8 (R, C, 4, t, t)
     peep_q: jax.Array   # int8 (R, 3, t)
     bias_q: jax.Array   # int16 (R, 4, t)  in ACC_FMT
@@ -214,6 +314,10 @@ class QuantizedPackedLSTM(NamedTuple):
 
 
 def quantize_packed(packed: PackedLSTM) -> QuantizedPackedLSTM:
+    """Quantize engine tiles to the silicon formats (weights/peep Q2.5 int8,
+    biases Q5.10 int16, LUT tables for the activations).  Deterministic
+    round-to-nearest; every int8 execution path below consumes exactly these
+    codes, so they all share one quantization error budget."""
     wf, sf = quant.WEIGHT_FMT, quant.STATE_FMT
     bias_codes = jnp.clip(
         jnp.round(packed.bias / ACC_FMT.scale),
@@ -235,14 +339,55 @@ def _sat16(x):
 _rshift_round = quant.rshift_round
 
 
+def _quantized_state_update(pre_acc, c_prev32, peep32, bias32, sig_lut,
+                            tanh_lut):
+    """Silicon elementwise epilogue: gates -> LUTs -> c_t -> h_t, int only.
+
+    Single source of truth for the bit-exact datapath tail: called by the
+    per-step ``systolic_cell_quantized`` AND replayed verbatim by the
+    distributed ``systolic_lstm_seq_quantized``, so the two stay bit-identical
+    by construction.  pre_acc: (..., R, 4, t) int32 in ACC_FMT; c_prev32:
+    (..., R, t) int32 codes; peep32: (..., R, 3, t); bias32: (..., R, 4, t).
+    Returns (h_blocks8, c_new8), both int8 codes in STATE_FMT.
+    """
+    def gate(idx, peep_idx, c_term, lut):
+        a = pre_acc[..., idx, :] + bias32[..., idx, :]
+        if peep_idx is not None:
+            a = a + peep32[..., peep_idx, :] * c_term  # Q2.5 * Q2.5, aligned
+        a = _sat16(a)
+        a8 = _rshift_round(a, ACC_FMT.frac_bits - quant.STATE_FMT.frac_bits)
+        a8 = jnp.clip(a8, -128, 127)
+        return quant.apply_lut(lut, a8, quant.STATE_FMT).astype(jnp.int32)
+
+    i = gate(I, PEEP_I, c_prev32, sig_lut)
+    f = gate(F, PEEP_F, c_prev32, sig_lut)
+    g = gate(G, None, None, tanh_lut)
+
+    # c_t = f.c + i.g : align Q0.7*Q2.5 (frac 12) with Q0.7*Q0.7 (frac 14) >> 2.
+    fc = f * c_prev32                       # frac 12
+    ig = _rshift_round(i * g, 2)            # frac 14 -> 12
+    c_new = _sat16(fc + ig)                 # Q3.12
+    c_new8 = jnp.clip(_rshift_round(c_new, CELL_FMT.frac_bits -
+                                    quant.STATE_FMT.frac_bits), -128, 127)
+
+    o = gate(O, PEEP_O, c_new8, sig_lut)
+    tanh_c = quant.apply_lut(tanh_lut, c_new8, quant.STATE_FMT).astype(jnp.int32)
+    h_new = _rshift_round(o * tanh_c, 14 - quant.STATE_FMT.frac_bits)
+    h_blocks8 = jnp.clip(h_new, -128, 127).astype(jnp.int8)
+    return h_blocks8, c_new8.astype(jnp.int8)
+
+
 def systolic_cell_quantized(qp: QuantizedPackedLSTM, x_q: jax.Array,
                             h_q: jax.Array, c_q_blocks: jax.Array
                             ) -> Tuple[jax.Array, jax.Array]:
     """One timestep in integer arithmetic, per the silicon datapath.
 
-    x_q: (..., n_x) int8 codes (Q2.5); h_q: (..., n_h) int8; c_q_blocks: (..., R, t)
-    int8.  Returns (h_q_new, c_q_blocks_new).  All intermediate semantics follow
-    the 16-bit saturating accumulator of the chip.
+    This is the bit-exactness REFERENCE: ``systolic_layer_quantized``,
+    ``kernels.lstm_seq.lstm_layer_seq_quantized`` and
+    ``systolic_lstm_seq_quantized`` are all bit-identical to scanning it.
+    x_q: (..., n_x) int8 codes (Q2.5); h_q: (..., n_h) int8; c_q_blocks:
+    (..., R, t) int8.  Returns (h_q_new, c_q_blocks_new).  All intermediate
+    semantics follow the 16-bit saturating accumulator of the chip.
     """
     plan = qp.plan
     xh_q = pack_xh(x_q, h_q, plan)  # (..., C, t) int8
@@ -261,41 +406,19 @@ def systolic_cell_quantized(qp: QuantizedPackedLSTM, x_q: jax.Array,
     acc0 = jnp.zeros(partials_c_first.shape[1:], jnp.int32)
     pre_acc, _ = jax.lax.scan(hop, acc0, partials_c_first)  # (..., R, 4, t) Q5.10
 
-    c_prev32 = c_q_blocks.astype(jnp.int32)
-    peep32 = qp.peep_q.astype(jnp.int32)
-    bias32 = qp.bias_q.astype(jnp.int32)
-
-    def gate(idx, peep_idx, c_term, lut):
-        a = pre_acc[..., idx, :] + bias32[:, idx]
-        if peep_idx is not None:
-            a = a + peep32[:, peep_idx] * c_term  # Q2.5 * Q2.5 -> Q*.10, aligned
-        a = _sat16(a)
-        a8 = _rshift_round(a, ACC_FMT.frac_bits - quant.STATE_FMT.frac_bits)
-        a8 = jnp.clip(a8, -128, 127)
-        return quant.apply_lut(lut, a8, quant.STATE_FMT).astype(jnp.int32)  # Q0.7
-
-    i = gate(I, PEEP_I, c_prev32, qp.sig_lut)
-    f = gate(F, PEEP_F, c_prev32, qp.sig_lut)
-    g = gate(G, None, None, qp.tanh_lut)
-
-    # c_t = f.c + i.g : align Q0.7*Q2.5 (frac 12) with Q0.7*Q0.7 (frac 14) >> 2.
-    fc = f * c_prev32                       # frac 12
-    ig = _rshift_round(i * g, 2)            # frac 14 -> 12
-    c_new = _sat16(fc + ig)                 # Q3.12
-    c_new8 = jnp.clip(_rshift_round(c_new, CELL_FMT.frac_bits -
-                                    quant.STATE_FMT.frac_bits), -128, 127)
-
-    o = gate(O, PEEP_O, c_new8, qp.sig_lut)
-    tanh_c = quant.apply_lut(qp.tanh_lut, c_new8, quant.STATE_FMT).astype(jnp.int32)
-    h_new = _rshift_round(o * tanh_c, 14 - quant.STATE_FMT.frac_bits)  # Q0.14 -> Q2.5
-    h_blocks8 = jnp.clip(h_new, -128, 127).astype(jnp.int8)
-
-    h_full = unpack_h(h_blocks8, plan)
-    return h_full, c_new8.astype(jnp.int8)
+    h_blocks8, c_new8 = _quantized_state_update(
+        pre_acc, c_q_blocks.astype(jnp.int32), qp.peep_q.astype(jnp.int32),
+        qp.bias_q.astype(jnp.int32), qp.sig_lut, qp.tanh_lut)
+    return unpack_h(h_blocks8, plan), c_new8
 
 
 def systolic_layer_quantized(qp: QuantizedPackedLSTM, xs_q: jax.Array) -> jax.Array:
-    """Scan the integer cell over time.  xs_q: (T, ..., n_x) int8 -> int8 hidden."""
+    """Scan the integer cell over time.  xs_q: (T, ..., n_x) int8 -> int8 hidden.
+
+    Bit-identical by construction to ``systolic_cell_quantized`` stepped with
+    zero initial state; the whole-sequence and distributed int8 forms are
+    tested against this function.
+    """
     plan = qp.plan
     batch = xs_q.shape[1:-1]
     h0 = jnp.zeros(batch + (plan.n_h,), jnp.int8)
@@ -319,7 +442,11 @@ def make_systolic_mesh(rows: int, cols: int, stage: int = 1,
     """Build a (stage, row, col) mesh from the first stage*rows*cols devices.
 
     This is how the paper's own geometries (5x5, 3x(5x5)) are laid onto a pod:
-    a rectangular sub-grid of the available chips.
+    a rectangular sub-grid of the available chips.  Device order is row-major,
+    which is what makes the ``all_gather`` chunk order of the distributed
+    paths line up with the engine-tile row order (a pure layout guarantee —
+    no numerics of its own).  ``launch/mesh.py`` exposes named topology
+    presets (including ``graves-75``) built on this constructor.
     """
     devices = list(jax.devices()) if devices is None else list(devices)
     need = stage * rows * cols
@@ -331,7 +458,10 @@ def make_systolic_mesh(rows: int, cols: int, stage: int = 1,
 
 
 def shard_packed_lstm(packed: PackedLSTM, mesh: Mesh) -> PackedLSTM:
-    """Place weight tiles so engine (r, c) owns tile (r, c) — weight-stationary."""
+    """Place weight tiles so engine (r, c) owns tile (r, c) — weight-stationary.
+
+    Pure placement (device_put with a NamedSharding); values are unchanged.
+    """
     from jax.sharding import NamedSharding
     tiles = jax.device_put(packed.tiles, NamedSharding(mesh, P('row', 'col')))
     peep = jax.device_put(packed.peep, NamedSharding(mesh, P('row')))
@@ -341,7 +471,13 @@ def shard_packed_lstm(packed: PackedLSTM, mesh: Mesh) -> PackedLSTM:
 
 def systolic_lstm_shard_map(packed: PackedLSTM, mesh: Mesh, xs: jax.Array,
                             row_axis: str = 'row', col_axis: str = 'col'):
-    """Distributed scan of one LSTM layer with the paper's communication pattern.
+    """PER-STEP distributed baseline with the paper's communication pattern.
+
+    Allclose to scanning ``systolic_cell_tiled`` (float re-association only).
+    Every timestep re-assembles the packed ``[x|h]`` column and re-MACs the
+    x-region against its weight columns — the per-step streaming cost the
+    persistent ``systolic_lstm_seq`` (DESIGN.md §6) eliminates by hoisting
+    ``W_x @ x`` out of the loop.  Kept as the scale-out benchmark baseline.
 
     xs: (T, B, padded_in) — the x-region columns carry data, h-region columns are
     zero (they are overwritten by the vertical h re-broadcast each step).
@@ -402,4 +538,239 @@ def systolic_lstm_shard_map(packed: PackedLSTM, mesh: Mesh, xs: jax.Array,
         check_vma=False,
     )
     hs = fn(packed.tiles, packed.peep, packed.bias, xs)
+    return hs[..., :plan.n_h]
+
+
+# ---------------------------------------------------------------------------
+# Multi-engine scale-out of the persistent sequence kernel (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def _require_systolic_axes(mesh: Mesh, row_axis: str, col_axis: str) -> Tuple[int, int]:
+    names = mesh.axis_names
+    if row_axis not in names or col_axis not in names:
+        raise ValueError(f'mesh axes {names} lack ({row_axis!r}, {col_axis!r})')
+    if any(mesh.shape[a] > 1 for a in names if a not in (row_axis, col_axis)):
+        raise ValueError('use systolic_pipeline for meshes with a stage axis')
+    return mesh.shape[row_axis], mesh.shape[col_axis]
+
+
+def _scaleout_blocks(n_h: int, mr: int, mc: int) -> Tuple[int, int, int]:
+    """Pad N_h so both the row (output) and col (reduction) axes divide it."""
+    n_h_p = _round_up(n_h, math.lcm(mr, mc))
+    return n_h_p, n_h_p // mr, n_h_p // mc
+
+
+def _scaleout_forward(static, w_h, w_peep, b, pre_x, h0, c0):
+    """Distributed whole-sequence forward (padded in, un-padded out).
+
+    Numerics contract: allclose to scanning ``systolic_cell_tiled`` (and to
+    ``core.lstm.lstm_layer``) — same per-block partial sums, with the "col"
+    reduction performed by ``lax.psum`` instead of the einsum contraction.
+    """
+    mesh, row_axis, col_axis = static
+    T, B, _, n_h = pre_x.shape
+    mr, mc = mesh.shape[row_axis], mesh.shape[col_axis]
+    n_h_p, bn, bk = _scaleout_blocks(n_h, mr, mc)
+    pad = n_h_p - n_h
+
+    w_p = jnp.pad(w_h, ((0, 0), (0, pad), (0, pad)))
+    peep_p = jnp.pad(w_peep, ((0, 0), (0, pad)))
+    bias_p = jnp.pad(b, ((0, 0), (0, pad)))
+    pre_p = jnp.pad(pre_x, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    h0_p = jnp.pad(h0, ((0, 0), (0, pad)))
+    c0_p = jnp.pad(c0, ((0, 0), (0, pad)))
+
+    def body(w_blk, peep_blk, bias_blk, pre_blk, h0_full, c0_blk):
+        """SPMD body on engine-block (r, c).
+
+        w_blk: (4, bn, bk) — tile-stationary for all T steps (the scan closes
+        over it, so it is fetched once and revisited every timestep);
+        pre_blk: (T, B, 4, bn) hoisted ``W_x @ x`` stream for row block r.
+        """
+        col = jax.lax.axis_index(col_axis)
+
+        def step(carry, pre_t):
+            h_full, c = carry
+            # Fig. 3a: this engine column consumes its static h-slice.
+            h_k = jax.lax.dynamic_slice(h_full, (0, col * bk), (B, bk))
+            part = jnp.einsum('gnk,bk->bgn', w_blk, h_k)
+            # Fig. 3b: row accumulation of partial sums across engine columns.
+            pre = jax.lax.psum(part, col_axis) + pre_t
+            i = jax.nn.sigmoid(pre[:, I] + peep_blk[PEEP_I] * c + bias_blk[I])
+            f = jax.nn.sigmoid(pre[:, F] + peep_blk[PEEP_F] * c + bias_blk[F])
+            g = jnp.tanh(pre[:, G] + bias_blk[G])
+            c_new = f * c + i * g
+            o = jax.nn.sigmoid(pre[:, O] + peep_blk[PEEP_O] * c_new + bias_blk[O])
+            h_new = o * jnp.tanh(c_new)
+            # Fig. 3c: vertical re-broadcast of the updated hidden chunks.
+            h_full_new = jax.lax.all_gather(h_new, row_axis, axis=1, tiled=True)
+            return (h_full_new, c_new), (h_full_new, c_new)
+
+        (h_T, c_T), (hs, cs) = jax.lax.scan(step, (h0_full, c0_blk), pre_blk)
+        return hs, cs, h_T, c_T
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, row_axis, col_axis), P(None, row_axis),
+                  P(None, row_axis), P(None, None, None, row_axis),
+                  P(None, None), P(None, row_axis)),
+        out_specs=(P(), P(None, None, row_axis), P(), P(None, row_axis)),
+        check_vma=False,
+    )
+    hs, cs, h_T, c_T = fn(w_p, peep_p, bias_p, pre_p, h0_p, c0_p)
+    return hs[..., :n_h], cs[..., :n_h], h_T[..., :n_h], c_T[..., :n_h]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def systolic_seq_fused(static, w_h, w_peep, b, pre_x, h0, c0):
+    """Distributed whole-sequence LSTM with the production training VJP.
+
+    Same contract as ``kernels.lstm_seq.lstm_seq_fused`` (forward allclose to
+    ``core.lstm.lstm_scan_fused``; backward recomputes gates from the saved
+    h/c trajectories via ``lstm_bwd_recompute_gates``), but the forward runs
+    tile-stationary on the ``static = (mesh, row_axis, col_axis)`` grid.
+    """
+    hs, _, h_T, c_T = _scaleout_forward(static, w_h, w_peep, b, pre_x, h0, c0)
+    return hs, (h_T, c_T)
+
+
+def _sso_fwd(static, w_h, w_peep, b, pre_x, h0, c0):
+    hs, cs, h_T, c_T = _scaleout_forward(static, w_h, w_peep, b, pre_x, h0, c0)
+    return (hs, (h_T, c_T)), (w_h, w_peep, b, pre_x, hs, cs, h0, c0)
+
+
+def _sso_bwd(static, res, grads):
+    from .lstm import lstm_bwd_recompute_gates
+    w_h, w_peep, b, pre_x, hs, cs, h0, c0 = res
+    return lstm_bwd_recompute_gates(w_h, w_peep, b, pre_x, hs, cs, h0, c0,
+                                    grads)
+
+
+systolic_seq_fused.defvjp(_sso_fwd, _sso_bwd)
+
+
+def systolic_lstm_seq(params: LSTMParams, mesh: Optional[Mesh], xs: jax.Array,
+                      h0: Optional[jax.Array] = None,
+                      c0: Optional[jax.Array] = None, *,
+                      row_axis: str = 'row', col_axis: str = 'col'
+                      ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Whole-sequence persistent LSTM, scaled out over a systolic mesh.
+
+    Drop-in for ``core.lstm.lstm_layer`` (xs: (T, B, N_x) -> (hs, (h_T, c_T)));
+    output allclose to scanning ``systolic_cell_tiled`` and to ``lstm_layer``.
+    Differentiable: the custom VJP recomputes gates from the h/c trajectories
+    (identical to the ``pallas_seq`` backend's training path).
+
+    The non-recurrent ``W_x @ x`` is hoisted out of the time loop as one wide
+    matmul over the whole utterance; inside the loop each device MACs only its
+    resident ``bn x bk`` recurrent block, row partials meet in a per-step
+    ``psum`` over ``col_axis`` (Fig. 3b) and the updated ``h_t`` chunks are
+    re-broadcast with ``all_gather`` over ``row_axis`` (Fig. 3c).  A ``None``
+    or all-1 mesh degenerates to the single-engine Pallas sequence kernel
+    (``kernels.lstm_seq.lstm_layer_seq``) — the composition this function
+    scales out.
+    """
+    assert xs.ndim == 3, 'systolic_lstm_seq expects (T, B, N_x) input'
+    T, B = xs.shape[0], xs.shape[1]
+    n_h = params.n_h
+    if h0 is None:
+        h0 = jnp.zeros((B, n_h), xs.dtype)
+    if c0 is None:
+        c0 = jnp.zeros((B, n_h), xs.dtype)
+    if mesh is None or all(s == 1 for s in mesh.shape.values()):
+        from ..kernels.lstm_seq import lstm_layer_seq
+        return lstm_layer_seq(params, xs, h0, c0)
+    _require_systolic_axes(mesh, row_axis, col_axis)
+    pre_x = jnp.einsum('ghx,tbx->tbgh', params.w_x, xs)   # hoisted input stream
+    return systolic_seq_fused((mesh, row_axis, col_axis), params.w_h,
+                              params.w_peep, params.b, pre_x, h0, c0)
+
+
+def systolic_lstm_seq_quantized(qp: QuantizedPackedLSTM, mesh: Optional[Mesh],
+                                xs_q: jax.Array, *, row_axis: str = 'row',
+                                col_axis: str = 'col') -> jax.Array:
+    """Distributed whole-sequence int8 LSTM, bit-identical to the silicon scan.
+
+    xs_q: (T, B, n_x) int8 codes -> (T, B, n_h) int8 hidden codes, exactly
+    equal (bit-identical) to scanning ``systolic_cell_quantized`` — and hence
+    to ``systolic_layer_quantized`` and ``lstm_layer_seq_quantized``.
+
+    The 16-bit saturating row accumulation (Fig. 3b) is order-sensitive, so a
+    plain ``psum`` cannot be used: the x-region prefix of the hop chain (which
+    does not depend on ``h``) is precomputed once for the whole sequence, and
+    per step each device's h-region tile partials are ``all_gather``ed over
+    ``col_axis`` and the hop replayed in engine order — the exact saturation
+    schedule of the chip.  Requires ``plan.rows % mesh rows == 0`` and
+    ``plan.cols_h % mesh cols == 0``.  A ``None``/all-1 mesh degenerates to
+    ``kernels.lstm_seq.lstm_layer_seq_quantized``.
+    """
+    plan = qp.plan
+    if mesh is None or all(s == 1 for s in mesh.shape.values()):
+        from ..kernels.lstm_seq import lstm_layer_seq_quantized
+        return lstm_layer_seq_quantized(qp, xs_q)
+    mr, mc = _require_systolic_axes(mesh, row_axis, col_axis)
+    R, c_h, t = plan.rows, plan.cols_h, plan.tile
+    if R % mr or c_h % mc:
+        raise ValueError(f'engine grid {R}x{c_h} (h-region) does not divide '
+                         f'mesh {mr}x{mc}')
+    assert xs_q.ndim == 3, 'systolic_lstm_seq_quantized expects (T, B, n_x)'
+    T, B = xs_q.shape[0], xs_q.shape[1]
+    r_l, c_l = R // mr, c_h // mc
+
+    # Hoisted x-region prefix: the first cols_x hops of the saturating chain
+    # depend only on the frame stream, so they are computed once per sequence
+    # (per-tile int32 MACs saturated to int16, then the sequential hop).
+    def hop(acc, p):
+        return _sat16(acc + p), None
+
+    acc0 = jnp.zeros((T, B, R, GATES, t), jnp.int32)
+    if plan.cols_x:
+        xs_pad = jnp.zeros((T, B, plan.padded_x), jnp.int8
+                           ).at[..., :plan.n_x].set(xs_q)
+        xcols = xs_pad.reshape(T, B, plan.cols_x, t)
+        part_x = _sat16(jnp.einsum('rcgij,tbcj->ctbrgi',
+                                   qp.tiles_q[:, :plan.cols_x].astype(jnp.int32),
+                                   xcols.astype(jnp.int32)))
+        acc_x, _ = jax.lax.scan(hop, acc0, part_x)
+    else:
+        acc_x = acc0
+    tiles_h = qp.tiles_q[:, plan.cols_x:]            # (R, c_h, 4, t, t)
+
+    def body(tiles_blk, peep_blk, bias_blk, accx_blk, sig_lut, tanh_lut):
+        """SPMD body: tiles_blk (r_l, c_l, 4, t, t) stationary for all T."""
+        col = jax.lax.axis_index(col_axis)
+        peep32 = peep_blk.astype(jnp.int32)
+        bias32 = bias_blk.astype(jnp.int32)
+
+        def step(carry, accx_t):
+            h_full, c_blk = carry
+            h_cols = jax.lax.dynamic_slice(
+                h_full, (0, col * (c_l * t)), (B, c_l * t)).reshape(B, c_l, t)
+            parts = _sat16(jnp.einsum('rlgij,blj->lbrgi',
+                                      tiles_blk.astype(jnp.int32),
+                                      h_cols.astype(jnp.int32)))
+            # Engine-order saturating hop replay: gather every column's
+            # partials, then fold them sequentially from the x-prefix.
+            parts_all = jax.lax.all_gather(parts, col_axis, axis=0, tiled=True)
+            pre_acc, _ = jax.lax.scan(hop, accx_t, parts_all)
+            h8, c8 = _quantized_state_update(pre_acc, c_blk.astype(jnp.int32),
+                                             peep32, bias32, sig_lut, tanh_lut)
+            h_flat = h8.reshape(B, r_l * t)
+            h_full_new = jax.lax.all_gather(h_flat, row_axis, axis=1,
+                                            tiled=True)
+            return (h_full_new, c8), h_full_new
+
+        h0 = jnp.zeros((B, plan.padded_h), jnp.int8)
+        c0 = jnp.zeros((B, r_l, t), jnp.int8)
+        _, hs = jax.lax.scan(step, (h0, c0), accx_blk)
+        return hs
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(row_axis, col_axis), P(row_axis), P(row_axis),
+                  P(None, None, row_axis), P(None), P(None)),
+        out_specs=P(),
+        check_vma=False,
+    )
+    hs = fn(tiles_h, qp.peep_q, qp.bias_q, acc_x, qp.sig_lut, qp.tanh_lut)
     return hs[..., :plan.n_h]

@@ -22,6 +22,11 @@ owns the whole sequence:
   * the elementwise phase (peepholes, nonlinearities, state update) fuses into
     the final K step, so gate pre-activations never touch HBM.
 
+Both kernels take an optional batch-block size ``bb`` that adds an OUTERMOST
+batch grid dimension: each block replays the full T-step recurrence against
+the same resident weights, so a serving slot grid amortises a single weight
+DMA across all slots instead of paying one per batch block.
+
 The int8 variant (`lstm_seq_quantized`) runs the same persistent schedule over
 the bit-accurate systolic datapath of ``core.systolic.systolic_cell_quantized``:
 int8 weight tiles resident in VMEM, per-tile int32 MACs saturated to int16, a
@@ -32,6 +37,7 @@ shift/clip alignment of the silicon.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -49,9 +55,11 @@ from ...core.systolic import ACC_FMT, CELL_FMT
 def _seq_kernel(pre_x_ref, w_ref, peep_ref, bias_ref, h0_ref, c0_ref,
                 hs_ref, cs_ref, h_scr, c_scr, acc_ref, *, n_k: int,
                 bn: int, bk: int):
-    t = pl.program_id(0)
-    j = pl.program_id(1)
-    k = pl.program_id(2)
+    # Grid (NB, T, J, K): the batch-block dimension is OUTERMOST, so the
+    # resident weights serve every batch block (serving slots) from one DMA.
+    t = pl.program_id(1)
+    j = pl.program_id(2)
+    k = pl.program_id(3)
 
     @pl.when((t == 0) & (j == 0) & (k == 0))
     def _load_state():
@@ -89,45 +97,51 @@ def _seq_kernel(pre_x_ref, w_ref, peep_ref, bias_ref, h0_ref, c0_ref,
         cs_ref[0] = c_new.astype(cs_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=('bn', 'bk', 'interpret'))
+@functools.partial(jax.jit, static_argnames=('bn', 'bk', 'bb', 'interpret'))
 def lstm_seq(pre_x: jax.Array, w_h: jax.Array, peep: jax.Array,
              bias: jax.Array, h0: jax.Array, c0: jax.Array, *,
-             bn: int = 128, bk: int = 128, interpret: bool = False):
+             bn: int = 128, bk: int = 128, bb: Optional[int] = None,
+             interpret: bool = False):
     """Whole-sequence fused LSTM.
 
     pre_x: (T, 4, B, N_h) hoisted ``W_x @ x_t + (0)`` pre-activations;
     w_h: (4, N_h, N_h); peep: (3, N_h); bias: (4, N_h); h0, c0: (B, N_h).
-    N_h must be a multiple of both bn and bk; B a multiple of 8.
+    N_h must be a multiple of both bn and bk; B a multiple of 8 and of the
+    batch block ``bb`` (None = one block).  ``bb`` adds an outermost batch
+    grid dimension: each block runs the full T-step recurrence against the
+    same resident weights, so serving slots amortise one weight DMA.
     Returns (hs, cs), each (T, B, N_h).
     """
     T, _, b, n_h = pre_x.shape
+    bb = b if bb is None else bb
     assert n_h % bn == 0 and n_h % bk == 0, (n_h, bn, bk)
+    assert b % bb == 0, (b, bb)
     n_k = n_h // bk
 
     hs, cs = pl.pallas_call(
         functools.partial(_seq_kernel, n_k=n_k, bn=bn, bk=bk),
-        grid=(T, n_h // bn, n_k),
+        grid=(b // bb, T, n_h // bn, n_k),
         in_specs=[
-            pl.BlockSpec((1, 4, b, bn), lambda t, j, k: (t, 0, 0, j)),
+            pl.BlockSpec((1, 4, bb, bn), lambda nb, t, j, k: (t, 0, nb, j)),
             # Constant index maps: fetched once, resident for the whole grid.
-            pl.BlockSpec((4, n_h, n_h), lambda t, j, k: (0, 0, 0)),
-            pl.BlockSpec((3, n_h), lambda t, j, k: (0, 0)),
-            pl.BlockSpec((4, n_h), lambda t, j, k: (0, 0)),
-            pl.BlockSpec((b, n_h), lambda t, j, k: (0, 0)),
-            pl.BlockSpec((b, n_h), lambda t, j, k: (0, 0)),
+            pl.BlockSpec((4, n_h, n_h), lambda nb, t, j, k: (0, 0, 0)),
+            pl.BlockSpec((3, n_h), lambda nb, t, j, k: (0, 0)),
+            pl.BlockSpec((4, n_h), lambda nb, t, j, k: (0, 0)),
+            pl.BlockSpec((bb, n_h), lambda nb, t, j, k: (nb, 0)),
+            pl.BlockSpec((bb, n_h), lambda nb, t, j, k: (nb, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, b, bn), lambda t, j, k: (t, 0, j)),
-            pl.BlockSpec((1, b, bn), lambda t, j, k: (t, 0, j)),
+            pl.BlockSpec((1, bb, bn), lambda nb, t, j, k: (t, nb, j)),
+            pl.BlockSpec((1, bb, bn), lambda nb, t, j, k: (t, nb, j)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((T, b, n_h), pre_x.dtype),
             jax.ShapeDtypeStruct((T, b, n_h), pre_x.dtype),
         ],
         scratch_shapes=[
-            pltpu.VMEM((2, b, n_h), jnp.float32),   # h double buffer (t parity)
-            pltpu.VMEM((b, n_h), jnp.float32),      # c, updated in place
-            pltpu.VMEM((4, b, bn), jnp.float32),    # gate pre-act accumulator
+            pltpu.VMEM((2, bb, n_h), jnp.float32),  # h double buffer (t parity)
+            pltpu.VMEM((bb, n_h), jnp.float32),     # c, updated in place
+            pltpu.VMEM((4, bb, bn), jnp.float32),   # gate pre-act accumulator
         ],
         interpret=interpret,
     )(pre_x, w_h, peep, bias, h0, c0)
@@ -145,9 +159,10 @@ _rshift_round = quant.rshift_round
 def _seq_kernel_q(xs_ref, w_ref, peep_ref, bias_ref, sig_ref, tanh_ref,
                   hs_ref, h_scr, c_scr, acc_ref, *, n_c: int, cols_x: int,
                   tile: int):
-    t = pl.program_id(0)
-    r = pl.program_id(1)
-    c = pl.program_id(2)
+    # Grid (NB, T, R, C) — batch blocks outermost, as in the f32 kernel.
+    t = pl.program_id(1)
+    r = pl.program_id(2)
+    c = pl.program_id(3)
 
     @pl.when((t == 0) & (r == 0) & (c == 0))
     def _zero_state():
@@ -212,42 +227,49 @@ def _seq_kernel_q(xs_ref, w_ref, peep_ref, bias_ref, sig_ref, tanh_ref,
         hs_ref[0] = h8
 
 
-@functools.partial(jax.jit, static_argnames=('tile', 'cols_x', 'interpret'))
+@functools.partial(jax.jit, static_argnames=('tile', 'cols_x', 'bb',
+                                             'interpret'))
 def lstm_seq_quantized(xs_q: jax.Array, w_q: jax.Array, peep_q: jax.Array,
                        bias_q: jax.Array, sig_lut: jax.Array,
                        tanh_lut: jax.Array, *, tile: int, cols_x: int,
+                       bb: Optional[int] = None,
                        interpret: bool = False) -> jax.Array:
     """Whole-sequence bit-accurate int8 LSTM.
 
     xs_q: (T, B, padded_x) int8 frame codes; w_q: (4, padded_h, padded_in) int8
     dense engine-tile layout (``[W_x | W_h]`` with the x-region padded to whole
     tiles); peep_q: (3, padded_h) int8; bias_q: (4, padded_h) int16 in ACC_FMT;
-    sig_lut/tanh_lut: (1, 256) int8.  Returns hs_q (T, B, padded_h) int8,
-    bit-identical to scanning ``core.systolic.systolic_cell_quantized``.
+    sig_lut/tanh_lut: (1, 256) int8; ``bb`` an optional batch block (B must
+    divide by it; batch blocks iterate outermost so the resident weights are
+    fetched once).  Returns hs_q (T, B, padded_h) int8, bit-identical to
+    scanning ``core.systolic.systolic_cell_quantized``.
     """
     T, b, padded_x = xs_q.shape
     _, padded_h, padded_in = w_q.shape
     assert padded_x == cols_x * tile and padded_in % tile == 0
+    bb = b if bb is None else bb
+    assert b % bb == 0, (b, bb)
     n_c = padded_in // tile
 
     return pl.pallas_call(
         functools.partial(_seq_kernel_q, n_c=n_c, cols_x=cols_x, tile=tile),
-        grid=(T, padded_h // tile, n_c),
+        grid=(b // bb, T, padded_h // tile, n_c),
         in_specs=[
-            pl.BlockSpec((1, b, tile),
-                         lambda t, r, c: (t, 0, jnp.minimum(c, cols_x - 1))),
-            pl.BlockSpec((4, padded_h, padded_in), lambda t, r, c: (0, 0, 0)),
-            pl.BlockSpec((3, padded_h), lambda t, r, c: (0, 0)),
-            pl.BlockSpec((4, padded_h), lambda t, r, c: (0, 0)),
-            pl.BlockSpec((1, 256), lambda t, r, c: (0, 0)),
-            pl.BlockSpec((1, 256), lambda t, r, c: (0, 0)),
+            pl.BlockSpec((1, bb, tile),
+                         lambda nb, t, r, c: (t, nb, jnp.minimum(c, cols_x - 1))),
+            pl.BlockSpec((4, padded_h, padded_in),
+                         lambda nb, t, r, c: (0, 0, 0)),
+            pl.BlockSpec((3, padded_h), lambda nb, t, r, c: (0, 0)),
+            pl.BlockSpec((4, padded_h), lambda nb, t, r, c: (0, 0)),
+            pl.BlockSpec((1, 256), lambda nb, t, r, c: (0, 0)),
+            pl.BlockSpec((1, 256), lambda nb, t, r, c: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, b, tile), lambda t, r, c: (t, 0, r)),
+        out_specs=pl.BlockSpec((1, bb, tile), lambda nb, t, r, c: (t, nb, r)),
         out_shape=jax.ShapeDtypeStruct((T, b, padded_h), jnp.int8),
         scratch_shapes=[
-            pltpu.VMEM((2, b, padded_h), jnp.int8),   # h codes, t parity
-            pltpu.VMEM((b, padded_h), jnp.int8),      # c codes
-            pltpu.VMEM((4, b, tile), jnp.int32),      # saturating accumulator
+            pltpu.VMEM((2, bb, padded_h), jnp.int8),  # h codes, t parity
+            pltpu.VMEM((bb, padded_h), jnp.int8),     # c codes
+            pltpu.VMEM((4, bb, tile), jnp.int32),     # saturating accumulator
         ],
         interpret=interpret,
     )(xs_q, w_q, peep_q, bias_q, sig_lut, tanh_lut)

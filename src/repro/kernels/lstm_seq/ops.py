@@ -23,14 +23,23 @@ from .kernel import lstm_seq, lstm_seq_quantized
 
 
 def vmem_bytes_estimate(n_h: int, batch: int, bn: int = 128,
-                        bk: int = 128, dtype_bytes: int = 4) -> int:
-    """Resident VMEM working set of the f32 sequence kernel (for selection)."""
+                        bk: int = 128, dtype_bytes: int = 4,
+                        bb: Optional[int] = None) -> int:
+    """Resident VMEM working set of the f32 sequence kernel (for selection).
+
+    A conservative upper bound (no numerics of its own): backend selection
+    admits ``pallas_seq`` only when this estimate fits the VMEM budget, so
+    auto-chosen blockings never exceed what the kernel actually allocates.
+    ``bb`` models the batch-block grid dimension — scratch scales with the
+    block, not the full batch.
+    """
     n_h_p = _round_up(n_h, math.lcm(bn, bk))
     b_p = max(8, _round_up(batch, 8))
+    b_s = b_p if bb is None else min(b_p, bb)       # scratch batch rows
     weights = GATES * n_h_p * n_h_p * dtype_bytes
     consts = (3 + GATES) * n_h_p * dtype_bytes
-    state = 3 * b_p * n_h_p * 4 + 2 * b_p * n_h_p * dtype_bytes  # scratch + h0/c0
-    stream = 2 * (GATES * b_p * bn * dtype_bytes + 2 * b_p * bn * dtype_bytes)
+    state = 3 * b_s * n_h_p * 4 + 2 * b_s * n_h_p * dtype_bytes  # scratch + h0/c0
+    stream = 2 * (GATES * b_s * bn * dtype_bytes + 2 * b_s * bn * dtype_bytes)
     return weights + consts + state + stream
 
 
@@ -39,11 +48,17 @@ def vmem_bytes_estimate(n_h: int, batch: int, bn: int = 128,
 # ---------------------------------------------------------------------------
 
 def _seq_forward(cfg, w_h, w_peep, b, pre_x, h0, c0):
-    """Pad, run the kernel, un-pad.  pre_x: (T, B, 4, N_h) core layout."""
-    bn, bk, interpret = cfg
+    """Pad, run the kernel, un-pad.  pre_x: (T, B, 4, N_h) core layout.
+
+    Numerics-neutral wrapper: zero padding + layout transposes only, so the
+    kernel output (un-padded) stays allclose to ``core.lstm.lstm_layer``.
+    """
+    bn, bk, bb, interpret = cfg
     T, B, _, n_h = pre_x.shape
     n_h_p = _round_up(n_h, math.lcm(bn, bk))
     b_p = max(8, _round_up(B, 8))
+    if bb is not None:
+        b_p = _round_up(b_p, bb)
 
     pre_k = jnp.transpose(pre_x, (0, 2, 1, 3))            # (T, 4, B, N_h)
     pre_k = _pad_to(_pad_to(pre_k, n_h_p, 3), b_p, 2)
@@ -54,15 +69,17 @@ def _seq_forward(cfg, w_h, w_peep, b, pre_x, h0, c0):
     c0_p = _pad_to(_pad_to(c0, n_h_p, 1), b_p, 0)
 
     hs, cs = lstm_seq(pre_k, w_p, peep_p, bias_p, h0_p, c0_p,
-                      bn=bn, bk=bk, interpret=interpret)
+                      bn=bn, bk=bk, bb=bb, interpret=interpret)
     return hs[:, :B, :n_h], cs[:, :B, :n_h]
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
 def lstm_seq_fused(cfg, w_h, w_peep, b, pre_x, h0, c0):
-    """Same contract as ``core.lstm.lstm_scan_fused`` but one kernel launch.
+    """Same contract as ``core.lstm.lstm_scan_fused`` but one kernel launch:
+    forward allclose to the scan, backward (gate recompute from the saved h/c
+    trajectories) numerically equal to the hand-written scan VJP.
 
-    cfg is the static (bn, bk, interpret) tuple; pre_x: (T, B, 4, N_h).
+    cfg is the static (bn, bk, bb, interpret) tuple; pre_x: (T, B, 4, N_h).
     """
     hs, cs = _seq_forward(cfg, w_h, w_peep, b, pre_x, h0, c0)
     return hs, (hs[-1], cs[-1])
@@ -86,17 +103,23 @@ def lstm_layer_seq(params: LSTMParams, xs: jax.Array,
                    h0: Optional[jax.Array] = None,
                    c0: Optional[jax.Array] = None, *,
                    bn: Optional[int] = None, bk: Optional[int] = None,
+                   bb: Optional[int] = None,
                    interpret: Optional[bool] = None
                    ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """Drop-in for ``core.lstm.lstm_layer`` via the whole-sequence kernel.
+    """Drop-in for ``core.lstm.lstm_layer`` via the whole-sequence kernel:
+    output allclose to the scan reference (same recurrence, one launch).
 
     xs: (T, B, N_x) -> (hs (T, B, N_h), (h_T, c_T)).  Differentiable (the VJP
-    recomputes gates from the saved h/c trajectories).
+    recomputes gates from the saved h/c trajectories).  ``bb`` selects the
+    batch-block grid dimension (serving slots amortising weight residency);
+    the padded batch is rounded up to a whole number of blocks.
 
     Default blocking is shape-aware: when the padded hidden row fits a single
     block (N_h <= 512) the whole row is one grid step — the weights are
     resident either way, and fewer grid steps means less per-step machinery.
     """
+    assert bb is None or bb % 8 == 0, \
+        f'bb={bb} must be a multiple of 8 (f32 sublane tiling)'
     if interpret is None:
         interpret = jax.default_backend() != 'tpu'
     if bn is None or bk is None:
@@ -118,7 +141,7 @@ def lstm_layer_seq(params: LSTMParams, xs: jax.Array,
     xs_flat = xs.reshape(T, B, params.n_x)
     pre_x = jnp.einsum('ghx,tbx->tbgh', params.w_x, xs_flat)  # hoisted matmul
     hs, (h_T, c_T) = lstm_seq_fused(
-        (bn, bk, bool(interpret)), params.w_h, params.w_peep, params.b,
+        (bn, bk, bb, bool(interpret)), params.w_h, params.w_peep, params.b,
         pre_x, h0.reshape(B, n_h), c0.reshape(B, n_h))
     hs = hs.reshape((T,) + batch_shape + (n_h,))
     return hs, (h_T.reshape(batch_shape + (n_h,)),
@@ -130,7 +153,11 @@ def lstm_layer_seq(params: LSTMParams, xs: jax.Array,
 # ---------------------------------------------------------------------------
 
 def _dense_from_tiles(qp: QuantizedPackedLSTM):
-    """(R, C, 4, t, t) engine tiles -> dense (4, R*t, C*t) VMEM layout."""
+    """(R, C, 4, t, t) engine tiles -> dense (4, R*t, C*t) VMEM layout.
+
+    Pure relayout of the already-quantized codes (no re-rounding), so the
+    kernel consuming it sees bit-for-bit the same weights as the tiled scan.
+    """
     r, c, g, t, _ = qp.tiles_q.shape
     w = jnp.transpose(qp.tiles_q, (2, 0, 3, 1, 4)).reshape(g, r * t, c * t)
     peep = jnp.transpose(qp.peep_q, (1, 0, 2)).reshape(3, r * t)
@@ -139,10 +166,15 @@ def _dense_from_tiles(qp: QuantizedPackedLSTM):
 
 
 def lstm_layer_seq_quantized(qp: QuantizedPackedLSTM, xs_q: jax.Array, *,
+                             bb: Optional[int] = None,
                              interpret: Optional[bool] = None) -> jax.Array:
-    """Whole-sequence form of ``systolic_layer_quantized`` (bit-identical).
+    """Whole-sequence form of ``systolic_layer_quantized``: bit-identical int8
+    hidden codes, one kernel launch instead of T.
 
-    xs_q: (T, ..., n_x) int8 codes -> (T, ..., n_h) int8 hidden codes.
+    xs_q: (T, ..., n_x) int8 codes -> (T, ..., n_h) int8 hidden codes.  ``bb``
+    selects the batch-block grid dimension (the batch is zero-padded to a
+    whole number of blocks; padded rows carry zero codes and are dropped, so
+    bit-identity is unaffected).
     """
     if interpret is None:
         interpret = jax.default_backend() != 'tpu'
@@ -150,12 +182,13 @@ def lstm_layer_seq_quantized(qp: QuantizedPackedLSTM, xs_q: jax.Array, *,
     batch_shape = xs_q.shape[1:-1]
     T = xs_q.shape[0]
     b = int(math.prod(batch_shape)) if batch_shape else 1
+    b_p = b if bb is None else _round_up(b, bb)
     xs_flat = xs_q.reshape(T, b, plan.n_x)
-    xs_pad = jnp.zeros((T, b, plan.padded_x), jnp.int8
-                       ).at[..., :plan.n_x].set(xs_flat)
+    xs_pad = jnp.zeros((T, b_p, plan.padded_x), jnp.int8
+                       ).at[:, :b, :plan.n_x].set(xs_flat)
     w_q, peep_q, bias_q = _dense_from_tiles(qp)
     hs = lstm_seq_quantized(
         xs_pad, w_q, peep_q, bias_q,
         qp.sig_lut.reshape(1, 256), qp.tanh_lut.reshape(1, 256),
-        tile=plan.tile, cols_x=plan.cols_x, interpret=bool(interpret))
-    return hs[..., :plan.n_h].reshape((T,) + batch_shape + (plan.n_h,))
+        tile=plan.tile, cols_x=plan.cols_x, bb=bb, interpret=bool(interpret))
+    return hs[:, :b, :plan.n_h].reshape((T,) + batch_shape + (plan.n_h,))

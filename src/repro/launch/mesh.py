@@ -25,6 +25,49 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
+# ---------------------------------------------------------------------------
+# Systolic topology presets (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+# name -> (stage, rows, cols) engine grids from the paper's scaling study.
+# ``stage > 1`` presets drive the layer pipeline (core/pipeline.py, ppermute
+# between stages); ``stage == 1`` presets drive the persistent scale-out
+# kernel (core/systolic.systolic_lstm_seq).  'graves-75' is the 75-tile
+# 3x(5x5) configuration that runs the Graves phoneme topology in real time
+# (paper Sec. 4.2) — emulated with host devices via
+# XLA_FLAGS=--xla_force_host_platform_device_count=75.
+SYSTOLIC_TOPOLOGIES = {
+    # degenerate single-engine preset: never auto-picked (an all-1 mesh is
+    # inadmissible, §6.2) — use with an explicit backend= selection
+    'single': (1, 1, 1),
+    '1x2': (1, 1, 2),        # smallest col (partial-sum hop) scale-out
+    '2x1': (1, 2, 1),        # smallest row (h re-broadcast) scale-out
+    '2x2': (1, 2, 2),
+    '5x5': (1, 5, 5),        # the paper's single-layer 25-tile config
+    '5x7': (1, 5, 7),        # CTC-3L-421H layer plan at tile=96 (35 engines)
+    'graves-75': (3, 5, 5),  # 3-stage pipeline of 5x5 grids = 75 tiles
+}
+
+
+def make_systolic_topology(name: str, devices=None) -> Mesh:
+    """Build the named preset as a ('stage','row','col') mesh."""
+    stage, rows, cols = SYSTOLIC_TOPOLOGIES[name]
+    from ..core.systolic import make_systolic_mesh
+    return make_systolic_mesh(rows, cols, stage=stage, devices=devices)
+
+
+def install_systolic_topology(name: str, devices=None) -> Mesh:
+    """Build the named preset and install it as the process systolic mesh.
+
+    After installation, ``auto`` LSTM backend selection resolves to
+    ``pallas_seq_systolic`` for layers the mesh admits (DESIGN.md §6).
+    Inadmissible presets are installed but never auto-picked: ``stage > 1``
+    (graves-75 exists for the layer pipeline) and the all-1 ``single`` mesh
+    (the single-engine §3.3 rules keep deciding there).
+    """
+    from ..core import systolic
+    return systolic.install_mesh(make_systolic_topology(name, devices))
+
+
 def resolve_rules(rules: Dict[str, object], mesh: Mesh) -> Dict[str, object]:
     """Drop mesh axes that don't exist on this mesh (e.g. 'pod' on single-pod)."""
     names = set(mesh.axis_names)

@@ -110,9 +110,21 @@ def main(argv=None):
     ap.add_argument('--slots', type=int, default=3)
     ap.add_argument('--max-new', type=int, default=8)
     from ..core.lstm import BACKENDS
+    from .mesh import SYSTOLIC_TOPOLOGIES
     ap.add_argument('--lstm-backend', default='auto', choices=BACKENDS,
                     help='LSTM execution engine (recurrent families)')
+    ap.add_argument('--systolic-topology', default=None,
+                    choices=sorted(SYSTOLIC_TOPOLOGIES),
+                    help='install a systolic mesh preset before serving '
+                         '(enables/auto-selects pallas_seq_systolic; '
+                         'multi-device presets need that many JAX devices)')
     args = ap.parse_args(argv)
+
+    if args.systolic_topology:
+        from .mesh import install_systolic_topology
+        mesh = install_systolic_topology(args.systolic_topology)
+        print(f'installed systolic topology {args.systolic_topology}: '
+              f'{dict(mesh.shape)}')
 
     cfg = configs.get_smoke_config(args.arch).replace(
         lstm_backend=args.lstm_backend)

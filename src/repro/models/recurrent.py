@@ -216,12 +216,13 @@ def slstm_scan(p, zx, state, n_heads, backend: str = 'auto'):
     The recurrent mat-vec r @ h is block-diagonal per head — the exact
     structure Chipmunk's systolic tiles execute (core/systolic.py).
 
-    ``backend`` follows the selector of ``core.lstm`` (DESIGN.md §3.3).  The
-    input contribution ``zx`` is already hoisted out of the loop (the
-    pallas_seq dataflow); the sLSTM elementwise phase (exp gates, normaliser,
-    stabiliser) is not yet ported into the sequence kernel, so every backend
-    currently resolves to the XLA scan here — the hook exists so call sites
-    are ready the day the kernel grows that epilogue.
+    ``backend`` follows the selector of ``core.lstm`` (DESIGN.md §3.3, §6,
+    including ``pallas_seq_systolic``).  The input contribution ``zx`` is
+    already hoisted out of the loop (the pallas_seq dataflow); the sLSTM
+    elementwise phase (exp gates, normaliser, stabiliser) is not yet ported
+    into the sequence kernel or its scale-out, so every backend currently
+    resolves to the XLA scan here — the hook exists so call sites are ready
+    the day the kernel grows that epilogue.
     """
     from ..core.lstm import BACKENDS
     assert backend in BACKENDS, backend

@@ -1,0 +1,230 @@
+"""Multi-engine systolic scale-out of the persistent LSTM sequence kernel.
+
+The float path must be allclose to scanning ``systolic_cell_tiled`` (and to
+``core.lstm.lstm_layer``); the int8 path must be *bit-identical* to
+``systolic_layer_quantized`` (the silicon datapath) — on real multi-device
+meshes.  Multi-device cases run in subprocesses with a forced host platform
+device count (see tests/_subproc.py); 2 devices keeps them safe on the
+2-core CI boxes (the cpu_count skip-gate only applies to the 256-chip LM
+compile, not to these small meshes).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _subproc import run_with_devices
+from repro.core import lstm, quant, systolic
+from repro.kernels.lstm_seq import lstm_layer_seq, lstm_layer_seq_quantized
+
+
+# ----------------------------------------------------------- 2-device meshes
+def test_scaleout_float_matches_tiled_and_dense_2dev():
+    """systolic_lstm_seq == scanned systolic_cell_tiled == lstm_layer on both
+    2-device orientations (row scale-out and col scale-out)."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, systolic
+p = lstm.init_lstm_params(jax.random.PRNGKey(0), 23, 37)
+xs = jax.random.normal(jax.random.PRNGKey(1), (7, 3, 23)) * 0.5
+hs_ref, (hT_ref, cT_ref) = lstm.lstm_layer(p, xs)
+hs_tiled = systolic.systolic_layer_tiled(
+    systolic.pack_lstm(p, systolic.SystolicPlan(23, 37, 16)), xs)
+np.testing.assert_allclose(hs_tiled, hs_ref, rtol=1e-5, atol=1e-6)
+for rows, cols in ((2, 1), (1, 2)):
+    mesh = systolic.make_systolic_mesh(rows, cols)
+    hs, (h_T, c_T) = systolic.systolic_lstm_seq(p, mesh, xs)
+    np.testing.assert_allclose(hs, hs_tiled, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(hs, hs_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h_T, hT_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_T, cT_ref, rtol=1e-5, atol=1e-6)
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+def test_scaleout_nonzero_state_and_paper_width_2dev():
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, systolic
+p = lstm.init_lstm_params(jax.random.PRNGKey(0), 123, 421)
+xs = jax.random.normal(jax.random.PRNGKey(1), (3, 2, 123)) * 0.5
+h0 = jax.random.normal(jax.random.PRNGKey(2), (2, 421)) * 0.3
+c0 = jax.random.normal(jax.random.PRNGKey(3), (2, 421)) * 0.3
+hs_ref, (hT_ref, cT_ref) = lstm.lstm_layer(p, xs, h0, c0)
+mesh = systolic.make_systolic_mesh(1, 2)
+hs, (h_T, c_T) = systolic.systolic_lstm_seq(p, mesh, xs, h0, c0)
+np.testing.assert_allclose(hs, hs_ref, rtol=1e-5, atol=1e-6)
+np.testing.assert_allclose(c_T, cT_ref, rtol=1e-5, atol=1e-6)
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+def test_scaleout_grad_matches_scan_vjp_2dev():
+    """The scale-out custom VJP (gate recompute) == the hand-written scan VJP
+    — training must work when auto-selection picks the distributed backend."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, systolic
+p = lstm.init_lstm_params(jax.random.PRNGKey(9), 24, 32)
+xs = jax.random.normal(jax.random.PRNGKey(1), (5, 2, 24)) * 0.5
+mesh = systolic.make_systolic_mesh(2, 1)
+def loss(q):
+    hs, (hT, cT) = systolic.systolic_lstm_seq(q, mesh, xs)
+    return jnp.sum(hs ** 2) + jnp.sum(hT * cT)
+def loss_ref(q):
+    hs, (hT, cT) = lstm.lstm_layer_fused(q, xs, backend='xla_scan')
+    return jnp.sum(hs ** 2) + jnp.sum(hT * cT)
+g = jax.grad(loss)(p)
+g_ref = jax.grad(loss_ref)(p)
+for name, a, b in zip(p._fields, g_ref, g):
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5, err_msg=name)
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+def test_scaleout_quantized_bit_identical_2dev():
+    """int8 scale-out == systolic_layer_quantized bit for bit: the gathered
+    hop replay must reproduce the chip's saturation order exactly."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from repro.core import lstm, quant, systolic
+p = lstm.init_lstm_params(jax.random.PRNGKey(5), 48, 64)
+xs = jax.random.normal(jax.random.PRNGKey(6), (6, 3, 48)) * 0.5
+qp = systolic.quantize_packed(
+    systolic.pack_lstm(p, systolic.SystolicPlan(48, 64, 16)))
+xs_q = quant.quantize(xs, quant.STATE_FMT)
+hs_ref = systolic.systolic_layer_quantized(qp, xs_q)
+for rows, cols in ((2, 1), (1, 2)):
+    mesh = systolic.make_systolic_mesh(rows, cols)
+    hs = systolic.systolic_lstm_seq_quantized(qp, mesh, xs_q)
+    assert hs.dtype == jnp.int8
+    assert bool(jnp.all(hs == hs_ref)), (rows, cols)
+# an engine grid that does not divide the mesh is rejected (R=3 over 2 rows)
+qp3 = systolic.quantize_packed(
+    systolic.pack_lstm(lstm.init_lstm_params(jax.random.PRNGKey(7), 16, 48),
+                       systolic.SystolicPlan(16, 48, 16)))
+try:
+    systolic.systolic_lstm_seq_quantized(
+        qp3, systolic.make_systolic_mesh(2, 1), jnp.zeros((3, 2, 16), jnp.int8))
+    raise SystemExit('expected ValueError')
+except ValueError:
+    pass
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+def test_scaleout_auto_dispatch_2dev():
+    """Installing a topology makes ``auto`` pick the scale-out backend and the
+    full dispatch path (lstm_layer_fused) stays allclose to the scan."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, systolic
+from repro.launch.mesh import install_systolic_topology
+mesh = install_systolic_topology('1x2')
+assert systolic.current_mesh() is mesh
+assert systolic.seq_scaleout_admissible(421, mesh)
+# a per-device block that cannot fit the budget is rejected
+assert not systolic.seq_scaleout_admissible(1 << 14, mesh, vmem_budget=1 << 20)
+assert lstm.select_lstm_backend(23, 37, 16, 3) == 'pallas_seq_systolic'
+p = lstm.init_lstm_params(jax.random.PRNGKey(0), 23, 37)
+xs = jax.random.normal(jax.random.PRNGKey(1), (16, 3, 23)) * 0.5
+hs, _ = lstm.lstm_layer_fused(p, xs, backend='auto')
+hs_ref, _ = lstm.lstm_layer_fused(p, xs, backend='xla_scan')
+np.testing.assert_allclose(hs, hs_ref, rtol=1e-5, atol=1e-6)
+systolic.clear_mesh()
+assert lstm.select_lstm_backend(23, 37, 16, 3, platform='cpu') == 'xla_scan'
+# a live non-systolic mesh is rejected, not silently misplaced
+from repro.compat import make_mesh
+dm = make_mesh((1, 2), ('data', 'model'))
+assert not systolic.seq_scaleout_admissible(37, dm)
+try:
+    systolic.systolic_lstm_seq(p, dm, xs)
+    raise SystemExit('expected ValueError')
+except ValueError:
+    pass
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+# ----------------------------------------------- single-device degenerations
+def test_scaleout_none_mesh_delegates_to_seq_kernel():
+    """mesh=None (and all-1 meshes) degenerate to the PR-1 persistent kernel
+    — the composition the scale-out generalises."""
+    p = lstm.init_lstm_params(jax.random.PRNGKey(0), 24, 32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 2, 24)) * 0.5
+    hs_ref, (hT_ref, cT_ref) = lstm.lstm_layer(p, xs)
+    hs, (h_T, c_T) = systolic.systolic_lstm_seq(p, None, xs)
+    np.testing.assert_allclose(hs, hs_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h_T, hT_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_T, cT_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_scaleout_quantized_none_mesh_delegates():
+    """mesh=None degenerates to the whole-sequence int8 kernel (bit-identical
+    to the reference scan by the kernel's own contract)."""
+    p = lstm.init_lstm_params(jax.random.PRNGKey(0), 16, 48)
+    qp = systolic.quantize_packed(
+        systolic.pack_lstm(p, systolic.SystolicPlan(16, 48, 16)))
+    xs = jax.random.normal(jax.random.PRNGKey(1), (3, 2, 16)) * 0.5
+    xs_q = quant.quantize(xs, quant.STATE_FMT)
+    hs_ref = systolic.systolic_layer_quantized(qp, xs_q)
+    hs = systolic.systolic_lstm_seq_quantized(qp, None, xs_q)
+    assert hs.dtype == jnp.int8
+    assert bool(jnp.all(hs == hs_ref))
+
+
+def test_admission_rules():
+    assert not systolic.seq_scaleout_admissible(421, None)
+    # all-1 meshes are degenerate: the single-engine §3.3 platform/shape
+    # rules keep deciding (never auto-pick interpret emulation on CPU)
+    assert not systolic.seq_scaleout_admissible(
+        421, systolic.make_systolic_mesh(1, 1))
+    # axis names must match
+    from repro.launch.train import local_mesh
+    assert not systolic.seq_scaleout_admissible(421, local_mesh())
+    # positive + VMEM-budget cases run on a real 2-device mesh in
+    # test_scaleout_auto_dispatch_2dev (admissibility needs a live axis)
+
+
+# ------------------------------------------------------- batched grid (bb)
+def test_seq_kernel_batch_grid_matches_core():
+    """bb < B: batch blocks iterate outermost over the resident weights."""
+    p = lstm.init_lstm_params(jax.random.PRNGKey(0), 32, 48)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (4, 20, 32)) * 0.5
+    hs_ref, (hT_ref, cT_ref) = lstm.lstm_layer(p, xs)
+    hs, (h_T, c_T) = lstm_layer_seq(p, xs, bn=64, bk=64, bb=8, interpret=True)
+    np.testing.assert_allclose(hs, hs_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h_T, hT_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_T, cT_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_seq_kernel_batch_grid_quantized_bit_identical():
+    p = lstm.init_lstm_params(jax.random.PRNGKey(0), 32, 48)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (4, 6, 32)) * 0.5
+    qp = systolic.quantize_packed(
+        systolic.pack_lstm(p, systolic.SystolicPlan(32, 48, 16)))
+    xs_q = quant.quantize(xs, quant.STATE_FMT)
+    hs_ref = systolic.systolic_layer_quantized(qp, xs_q)
+    hs = lstm_layer_seq_quantized(qp, xs_q, bb=4, interpret=True)  # pads B->8
+    assert hs.dtype == jnp.int8
+    assert bool(jnp.all(hs == hs_ref))
+
+
+# ----------------------------------------------------------- topology presets
+def test_topology_presets_geometry():
+    from repro.launch.mesh import SYSTOLIC_TOPOLOGIES
+    # graves-75: the 75-tile 3x(5x5) real-time phoneme configuration
+    assert SYSTOLIC_TOPOLOGIES['graves-75'] == (3, 5, 5)
+    stage, rows, cols = SYSTOLIC_TOPOLOGIES['graves-75']
+    assert stage * rows * cols == 75
+    # the CTC layer plan at tile=96 matches the '5x7' preset
+    plan = systolic.SystolicPlan(123, 421, 96)
+    assert SYSTOLIC_TOPOLOGIES['5x7'] == (1, plan.rows, plan.cols)
+    # every stage-1 preset is admissible for the paper layer once built
+    for name, (stage, rows, cols) in SYSTOLIC_TOPOLOGIES.items():
+        assert stage >= 1 and rows >= 1 and cols >= 1
