@@ -14,10 +14,14 @@ tracked PR over PR.
                         execution on a multi-device mesh (subprocess with a
                         forced host device count), incl. a scaled-down
                         graves-75 configuration
+  streaming           — DESIGN.md §7: packed multi-stream engine vs the
+                        per-slot batch-1 serving baseline on the 123→421
+                        CTC topology
   roofline_report     — roofline table from the multi-pod dry-run artifacts
 
   python -m benchmarks.run --suite kernels --json BENCH_kernels.json
   python -m benchmarks.run --suite scaleout --json BENCH_systolic.json
+  python -m benchmarks.run --suite streaming --json BENCH_streaming.json
 """
 import argparse
 import json
@@ -25,7 +29,7 @@ import platform
 
 
 def _suites():
-    from . import (fig5_shmoo, kernel_bench, roofline_report,
+    from . import (fig5_shmoo, kernel_bench, roofline_report, streaming,
                    systolic_equivalence, systolic_scaleout, table1_efficiency,
                    table2_ctc)
     return {
@@ -35,6 +39,7 @@ def _suites():
         'systolic': systolic_equivalence.run,
         'kernels': kernel_bench.run,
         'scaleout': systolic_scaleout.run,
+        'streaming': streaming.run,
         'roofline': roofline_report.run,
     }
 

@@ -2,6 +2,8 @@
 
 Keeps the README honest: a command that rots fails CI.  Rules:
   * only fenced blocks tagged ``bash`` are considered;
+  * backslash line continuations are joined into one command first (the
+    serving commands wrap for readability);
   * blank lines and comment lines are skipped;
   * lines containing ``pytest`` are skipped — the tier-1 gate runs in its own
     CI job and would double the wall-clock here for no extra signal.
@@ -22,6 +24,9 @@ def readme_commands():
     blocks = re.findall(r'```bash\n(.*?)```', README.read_text(), re.S)
     cmds = []
     for block in blocks:
+        # join backslash continuations before filtering, so a wrapped
+        # command is executed (and skipped) as one unit
+        block = re.sub(r'\\\n\s*', ' ', block)
         for line in block.splitlines():
             line = line.strip()
             if not line or line.startswith('#') or 'pytest' in line:

@@ -114,16 +114,26 @@ def lstm_layer(params: LSTMParams, xs: jax.Array,
 # 62 GB/chip/step on the chipmunk-ctc train cell; this does it once).
 # ---------------------------------------------------------------------------
 
+def _cell_body(w_h, w_peep, b, pre_x_t, h, c_prev):
+    """Shared gate math of the scan-family step functions (`_lstm_scan` and
+    the masked serving variant), so the two cannot silently diverge.  The
+    spelled-out forms in ``lstm_cell``/``lstm_layer`` stay independent — they
+    are the paper-equation oracles both scan paths are tested against.
+    Returns (h_new, c_new, (i, f, g, o))."""
+    pre = pre_x_t + jnp.einsum('ghk,...k->...gh', w_h, h)
+    i = jax.nn.sigmoid(pre[..., I, :] + w_peep[PEEP_I] * c_prev + b[I])
+    f = jax.nn.sigmoid(pre[..., F, :] + w_peep[PEEP_F] * c_prev + b[F])
+    g = jnp.tanh(pre[..., G, :] + b[G])
+    c = f * c_prev + i * g
+    o = jax.nn.sigmoid(pre[..., O, :] + w_peep[PEEP_O] * c + b[O])
+    h_new = o * jnp.tanh(c)
+    return h_new, c, (i, f, g, o)
+
+
 def _lstm_scan(w_h, w_peep, b, pre_x, h0, c0):
     def step(carry, pre_x_t):
         h, c_prev = carry
-        pre = pre_x_t + jnp.einsum('ghk,...k->...gh', w_h, h)
-        i = jax.nn.sigmoid(pre[..., I, :] + w_peep[PEEP_I] * c_prev + b[I])
-        f = jax.nn.sigmoid(pre[..., F, :] + w_peep[PEEP_F] * c_prev + b[F])
-        g = jnp.tanh(pre[..., G, :] + b[G])
-        c = f * c_prev + i * g
-        o = jax.nn.sigmoid(pre[..., O, :] + w_peep[PEEP_O] * c + b[O])
-        h_new = o * jnp.tanh(c)
+        h_new, c, (i, f, g, o) = _cell_body(w_h, w_peep, b, pre_x_t, h, c_prev)
         gates = jnp.stack([i, f, g, o], axis=-2)
         return (h_new, c), (h_new, c, gates)
 
@@ -306,6 +316,81 @@ def lstm_layer_fused(params: LSTMParams, xs: jax.Array,
     return lstm_scan_fused(params.w_h, params.w_peep, params.b, pre_x, h0, c0)
 
 
+# ---------------------------------------------------------------------------
+# Chunked stateful serving entry points (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def valid_len_mask(T: int, valid_len: jax.Array, batch: int) -> jax.Array:
+    """The §7 masking contract in one place: step ``t`` of stream ``b`` is
+    live iff ``t < valid_len[b]``.  Returns a bool (T, B) mask — every
+    masked backend (scan, Pallas kernels, distributed body) derives its
+    mask from this single definition so the contract cannot silently
+    diverge between them."""
+    return (jnp.arange(T, dtype=jnp.int32)[:, None]
+            < valid_len.reshape(batch).astype(jnp.int32)[None, :])
+
+
+def _lstm_scan_masked(w_h, w_peep, b, pre_x, h0, c0, mask):
+    """Masked scan: a masked step is identity on (h, c) and re-emits the
+    carried ``h`` — the reference semantics every masked backend matches.
+    The gate math is the shared ``_cell_body`` (same as ``_lstm_scan``)."""
+    def step(carry, inp):
+        h, c = carry
+        pre_x_t, m = inp
+        h_new, c_new, _ = _cell_body(w_h, w_peep, b, pre_x_t, h, c)
+        m = m[..., None]
+        h = jnp.where(m, h_new, h)
+        c = jnp.where(m, c_new, c)
+        return (h, c), h
+
+    (h_T, c_T), hs = jax.lax.scan(step, (h0, c0), (pre_x, mask))
+    return hs, (h_T, c_T)
+
+
+def lstm_layer_chunk(params: LSTMParams, xs: jax.Array,
+                     h0: Optional[jax.Array] = None,
+                     c0: Optional[jax.Array] = None, *,
+                     valid_len: Optional[jax.Array] = None,
+                     backend: str = 'auto'
+                     ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Stateful chunked layer step — the serving-engine primitive (§7).
+
+    Same contract as ``lstm_layer`` / ``lstm_layer_fused`` on the live steps,
+    plus ragged masking: ``valid_len`` (B,) marks steps ``t >= valid_len[b]``
+    as identity on the state (the carried ``h`` is re-emitted), so the
+    returned ``(h_T, c_T)`` is the state after exactly ``valid_len[b]`` steps
+    and feeding a sequence chunk by chunk is bit-equal to one monolithic
+    call on the same backend.  xs: (T, B, N_x).  With ``valid_len=None``
+    this is exactly ``lstm_layer_fused`` (differentiable); the masked path
+    is inference-only.  ``pallas_step`` has no masked form — masked chunks
+    fall back to the (allclose) masked XLA scan.
+    """
+    if valid_len is None:
+        return lstm_layer_fused(params, xs, h0, c0, backend=backend)
+    assert backend in BACKENDS, backend
+    assert xs.ndim == 3, 'lstm_layer_chunk expects (T, B, N_x) input'
+    T, B = xs.shape[0], xs.shape[1]
+    n_h = params.n_h
+    if backend == 'auto':
+        backend = select_lstm_backend(params.n_x, n_h, T, B)
+    if h0 is None:
+        h0 = jnp.zeros((B, n_h), xs.dtype)
+    if c0 is None:
+        c0 = jnp.zeros((B, n_h), xs.dtype)
+    if backend == 'pallas_seq':
+        from ..kernels.lstm_seq import lstm_layer_seq
+        return lstm_layer_seq(params, xs, h0, c0, valid_len=valid_len)
+    if backend == 'pallas_seq_systolic':
+        from .systolic import current_mesh, systolic_lstm_seq
+        return systolic_lstm_seq(params, current_mesh(), xs, h0, c0,
+                                 valid_len=valid_len)
+    # xla_scan — and the masked fallback for pallas_step (no masked kernel).
+    mask = valid_len_mask(T, valid_len, B)
+    pre_x = jnp.einsum('ghx,tbx->tbgh', params.w_x, xs)
+    return _lstm_scan_masked(params.w_h, params.w_peep, params.b, pre_x,
+                             h0, c0, mask)
+
+
 class LSTMStackParams(NamedTuple):
     layers: Tuple[LSTMParams, ...]
     w_out: Optional[jax.Array]  # (N_out, N_h) final dense layer (paper: y = sigma(W_hy h))
@@ -347,3 +432,29 @@ def lstm_stack_apply(params: LSTMStackParams, xs: jax.Array,
     if params.w_out is not None:
         h = jnp.einsum('oh,tbh->tbo', params.w_out, h) + params.b_out
     return h, finals
+
+
+def lstm_stack_chunk(params: LSTMStackParams, xs: jax.Array, states,
+                     *, valid_len: Optional[jax.Array] = None,
+                     backend: str = 'auto') -> Tuple[jax.Array, tuple]:
+    """Stateful chunked stack application — ``lstm_stack_apply`` for serving.
+
+    One chunk of ``T`` frames through every layer, composing the per-layer
+    ``(h, c)`` carries (the chip's retained internal state).  The same
+    ``valid_len`` masks every layer: a masked step re-emits each layer's
+    carried ``h``, so the garbage a padded input frame would produce never
+    enters any layer's state and chunked output equals the monolithic
+    ``lstm_stack_apply`` on the valid prefix (bit-equal on a fixed backend).
+    xs: (T, B, N_x); states: per-layer ``((h, c), ...)`` from the previous
+    chunk (or zeros).  Returns (ys (T, B, N_out or N_h), new states).
+    """
+    h = xs
+    finals = []
+    for l, lp in enumerate(params.layers):
+        h0c0 = states[l] if states is not None else (None, None)
+        h, (h_T, c_T) = lstm_layer_chunk(lp, h, *h0c0, valid_len=valid_len,
+                                         backend=backend)
+        finals.append((h_T, c_T))
+    if params.w_out is not None:
+        h = jnp.einsum('oh,tbh->tbo', params.w_out, h) + params.b_out
+    return h, tuple(finals)

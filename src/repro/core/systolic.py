@@ -560,12 +560,15 @@ def _scaleout_blocks(n_h: int, mr: int, mc: int) -> Tuple[int, int, int]:
     return n_h_p, n_h_p // mr, n_h_p // mc
 
 
-def _scaleout_forward(static, w_h, w_peep, b, pre_x, h0, c0):
+def _scaleout_forward(static, w_h, w_peep, b, pre_x, h0, c0, mask=None):
     """Distributed whole-sequence forward (padded in, un-padded out).
 
     Numerics contract: allclose to scanning ``systolic_cell_tiled`` (and to
     ``core.lstm.lstm_layer``) — same per-block partial sums, with the "col"
     reduction performed by ``lax.psum`` instead of the einsum contraction.
+    ``mask``: optional (T, B) validity mask (replicated); a masked step is
+    identity on the carried state via ``jnp.where`` — no arithmetic on the
+    carried values, so ``None`` and an all-ones mask are bit-identical.
     """
     mesh, row_axis, col_axis = static
     T, B, _, n_h = pre_x.shape
@@ -579,18 +582,22 @@ def _scaleout_forward(static, w_h, w_peep, b, pre_x, h0, c0):
     pre_p = jnp.pad(pre_x, ((0, 0), (0, 0), (0, 0), (0, pad)))
     h0_p = jnp.pad(h0, ((0, 0), (0, pad)))
     c0_p = jnp.pad(c0, ((0, 0), (0, pad)))
+    if mask is None:
+        mask = jnp.ones((T, B), jnp.bool_)
 
-    def body(w_blk, peep_blk, bias_blk, pre_blk, h0_full, c0_blk):
+    def body(w_blk, peep_blk, bias_blk, pre_blk, h0_full, c0_blk, mask_t):
         """SPMD body on engine-block (r, c).
 
         w_blk: (4, bn, bk) — tile-stationary for all T steps (the scan closes
         over it, so it is fetched once and revisited every timestep);
-        pre_blk: (T, B, 4, bn) hoisted ``W_x @ x`` stream for row block r.
+        pre_blk: (T, B, 4, bn) hoisted ``W_x @ x`` stream for row block r;
+        mask_t: (T, B) replicated validity mask.
         """
         col = jax.lax.axis_index(col_axis)
 
-        def step(carry, pre_t):
+        def step(carry, inp):
             h_full, c = carry
+            pre_t, m = inp
             # Fig. 3a: this engine column consumes its static h-slice.
             h_k = jax.lax.dynamic_slice(h_full, (0, col * bk), (B, bk))
             part = jnp.einsum('gnk,bk->bgn', w_blk, h_k)
@@ -604,20 +611,25 @@ def _scaleout_forward(static, w_h, w_peep, b, pre_x, h0, c0):
             h_new = o * jnp.tanh(c_new)
             # Fig. 3c: vertical re-broadcast of the updated hidden chunks.
             h_full_new = jax.lax.all_gather(h_new, row_axis, axis=1, tiled=True)
+            # Masked step = identity on the carried state (ragged serving).
+            m = m[:, None]
+            h_full_new = jnp.where(m, h_full_new, h_full)
+            c_new = jnp.where(m, c_new, c)
             return (h_full_new, c_new), (h_full_new, c_new)
 
-        (h_T, c_T), (hs, cs) = jax.lax.scan(step, (h0_full, c0_blk), pre_blk)
+        (h_T, c_T), (hs, cs) = jax.lax.scan(step, (h0_full, c0_blk),
+                                            (pre_blk, mask_t))
         return hs, cs, h_T, c_T
 
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(None, row_axis, col_axis), P(None, row_axis),
                   P(None, row_axis), P(None, None, None, row_axis),
-                  P(None, None), P(None, row_axis)),
+                  P(None, None), P(None, row_axis), P(None, None)),
         out_specs=(P(), P(None, None, row_axis), P(), P(None, row_axis)),
         check_vma=False,
     )
-    hs, cs, h_T, c_T = fn(w_p, peep_p, bias_p, pre_p, h0_p, c0_p)
+    hs, cs, h_T, c_T = fn(w_p, peep_p, bias_p, pre_p, h0_p, c0_p, mask)
     return hs[..., :n_h], cs[..., :n_h], h_T[..., :n_h], c_T[..., :n_h]
 
 
@@ -652,6 +664,7 @@ systolic_seq_fused.defvjp(_sso_fwd, _sso_bwd)
 def systolic_lstm_seq(params: LSTMParams, mesh: Optional[Mesh], xs: jax.Array,
                       h0: Optional[jax.Array] = None,
                       c0: Optional[jax.Array] = None, *,
+                      valid_len: Optional[jax.Array] = None,
                       row_axis: str = 'row', col_axis: str = 'col'
                       ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Whole-sequence persistent LSTM, scaled out over a systolic mesh.
@@ -669,6 +682,11 @@ def systolic_lstm_seq(params: LSTMParams, mesh: Optional[Mesh], xs: jax.Array,
     or all-1 mesh degenerates to the single-engine Pallas sequence kernel
     (``kernels.lstm_seq.lstm_layer_seq``) — the composition this function
     scales out.
+
+    ``valid_len``: optional (B,) per-stream valid lengths for ragged chunked
+    serving (DESIGN.md §7) — steps ``t >= valid_len[b]`` are identity on the
+    carried state, so ``(h_T, c_T)`` is the state after exactly
+    ``valid_len[b]`` steps.  The masked path is inference-only (no VJP).
     """
     assert xs.ndim == 3, 'systolic_lstm_seq expects (T, B, N_x) input'
     T, B = xs.shape[0], xs.shape[1]
@@ -679,10 +697,18 @@ def systolic_lstm_seq(params: LSTMParams, mesh: Optional[Mesh], xs: jax.Array,
         c0 = jnp.zeros((B, n_h), xs.dtype)
     if mesh is None or all(s == 1 for s in mesh.shape.values()):
         from ..kernels.lstm_seq import lstm_layer_seq
-        return lstm_layer_seq(params, xs, h0, c0)
+        return lstm_layer_seq(params, xs, h0, c0, valid_len=valid_len)
     _require_systolic_axes(mesh, row_axis, col_axis)
     pre_x = jnp.einsum('ghx,tbx->tbgh', params.w_x, xs)   # hoisted input stream
-    return systolic_seq_fused((mesh, row_axis, col_axis), params.w_h,
+    static = (mesh, row_axis, col_axis)
+    if valid_len is not None:
+        from .lstm import valid_len_mask
+        mask = valid_len_mask(T, valid_len, B)
+        hs, cs, h_T, c_T = _scaleout_forward(static, params.w_h,
+                                             params.w_peep, params.b,
+                                             pre_x, h0, c0, mask)
+        return hs, (h_T, c_T)
+    return systolic_seq_fused(static, params.w_h,
                               params.w_peep, params.b, pre_x, h0, c0)
 
 

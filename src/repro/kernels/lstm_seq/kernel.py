@@ -27,6 +27,13 @@ batch grid dimension: each block replays the full T-step recurrence against
 the same resident weights, so a serving slot grid amortises a single weight
 DMA across all slots instead of paying one per batch block.
 
+Both kernels also take a per-(t, b) validity mask (the streaming-serving
+contract of DESIGN.md §7): a masked step is an *identity* on the resident
+state — ``h_t = h_{t-1}``, ``c_t = c_{t-1}`` via ``jnp.where`` (no arithmetic
+on the carried values, so an all-ones mask is bit-identical to the unmasked
+kernel) — which is what lets ragged streams share one batched launch without
+padded tail steps corrupting the state carried into the next chunk.
+
 The int8 variant (`lstm_seq_quantized`) runs the same persistent schedule over
 the bit-accurate systolic datapath of ``core.systolic.systolic_cell_quantized``:
 int8 weight tiles resident in VMEM, per-tile int32 MACs saturated to int16, a
@@ -53,7 +60,7 @@ from ...core.systolic import ACC_FMT, CELL_FMT
 # ---------------------------------------------------------------------------
 
 def _seq_kernel(pre_x_ref, w_ref, peep_ref, bias_ref, h0_ref, c0_ref,
-                hs_ref, cs_ref, h_scr, c_scr, acc_ref, *, n_k: int,
+                mask_ref, hs_ref, cs_ref, h_scr, c_scr, acc_ref, *, n_k: int,
                 bn: int, bk: int):
     # Grid (NB, T, J, K): the batch-block dimension is OUTERMOST, so the
     # resident weights serve every batch block (serving slots) from one DMA.
@@ -91,6 +98,11 @@ def _seq_kernel(pre_x_ref, w_ref, peep_ref, bias_ref, h0_ref, c0_ref,
         c_new = f * c_prev + i * g
         o = jax.nn.sigmoid(pre[3] + peep[2] * c_new + bias[3])
         h_new = o * jnp.tanh(c_new)
+        # Masked step = identity on the resident state (select, no arithmetic
+        # — the all-ones mask path stays bit-identical to the unmasked form).
+        m = (mask_ref[0] > 0)[:, None]                         # (B, 1)
+        h_new = jnp.where(m, h_new, h_scr[t % 2, :, sl])
+        c_new = jnp.where(m, c_new, c_prev)
         h_scr[(t + 1) % 2, :, sl] = h_new
         c_scr[:, sl] = c_new
         hs_ref[0] = h_new.astype(hs_ref.dtype)
@@ -99,7 +111,8 @@ def _seq_kernel(pre_x_ref, w_ref, peep_ref, bias_ref, h0_ref, c0_ref,
 
 @functools.partial(jax.jit, static_argnames=('bn', 'bk', 'bb', 'interpret'))
 def lstm_seq(pre_x: jax.Array, w_h: jax.Array, peep: jax.Array,
-             bias: jax.Array, h0: jax.Array, c0: jax.Array, *,
+             bias: jax.Array, h0: jax.Array, c0: jax.Array,
+             mask: Optional[jax.Array] = None, *,
              bn: int = 128, bk: int = 128, bb: Optional[int] = None,
              interpret: bool = False):
     """Whole-sequence fused LSTM.
@@ -110,12 +123,17 @@ def lstm_seq(pre_x: jax.Array, w_h: jax.Array, peep: jax.Array,
     batch block ``bb`` (None = one block).  ``bb`` adds an outermost batch
     grid dimension: each block runs the full T-step recurrence against the
     same resident weights, so serving slots amortise one weight DMA.
+    ``mask``: optional (T, B) validity mask (>0 = live step); a masked step
+    carries h/c through unchanged and re-emits the carried values (None =
+    all steps live, bit-identical to the masked call with an all-ones mask).
     Returns (hs, cs), each (T, B, N_h).
     """
     T, _, b, n_h = pre_x.shape
     bb = b if bb is None else bb
     assert n_h % bn == 0 and n_h % bk == 0, (n_h, bn, bk)
     assert b % bb == 0, (b, bb)
+    if mask is None:
+        mask = jnp.ones((T, b), pre_x.dtype)
     n_k = n_h // bk
 
     hs, cs = pl.pallas_call(
@@ -129,6 +147,7 @@ def lstm_seq(pre_x: jax.Array, w_h: jax.Array, peep: jax.Array,
             pl.BlockSpec((4, n_h), lambda nb, t, j, k: (0, 0)),
             pl.BlockSpec((bb, n_h), lambda nb, t, j, k: (nb, 0)),
             pl.BlockSpec((bb, n_h), lambda nb, t, j, k: (nb, 0)),
+            pl.BlockSpec((1, bb), lambda nb, t, j, k: (t, nb)),
         ],
         out_specs=[
             pl.BlockSpec((1, bb, bn), lambda nb, t, j, k: (t, nb, j)),
@@ -144,7 +163,7 @@ def lstm_seq(pre_x: jax.Array, w_h: jax.Array, peep: jax.Array,
             pltpu.VMEM((4, bb, bn), jnp.float32),   # gate pre-act accumulator
         ],
         interpret=interpret,
-    )(pre_x, w_h, peep, bias, h0, c0)
+    )(pre_x, w_h, peep, bias, h0, c0, mask)
     return hs, cs
 
 
@@ -157,17 +176,17 @@ _rshift_round = quant.rshift_round
 
 
 def _seq_kernel_q(xs_ref, w_ref, peep_ref, bias_ref, sig_ref, tanh_ref,
-                  hs_ref, h_scr, c_scr, acc_ref, *, n_c: int, cols_x: int,
-                  tile: int):
+                  h0_ref, c0_ref, mask_ref, hs_ref, cs_ref, h_scr, c_scr,
+                  acc_ref, *, n_c: int, cols_x: int, tile: int):
     # Grid (NB, T, R, C) — batch blocks outermost, as in the f32 kernel.
     t = pl.program_id(1)
     r = pl.program_id(2)
     c = pl.program_id(3)
 
     @pl.when((t == 0) & (r == 0) & (c == 0))
-    def _zero_state():
-        h_scr[...] = jnp.zeros_like(h_scr)
-        c_scr[...] = jnp.zeros_like(c_scr)
+    def _load_state():
+        h_scr[0] = h0_ref[...]
+        c_scr[...] = c0_ref[...]
 
     @pl.when(c == 0)
     def _zero_acc():
@@ -222,18 +241,28 @@ def _seq_kernel_q(xs_ref, w_ref, peep_ref, bias_ref, sig_ref, tanh_ref,
         h_new = _rshift_round(o * tanh_c, 14 - quant.STATE_FMT.frac_bits)
         h8 = jnp.clip(h_new, -128, 127).astype(jnp.int8)
 
+        # Masked step = identity on the resident codes (pure select — the
+        # all-ones mask path stays bit-identical to the unmasked datapath).
+        m = (mask_ref[0] > 0)[:, None]
+        h8 = jnp.where(m, h8, h_scr[t % 2, :, sl])
+        c8 = jnp.where(m, c_new8.astype(jnp.int8), c_scr[:, sl])
+
         h_scr[(t + 1) % 2, :, sl] = h8
-        c_scr[:, sl] = c_new8.astype(jnp.int8)
+        c_scr[:, sl] = c8
         hs_ref[0] = h8
+        cs_ref[0] = c8
 
 
 @functools.partial(jax.jit, static_argnames=('tile', 'cols_x', 'bb',
                                              'interpret'))
 def lstm_seq_quantized(xs_q: jax.Array, w_q: jax.Array, peep_q: jax.Array,
                        bias_q: jax.Array, sig_lut: jax.Array,
-                       tanh_lut: jax.Array, *, tile: int, cols_x: int,
-                       bb: Optional[int] = None,
-                       interpret: bool = False) -> jax.Array:
+                       tanh_lut: jax.Array,
+                       h0_q: Optional[jax.Array] = None,
+                       c0_q: Optional[jax.Array] = None,
+                       mask: Optional[jax.Array] = None, *, tile: int,
+                       cols_x: int, bb: Optional[int] = None,
+                       interpret: bool = False):
     """Whole-sequence bit-accurate int8 LSTM.
 
     xs_q: (T, B, padded_x) int8 frame codes; w_q: (4, padded_h, padded_in) int8
@@ -241,14 +270,24 @@ def lstm_seq_quantized(xs_q: jax.Array, w_q: jax.Array, peep_q: jax.Array,
     tiles); peep_q: (3, padded_h) int8; bias_q: (4, padded_h) int16 in ACC_FMT;
     sig_lut/tanh_lut: (1, 256) int8; ``bb`` an optional batch block (B must
     divide by it; batch blocks iterate outermost so the resident weights are
-    fetched once).  Returns hs_q (T, B, padded_h) int8, bit-identical to
-    scanning ``core.systolic.systolic_cell_quantized``.
+    fetched once).  ``h0_q``/``c0_q``: optional (B, padded_h) int8 state codes
+    carried in from a previous chunk (None = zero state); ``mask``: optional
+    (T, B) int8 validity mask — a masked step carries the codes through
+    unchanged (pure select, so the all-ones mask is bit-identical to None).
+    Returns (hs_q, cs_q), each (T, B, padded_h) int8, bit-identical to
+    scanning ``core.systolic.systolic_cell_quantized`` from the given state.
     """
     T, b, padded_x = xs_q.shape
     _, padded_h, padded_in = w_q.shape
     assert padded_x == cols_x * tile and padded_in % tile == 0
     bb = b if bb is None else bb
     assert b % bb == 0, (b, bb)
+    if h0_q is None:
+        h0_q = jnp.zeros((b, padded_h), jnp.int8)
+    if c0_q is None:
+        c0_q = jnp.zeros((b, padded_h), jnp.int8)
+    if mask is None:
+        mask = jnp.ones((T, b), jnp.int8)
     n_c = padded_in // tile
 
     return pl.pallas_call(
@@ -263,13 +302,22 @@ def lstm_seq_quantized(xs_q: jax.Array, w_q: jax.Array, peep_q: jax.Array,
             pl.BlockSpec((4, padded_h), lambda nb, t, r, c: (0, 0)),
             pl.BlockSpec((1, 256), lambda nb, t, r, c: (0, 0)),
             pl.BlockSpec((1, 256), lambda nb, t, r, c: (0, 0)),
+            pl.BlockSpec((bb, padded_h), lambda nb, t, r, c: (nb, 0)),
+            pl.BlockSpec((bb, padded_h), lambda nb, t, r, c: (nb, 0)),
+            pl.BlockSpec((1, bb), lambda nb, t, r, c: (t, nb)),
         ],
-        out_specs=pl.BlockSpec((1, bb, tile), lambda nb, t, r, c: (t, nb, r)),
-        out_shape=jax.ShapeDtypeStruct((T, b, padded_h), jnp.int8),
+        out_specs=[
+            pl.BlockSpec((1, bb, tile), lambda nb, t, r, c: (t, nb, r)),
+            pl.BlockSpec((1, bb, tile), lambda nb, t, r, c: (t, nb, r)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, b, padded_h), jnp.int8),
+            jax.ShapeDtypeStruct((T, b, padded_h), jnp.int8),
+        ],
         scratch_shapes=[
             pltpu.VMEM((2, bb, padded_h), jnp.int8),  # h codes, t parity
             pltpu.VMEM((bb, padded_h), jnp.int8),     # c codes
             pltpu.VMEM((4, bb, tile), jnp.int32),     # saturating accumulator
         ],
         interpret=interpret,
-    )(xs_q, w_q, peep_q, bias_q, sig_lut, tanh_lut)
+    )(xs_q, w_q, peep_q, bias_q, sig_lut, tanh_lut, h0_q, c0_q, mask)

@@ -16,7 +16,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ...core.lstm import GATES, LSTMParams, lstm_bwd_recompute_gates
+from ...core.lstm import (GATES, LSTMParams, lstm_bwd_recompute_gates,
+                          valid_len_mask)
 from ...core.systolic import QuantizedPackedLSTM
 from .._padding import pad_axis_to as _pad_to, round_up as _round_up
 from .kernel import lstm_seq, lstm_seq_quantized
@@ -47,11 +48,13 @@ def vmem_bytes_estimate(n_h: int, batch: int, bn: int = 128,
 # f32 path with the production training VJP
 # ---------------------------------------------------------------------------
 
-def _seq_forward(cfg, w_h, w_peep, b, pre_x, h0, c0):
+def _seq_forward(cfg, w_h, w_peep, b, pre_x, h0, c0, mask=None):
     """Pad, run the kernel, un-pad.  pre_x: (T, B, 4, N_h) core layout.
 
     Numerics-neutral wrapper: zero padding + layout transposes only, so the
     kernel output (un-padded) stays allclose to ``core.lstm.lstm_layer``.
+    ``mask``: optional (T, B) validity mask; padded batch rows are masked out
+    (zero), so they never leave the zero state.
     """
     bn, bk, bb, interpret = cfg
     T, B, _, n_h = pre_x.shape
@@ -67,8 +70,10 @@ def _seq_forward(cfg, w_h, w_peep, b, pre_x, h0, c0):
     bias_p = _pad_to(b, n_h_p, 1)
     h0_p = _pad_to(_pad_to(h0, n_h_p, 1), b_p, 0)
     c0_p = _pad_to(_pad_to(c0, n_h_p, 1), b_p, 0)
+    mask_p = None if mask is None else _pad_to(
+        mask.astype(pre_x.dtype), b_p, 1)
 
-    hs, cs = lstm_seq(pre_k, w_p, peep_p, bias_p, h0_p, c0_p,
+    hs, cs = lstm_seq(pre_k, w_p, peep_p, bias_p, h0_p, c0_p, mask_p,
                       bn=bn, bk=bk, bb=bb, interpret=interpret)
     return hs[:, :B, :n_h], cs[:, :B, :n_h]
 
@@ -102,6 +107,7 @@ lstm_seq_fused.defvjp(_seq_fwd, _seq_bwd)
 def lstm_layer_seq(params: LSTMParams, xs: jax.Array,
                    h0: Optional[jax.Array] = None,
                    c0: Optional[jax.Array] = None, *,
+                   valid_len: Optional[jax.Array] = None,
                    bn: Optional[int] = None, bk: Optional[int] = None,
                    bb: Optional[int] = None,
                    interpret: Optional[bool] = None
@@ -113,6 +119,12 @@ def lstm_layer_seq(params: LSTMParams, xs: jax.Array,
     recomputes gates from the saved h/c trajectories).  ``bb`` selects the
     batch-block grid dimension (serving slots amortising weight residency);
     the padded batch is rounded up to a whole number of blocks.
+
+    ``valid_len``: optional (B,) int32 per-stream valid lengths for ragged
+    chunked serving — steps ``t >= valid_len[b]`` are identity on the state
+    (DESIGN.md §7 masking contract), so ``(h_T, c_T)`` is the state after
+    exactly ``valid_len[b]`` steps.  The masked path is inference-only (no
+    custom VJP); training always runs the unmasked whole-sequence form.
 
     Default blocking is shape-aware: when the padded hidden row fits a single
     block (N_h <= 512) the whole row is one grid step — the weights are
@@ -140,9 +152,17 @@ def lstm_layer_seq(params: LSTMParams, xs: jax.Array,
         c0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
     xs_flat = xs.reshape(T, B, params.n_x)
     pre_x = jnp.einsum('ghx,tbx->tbgh', params.w_x, xs_flat)  # hoisted matmul
-    hs, (h_T, c_T) = lstm_seq_fused(
-        (bn, bk, bb, bool(interpret)), params.w_h, params.w_peep, params.b,
-        pre_x, h0.reshape(B, n_h), c0.reshape(B, n_h))
+    cfg = (bn, bk, bb, bool(interpret))
+    if valid_len is not None:
+        mask = valid_len_mask(T, valid_len, B)
+        hs, cs = _seq_forward(cfg, params.w_h, params.w_peep, params.b,
+                              pre_x, h0.reshape(B, n_h), c0.reshape(B, n_h),
+                              mask)
+        h_T, c_T = hs[-1], cs[-1]
+    else:
+        hs, (h_T, c_T) = lstm_seq_fused(
+            cfg, params.w_h, params.w_peep, params.b,
+            pre_x, h0.reshape(B, n_h), c0.reshape(B, n_h))
     hs = hs.reshape((T,) + batch_shape + (n_h,))
     return hs, (h_T.reshape(batch_shape + (n_h,)),
                 c_T.reshape(batch_shape + (n_h,)))
@@ -166,8 +186,11 @@ def _dense_from_tiles(qp: QuantizedPackedLSTM):
 
 
 def lstm_layer_seq_quantized(qp: QuantizedPackedLSTM, xs_q: jax.Array, *,
+                             state: Optional[Tuple[jax.Array, jax.Array]] = None,
+                             valid_len: Optional[jax.Array] = None,
+                             return_state: bool = False,
                              bb: Optional[int] = None,
-                             interpret: Optional[bool] = None) -> jax.Array:
+                             interpret: Optional[bool] = None):
     """Whole-sequence form of ``systolic_layer_quantized``: bit-identical int8
     hidden codes, one kernel launch instead of T.
 
@@ -175,6 +198,13 @@ def lstm_layer_seq_quantized(qp: QuantizedPackedLSTM, xs_q: jax.Array, *,
     selects the batch-block grid dimension (the batch is zero-padded to a
     whole number of blocks; padded rows carry zero codes and are dropped, so
     bit-identity is unaffected).
+
+    Chunked streaming (DESIGN.md §7): ``state`` is an opaque carry of
+    ``(h_q, c_q)`` padded-layout int8 codes as returned by a previous call
+    with ``return_state=True`` (None = zero state); ``valid_len`` masks
+    ragged tail steps per stream (identity on the carried codes), so feeding
+    a sequence chunk by chunk is bit-identical to the monolithic call.  With
+    ``return_state=True`` returns ``(hs, (h_q, c_q))``.
     """
     if interpret is None:
         interpret = jax.default_backend() != 'tpu'
@@ -186,9 +216,24 @@ def lstm_layer_seq_quantized(qp: QuantizedPackedLSTM, xs_q: jax.Array, *,
     xs_flat = xs_q.reshape(T, b, plan.n_x)
     xs_pad = jnp.zeros((T, b_p, plan.padded_x), jnp.int8
                        ).at[:, :b, :plan.n_x].set(xs_flat)
+    h0_q = c0_q = mask = None
+    if state is not None:
+        h0_q = jnp.zeros((b_p, plan.padded_h), jnp.int8
+                         ).at[:b].set(state[0].reshape(b, plan.padded_h))
+        c0_q = jnp.zeros((b_p, plan.padded_h), jnp.int8
+                         ).at[:b].set(state[1].reshape(b, plan.padded_h))
+    if valid_len is not None:
+        mask = jnp.zeros((T, b_p), jnp.int8).at[:, :b].set(
+            valid_len_mask(T, valid_len, b).astype(jnp.int8))
     w_q, peep_q, bias_q = _dense_from_tiles(qp)
-    hs = lstm_seq_quantized(
+    hs, cs = lstm_seq_quantized(
         xs_pad, w_q, peep_q, bias_q,
         qp.sig_lut.reshape(1, 256), qp.tanh_lut.reshape(1, 256),
+        h0_q, c0_q, mask,
         tile=plan.tile, cols_x=plan.cols_x, bb=bb, interpret=bool(interpret))
-    return hs[:, :b, :plan.n_h].reshape((T,) + batch_shape + (plan.n_h,))
+    out = hs[:, :b, :plan.n_h].reshape((T,) + batch_shape + (plan.n_h,))
+    if not return_state:
+        return out
+    final = (hs[-1, :b].reshape(batch_shape + (plan.padded_h,)),
+             cs[-1, :b].reshape(batch_shape + (plan.padded_h,)))
+    return out, final

@@ -1,20 +1,29 @@
-"""Batched serving driver: continuous batching over a fixed slot grid.
+"""Serving driver: continuous batching on the shared slot scheduler.
 
 The serving analogue of the paper's deployment story: weights stay resident
-(weight-stationary, C3), requests stream through.  A fixed number of decode
-slots share one jit'd ``decode_step``; finished slots are refilled from the
-queue without stopping the others (continuous batching a la Orca/vLLM, minus
-paged KV — the ring/linear caches live in models/*).
+(weight-stationary, C3), requests stream through.  Two front-ends share the
+``serving.SlotScheduler`` admission/eviction/refill policy:
+
+  * **Token families** (`SlotServer`): a fixed number of decode slots share
+    one jit'd ``decode_step``; finished slots are refilled from the queue
+    without stopping the others (continuous batching a la Orca/vLLM, minus
+    paged KV — the ring/linear caches live in models/*).
+  * **The LSTM family** (`StreamServer`): frame streams are served by the
+    packed multi-stream ``serving.StreamingEngine`` (DESIGN.md §7) — all
+    active utterances advance through ONE batched chunked call to the
+    whole-sequence LSTM path per step, ragged tails masked, per-stream
+    ``(h, c)`` state carried across chunks in the packed session cache.
 
 Works on CPU with the smoke configs:
   python -m repro.launch.serve --arch qwen3-14b --smoke --requests 6
+  python -m repro.launch.serve --arch chipmunk-ctc --smoke --requests 6
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +31,7 @@ import numpy as np
 
 from .. import configs
 from ..models import get_bundle
+from ..serving import SlotScheduler, StreamingEngine
 
 
 @dataclasses.dataclass
@@ -33,6 +43,9 @@ class Request:
     t_enqueue: float = 0.0
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+    # prompt tokens not yet prefetched into the slot's cache — a declared
+    # field (reset on admission), not an attribute patched on from outside
+    _prefill_left: List[int] = dataclasses.field(default_factory=list)
 
 
 class SlotServer:
@@ -41,7 +54,8 @@ class SlotServer:
     For simplicity each slot owns an independent cache (batch dim 1) — slot
     refill never perturbs neighbours.  Prefill reuses the decode path (token
     by token) for the smoke scale; the 32k-prefill path is exercised by the
-    dry-run's ``forward`` lowering.
+    dry-run's ``forward`` lowering.  Slot bookkeeping lives in the shared
+    ``serving.SlotScheduler``; this class owns only the caches.
     """
 
     def __init__(self, cfg, params, num_slots=4, max_seq=128):
@@ -49,37 +63,34 @@ class SlotServer:
         self.bundle = get_bundle(cfg)
         self.params = params
         self.max_seq = max_seq
-        self.slots: List[Optional[Request]] = [None] * num_slots
+        self.sched: SlotScheduler[Request] = SlotScheduler(num_slots)
         self.caches = [self.bundle.init_cache(1, max_seq)[0]
                        for _ in range(num_slots)]
         self.pos = [0] * num_slots
-        self.pending: List[Request] = []
-        self.done: List[Request] = []
         self._step = jax.jit(self.bundle.decode_step)
+
+    @property
+    def done(self) -> List[Request]:
+        return self.sched.done
 
     def submit(self, req: Request):
         req.t_enqueue = time.time()
         req.out = []
-        self.pending.append(req)
+        self.sched.submit(req)
 
-    def _refill(self):
-        for i, slot in enumerate(self.slots):
-            if slot is None and self.pending:
-                req = self.pending.pop(0)
-                self.slots[i] = req
-                self.caches[i] = self.bundle.init_cache(1, self.max_seq)[0]
-                self.pos[i] = 0
-                req._prefill_left = list(req.prompt)        # type: ignore
+    def _admit(self, i: int, req: Request):
+        # fresh cache per admission: a recycled slot never leaks state
+        self.caches[i] = self.bundle.init_cache(1, self.max_seq)[0]
+        self.pos[i] = 0
+        req._prefill_left = list(req.prompt)
 
     def step(self):
         """One decode step across all active slots."""
-        self._refill()
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            if req._prefill_left:                           # type: ignore
-                tok = req._prefill_left.pop(0)              # type: ignore
-                emit = not req._prefill_left                # type: ignore
+        self.sched.refill(self._admit)
+        for i, req in self.sched.active():
+            if req._prefill_left:
+                tok = req._prefill_left.pop(0)
+                emit = not req._prefill_left
             else:
                 tok = req.out[-1]
                 emit = True
@@ -94,12 +105,79 @@ class SlotServer:
                 req.out.append(nxt)
                 if len(req.out) >= req.max_new or self.pos[i] >= self.max_seq - 1:
                     req.t_done = time.time()
-                    self.done.append(req)
-                    self.slots[i] = None
+                    self.sched.finish(i)
 
     def drain(self):
-        while any(s is not None for s in self.slots) or self.pending:
+        while self.sched.busy:
             self.step()
+
+
+class StreamServer:
+    """Frame-stream serving for the LSTM family on the packed engine.
+
+    Thin front-end over ``serving.StreamingEngine``: utterances in, per-frame
+    CTC log-probs (and incrementally decoded phonemes) out.  Unlike the
+    token path there is no per-slot jit call — every engine step advances
+    ALL active streams through one batched chunked whole-sequence call, so
+    the resident weights are fetched once per chunk for the entire slot grid.
+    """
+
+    def __init__(self, cfg, params, num_slots=4, chunk=16):
+        self.engine = StreamingEngine(cfg, params, max_streams=num_slots,
+                                      chunk=chunk, decode_ctc=True)
+
+    def submit(self, frames: np.ndarray):
+        return self.engine.submit(frames)
+
+    def drain(self):
+        return self.engine.run()
+
+    @property
+    def done(self):
+        return self.engine.sched.done
+
+
+def _run_token_serving(cfg, args):
+    bundle = get_bundle(cfg)
+    params, _ = bundle.init(jax.random.PRNGKey(0))
+    server = SlotServer(cfg, params, num_slots=args.slots)
+
+    rng = np.random.RandomState(0)
+    t0 = time.time()
+    for r in range(args.requests):
+        prompt = rng.randint(1, cfg.vocab_size, size=rng.randint(3, 8)).tolist()
+        server.submit(Request(rid=r, prompt=prompt, max_new=args.max_new))
+    server.drain()
+    wall = time.time() - t0
+    toks = sum(len(r.out) for r in server.done)
+    lat = [r.t_done - r.t_enqueue for r in server.done]
+    print(f'served {len(server.done)} requests, {toks} tokens in {wall:.2f}s '
+          f'({toks / wall:.1f} tok/s); p50 latency {np.median(lat):.2f}s')
+    for r in sorted(server.done, key=lambda r: r.rid)[:3]:
+        print(f'  req {r.rid}: prompt {r.prompt[:4]}... -> {r.out}')
+
+
+def _run_stream_serving(cfg, args):
+    bundle = get_bundle(cfg)
+    params, _ = bundle.init(jax.random.PRNGKey(0))
+    server = StreamServer(cfg, params, num_slots=args.slots, chunk=args.chunk)
+
+    rng = np.random.RandomState(0)
+    t0 = time.time()
+    for _ in range(args.requests):
+        frames = rng.randn(rng.randint(args.chunk, 4 * args.chunk),
+                           cfg.lstm_inputs).astype(np.float32) * 0.5
+        server.submit(frames)
+    server.drain()
+    wall = time.time() - t0
+    stats = server.engine.stats()
+    print(f'streamed {stats["streams"]} utterances, {stats["frames"]} frames '
+          f'in {wall:.2f}s ({stats["frames"] / wall:.1f} frames/s); '
+          f'p50 latency {stats["p50_latency_s"]:.3f}s, '
+          f'p50 chunk {stats["p50_chunk_s"] * 1e3:.1f}ms')
+    for s in sorted(server.done, key=lambda s: s.sid)[:3]:
+        print(f'  stream {s.sid}: {s.length} frames -> '
+              f'phonemes {s.decoder.symbols[:8]}')
 
 
 def main(argv=None):
@@ -109,6 +187,8 @@ def main(argv=None):
     ap.add_argument('--requests', type=int, default=6)
     ap.add_argument('--slots', type=int, default=3)
     ap.add_argument('--max-new', type=int, default=8)
+    ap.add_argument('--chunk', type=int, default=8,
+                    help='frames per engine step (LSTM streaming only)')
     from ..core.lstm import BACKENDS
     from .mesh import SYSTOLIC_TOPOLOGIES
     ap.add_argument('--lstm-backend', default='auto', choices=BACKENDS,
@@ -128,23 +208,10 @@ def main(argv=None):
 
     cfg = configs.get_smoke_config(args.arch).replace(
         lstm_backend=args.lstm_backend)
-    bundle = get_bundle(cfg)
-    params, _ = bundle.init(jax.random.PRNGKey(0))
-    server = SlotServer(cfg, params, num_slots=args.slots)
-
-    rng = np.random.RandomState(0)
-    t0 = time.time()
-    for r in range(args.requests):
-        prompt = rng.randint(1, cfg.vocab_size, size=rng.randint(3, 8)).tolist()
-        server.submit(Request(rid=r, prompt=prompt, max_new=args.max_new))
-    server.drain()
-    wall = time.time() - t0
-    toks = sum(len(r.out) for r in server.done)
-    lat = [r.t_done - r.t_enqueue for r in server.done]
-    print(f'served {len(server.done)} requests, {toks} tokens in {wall:.2f}s '
-          f'({toks / wall:.1f} tok/s); p50 latency {np.median(lat):.2f}s')
-    for r in sorted(server.done, key=lambda r: r.rid)[:3]:
-        print(f'  req {r.rid}: prompt {r.prompt[:4]}... -> {r.out}')
+    if cfg.family == 'lstm':
+        _run_stream_serving(cfg, args)
+    else:
+        _run_token_serving(cfg, args)
 
 
 if __name__ == '__main__':

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from ..configs import ArchConfig
 from ..core import ctc
 from ..core.lstm import (LSTMParams, LSTMStackParams, init_lstm_stack,
-                         lstm_stack_apply)
+                         lstm_stack_apply, lstm_stack_chunk)
 from ..sharding import logical
 
 
@@ -69,17 +69,24 @@ def init_state(cfg: ArchConfig, batch: int):
     return states, ax
 
 
-def stream_step(cfg: ArchConfig, params: LSTMStackParams, states, frames):
-    """One 10 ms frame through the network (the Table-2 deadline workload).
+def stream_forward(cfg: ArchConfig, params: LSTMStackParams, states, frames,
+                   valid_len=None):
+    """A chunk of streaming frames through the network — the generalisation
+    of the old one-frame ``stream_step`` (the Table-2 deadline workload is
+    ``frames.shape[1] == 1``) and the model half of the serving engine
+    (``serving.StreamingEngine``, DESIGN.md §7).
 
-    frames: (B, 1, n_in).  Returns (log-probs (B, 1, n_out), new states).
+    frames: (B, T, n_in); states: per-layer ``(h, c)`` from ``init_state`` /
+    the previous chunk; ``valid_len``: optional (B,) per-stream valid frame
+    counts — steps ``t >= valid_len[b]`` are identity on every layer's
+    carried state, so ragged streams can share one packed call.  Returns
+    (log-probs (B, T, n_out), new states).  Feeding chunks back to back is
+    bit-equal to one whole-sequence call on the same backend, and the
+    composition from zero state is allclose to ``forward``.
     """
-    from ..core.lstm import lstm_cell
-    x = frames[:, 0]
-    new_states = []
-    for lp, (h, c) in zip(params.layers, states):
-        h, c = lstm_cell(lp, x, h, c)
-        new_states.append((h, c))
-        x = h
-    y = jnp.einsum('oh,bh->bo', params.w_out, x) + params.b_out
-    return jax.nn.log_softmax(y, axis=-1)[:, None], tuple(new_states)
+    xs = jnp.moveaxis(frames, 0, 1)                    # (T, B, n_in)
+    ys, new_states = lstm_stack_chunk(params, xs, states,
+                                      valid_len=valid_len,
+                                      backend=cfg.lstm_backend)
+    log_probs = jax.nn.log_softmax(ys, axis=-1)        # (T, B, n_out)
+    return jnp.moveaxis(log_probs, 0, 1), new_states

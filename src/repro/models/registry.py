@@ -99,7 +99,8 @@ def _hymba_bundle(cfg: ArchConfig) -> ModelBundle:
 
 def _chipmunk_bundle(cfg: ArchConfig) -> ModelBundle:
     def decode(p, states, frames, pos):
-        return chipmunk_net.stream_step(cfg, p, states, frames)
+        # one-frame special case of the chunked streaming forward
+        return chipmunk_net.stream_forward(cfg, p, states, frames)
 
     return ModelBundle(
         cfg=cfg,

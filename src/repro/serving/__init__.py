@@ -1,0 +1,13 @@
+"""Streaming inference engine: packed multi-stream stateful serving.
+
+The serving substrate between the persistent LSTM kernels and the CLIs
+(DESIGN.md §7): per-stream ``(h, c)`` state in a packed session cache, one
+batched chunked whole-sequence call per engine step, ragged streams masked
+by the valid-length contract, slots admitted/evicted/refilled continuously.
+"""
+from .engine import StreamingEngine
+from .scheduler import SlotScheduler
+from .session import IncrementalCTCDecoder, StreamSession
+
+__all__ = ['StreamingEngine', 'SlotScheduler', 'IncrementalCTCDecoder',
+           'StreamSession']

@@ -1,0 +1,159 @@
+"""Packed multi-stream stateful streaming engine (DESIGN.md §7).
+
+The deployment story of the paper — weights stay resident while audio frames
+stream through — turned into a serving substrate: every active stream's
+``(h, c)`` LSTM state lives in one packed per-layer state cache of shape
+``(max_streams, N_h)``, and each engine step runs ONE batched chunked call to
+the whole-sequence LSTM path (``core.lstm.lstm_stack_chunk``) for ALL active
+streams.  On the ``pallas_seq`` backend the slot dimension maps onto the
+batch-block (``bb``) grid of the persistent kernel, so every stream shares a
+single weight DMA per chunk instead of paying one per slot (the E-PUR
+amortisation); on ``pallas_seq_systolic`` the same call scales out over the
+installed mesh.  Ragged streams are handled by the §7 valid-length masking
+contract: a slot's padded tail steps are identity on its carried state, so
+admission/eviction/refill never perturbs neighbouring streams.
+
+Backend-agnostic by construction: the engine only speaks
+``models.chipmunk_net.stream_forward``, which dispatches on
+``cfg.lstm_backend`` (``xla_scan | pallas_seq | pallas_seq_systolic`` via the
+installed mesh).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import chipmunk_net
+from .scheduler import SlotScheduler
+from .session import IncrementalCTCDecoder, StreamSession
+
+
+class StreamingEngine:
+    """Continuous streaming over a packed slot grid of recurrent state.
+
+    One instance owns ``max_streams`` state slots; streams are admitted from
+    a FIFO queue, advance ``chunk`` frames per ``step`` through one batched
+    call, and are retired when their frames are exhausted.  Numerics
+    contract: a stream's emitted log-probs equal the monolithic
+    ``chipmunk_net.forward`` of its full utterance on the same backend
+    (bit-equal on a fixed backend code path; allclose across backends),
+    regardless of which streams shared its batch (tests/test_streaming.py).
+    """
+
+    def __init__(self, cfg, params, *, max_streams: int = 4, chunk: int = 16,
+                 decode_ctc: bool = False):
+        assert cfg.family == 'lstm', (
+            'StreamingEngine serves the stateful recurrent family; token '
+            'families keep the per-slot decode loop (launch/serve.py)')
+        assert chunk >= 1 and max_streams >= 1
+        self.cfg = cfg
+        self.params = params
+        self.chunk = chunk
+        self.decode_ctc = decode_ctc
+        self.sched: SlotScheduler[StreamSession] = SlotScheduler(max_streams)
+        self.states = tuple(
+            (jnp.zeros((max_streams, cfg.lstm_hidden), cfg.dtype()),
+             jnp.zeros((max_streams, cfg.lstm_hidden), cfg.dtype()))
+            for _ in range(cfg.n_layers))
+        self._next_sid = 0
+        self.chunk_walls: List[float] = []   # per-step wall times (latency)
+
+        def fwd(params, states, frames, valid):
+            return chipmunk_net.stream_forward(cfg, params, states, frames,
+                                               valid_len=valid)
+
+        self._fwd = jax.jit(fwd)
+
+    # ------------------------------------------------------------ admission
+    def submit(self, frames: np.ndarray, sid: Optional[int] = None
+               ) -> StreamSession:
+        """Queue an utterance ((L, n_in) host frames) for streaming."""
+        frames = np.asarray(frames, np.float32)
+        assert frames.ndim == 2 and frames.shape[1] == self.cfg.lstm_inputs, \
+            frames.shape
+        if sid is None:
+            sid = self._next_sid
+        self._next_sid = max(self._next_sid, sid + 1)
+        dec = IncrementalCTCDecoder() if self.decode_ctc else None
+        sess = StreamSession(sid=sid, frames=frames, decoder=dec,
+                             t_enqueue=time.time())
+        self.sched.submit(sess)
+        return sess
+
+    def _zero_slot(self, slot: int, _sess: StreamSession) -> None:
+        # A recycled slot must never leak its previous occupant's state.
+        self.states = jax.tree.map(
+            lambda a: a.at[slot].set(0), self.states)
+
+    def evict(self, sid: int) -> Optional[StreamSession]:
+        """Abandon a stream mid-flight; its slot is freed for refill.
+
+        Neighbouring streams are untouched — their state rows are separate
+        slots of the packed cache and the freed row is zeroed on the next
+        admission (``_zero_slot``).
+        """
+        for i, sess in self.sched.active():
+            if sess.sid == sid:
+                return self.sched.evict(i)
+        return None
+
+    # ------------------------------------------------------------- stepping
+    def step(self) -> bool:
+        """Advance every active stream by up to ``chunk`` frames.
+
+        Admits pending streams into free slots, packs all active streams
+        into ONE batched chunked call (padded slots masked out via
+        ``valid_len``), scatters the valid output rows back to the sessions,
+        and retires exhausted streams.  Returns False when there was nothing
+        to do (the drain-loop exit condition).
+        """
+        self.sched.refill(self._zero_slot)
+        active = self.sched.active()
+        if not active:
+            return False
+
+        S, T = self.sched.num_slots, self.chunk
+        frames = np.zeros((S, T, self.cfg.lstm_inputs), np.float32)
+        valid = np.zeros((S,), np.int32)
+        for i, sess in active:
+            part = sess.next_chunk(T)
+            frames[i, :len(part)] = part
+            valid[i] = len(part)
+
+        t0 = time.time()
+        log_probs, self.states = self._fwd(
+            self.params, self.states, jnp.asarray(frames),
+            jnp.asarray(valid))
+        host = np.asarray(jax.block_until_ready(log_probs))
+        self.chunk_walls.append(time.time() - t0)
+
+        for i, sess in active:
+            sess.consume(host[i, :valid[i]])
+            if sess.remaining == 0:
+                sess.t_done = time.time()
+                self.sched.finish(i)
+        return True
+
+    def run(self) -> List[StreamSession]:
+        """Drain: step until every submitted stream has been served."""
+        while self.sched.busy:
+            self.step()
+        return self.sched.done
+
+    # ------------------------------------------------------------- metrics
+    def stats(self) -> dict:
+        """Throughput/latency summary over the completed streams."""
+        done = self.sched.done
+        frames = sum(s.length for s in done)
+        lats = [s.t_done - s.t_enqueue for s in done if s.t_done]
+        return {
+            'streams': len(done),
+            'frames': frames,
+            'p50_latency_s': float(np.median(lats)) if lats else 0.0,
+            'p50_chunk_s': (float(np.median(self.chunk_walls))
+                            if self.chunk_walls else 0.0),
+        }

@@ -1,0 +1,84 @@
+"""Slot scheduling: admission / eviction / refill over a fixed slot grid.
+
+Both serving front-ends share this policy object: the token ``SlotServer``
+(launch/serve.py) schedules decode requests onto cache slots, and the
+``StreamingEngine`` (serving/engine.py) schedules frame streams onto rows of
+the packed state cache.  The scheduler owns *which* item occupies *which*
+slot and nothing else — state initialisation happens in the admission
+callback, so the policy is reusable across workloads.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Deque, Generic, List, Optional, Tuple, TypeVar
+
+T = TypeVar('T')
+
+
+class SlotScheduler(Generic[T]):
+    """FIFO continuous batching over ``num_slots`` slots.
+
+    Items are ``submit``ted to a pending queue; ``refill`` admits them into
+    free slots (continuous batching — finished slots are refilled without
+    stopping the others); ``finish`` retires a slot into ``done``; ``evict``
+    frees a slot without retiring the item (it is NOT re-queued — eviction is
+    the caller saying the stream is abandoned).  Pure bookkeeping: no JAX
+    arrays live here.
+    """
+
+    def __init__(self, num_slots: int):
+        assert num_slots >= 1, num_slots
+        self.slots: List[Optional[T]] = [None] * num_slots
+        self.pending: Deque[T] = deque()
+        self.done: List[T] = []
+
+    @property
+    def num_slots(self) -> int:
+        return len(self.slots)
+
+    @property
+    def busy(self) -> bool:
+        """True while anything is active or queued (the drain condition)."""
+        return bool(self.pending) or any(s is not None for s in self.slots)
+
+    def submit(self, item: T) -> None:
+        """Queue an item for admission at the next ``refill``."""
+        self.pending.append(item)
+
+    def refill(self, on_admit: Optional[Callable[[int, T], None]] = None
+               ) -> List[Tuple[int, T]]:
+        """Admit pending items into free slots (FIFO), oldest first.
+
+        ``on_admit(slot, item)`` runs per admission — this is where callers
+        reset per-slot state (caches, packed state rows) so a recycled slot
+        can never leak its previous occupant's state.  Returns the
+        admissions performed.
+        """
+        admitted = []
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.pending:
+                item = self.pending.popleft()
+                self.slots[i] = item
+                if on_admit is not None:
+                    on_admit(i, item)
+                admitted.append((i, item))
+        return admitted
+
+    def active(self) -> List[Tuple[int, T]]:
+        """(slot index, item) for every occupied slot, in slot order."""
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def finish(self, slot: int) -> T:
+        """Retire the slot's item into ``done`` and free the slot."""
+        item = self.slots[slot]
+        assert item is not None, f'slot {slot} is empty'
+        self.done.append(item)
+        self.slots[slot] = None
+        return item
+
+    def evict(self, slot: int) -> T:
+        """Free the slot WITHOUT retiring the item (abandoned stream)."""
+        item = self.slots[slot]
+        assert item is not None, f'slot {slot} is empty'
+        self.slots[slot] = None
+        return item

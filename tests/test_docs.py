@@ -10,8 +10,13 @@ import pytest
 
 import repro.core.systolic as systolic_mod
 import repro.kernels.lstm_seq.ops as ops_mod
+import repro.serving.engine as engine_mod
+import repro.serving.scheduler as scheduler_mod
+import repro.serving.session as session_mod
+from repro.core import lstm as lstm_core
+from repro.models import chipmunk_net
 
-MODULES = (systolic_mod, ops_mod)
+MODULES = (systolic_mod, ops_mod, engine_mod, scheduler_mod, session_mod)
 
 # Entry point -> substring its docstring must contain (the numerics contract:
 # the reference the function is bit-identical / allclose to, or an explicit
@@ -31,6 +36,12 @@ CONTRACTS = {
     ops_mod.lstm_layer_seq_quantized: 'bit-identical',
     ops_mod.lstm_seq_fused: 'lstm_scan_fused',
     ops_mod.vmem_bytes_estimate: 'selection',
+    # streaming-serving chunking/masking contracts (DESIGN.md §7)
+    lstm_core.lstm_layer_chunk: 'bit-equal',
+    lstm_core.lstm_stack_chunk: 'lstm_stack_apply',
+    chipmunk_net.stream_forward: 'bit-equal',
+    engine_mod.StreamingEngine: 'forward',
+    session_mod.IncrementalCTCDecoder: 'ctc_greedy_decode',
 }
 
 

@@ -1,0 +1,276 @@
+"""Streaming engine: chunked stateful serving on the persistent LSTM kernels.
+
+The DESIGN.md §7 contracts:
+
+  * feeding a sequence chunk by chunk (state carried via h0/c0, ragged tails
+    masked by ``valid_len``) is BIT-EQUAL to the monolithic whole-sequence
+    call on the same backend code path — for the masked XLA scan, the
+    persistent Pallas kernel (f32), the int8 systolic kernel (bit-identical
+    codes), and the 2-device distributed scale-out;
+  * a masked step is identity on the carried state, so ragged
+    admission/eviction in the packed engine never perturbs neighbouring
+    streams;
+  * the engine's per-stream output equals the monolithic model forward.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _subproc import run_with_devices
+from repro import configs
+from repro.core import lstm, quant, systolic
+from repro.kernels.lstm_seq import lstm_layer_seq, lstm_layer_seq_quantized
+from repro.models import chipmunk_net, get_bundle
+from repro.serving import (IncrementalCTCDecoder, SlotScheduler,
+                           StreamingEngine)
+
+
+def _chunk_plan(total, chunk):
+    spans = []
+    lo = 0
+    while lo < total:
+        spans.append((lo, min(lo + chunk, total)))
+        lo += chunk
+    return spans
+
+
+# ------------------------------------------------ chunked == monolithic
+def test_chunked_equals_monolithic_xla_scan_bit_equal():
+    """≥3 chunks with ragged valid lengths reproduce the monolithic masked
+    scan bit for bit, and stay allclose to the canonical lstm_layer."""
+    p = lstm.init_lstm_params(jax.random.PRNGKey(0), 24, 32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (12, 3, 24)) * 0.5
+    lens = np.array([12, 7, 9])
+    mono, (hT_m, cT_m) = lstm.lstm_layer_chunk(
+        p, xs, valid_len=jnp.asarray(lens), backend='xla_scan')
+    hs_ref, _ = lstm.lstm_layer(p, xs)
+
+    h = c = None
+    outs = []
+    for lo, hi in _chunk_plan(12, 4):          # 3 chunks
+        vl = jnp.asarray(np.clip(lens - lo, 0, hi - lo), jnp.int32)
+        o, (h, c) = lstm.lstm_layer_chunk(p, xs[lo:hi], h, c, valid_len=vl,
+                                          backend='xla_scan')
+        outs.append(o)
+    hs = jnp.concatenate(outs)
+    np.testing.assert_array_equal(np.asarray(hs), np.asarray(mono))
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(hT_m))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cT_m))
+    for b, L in enumerate(lens):
+        np.testing.assert_allclose(hs[:L, b], hs_ref[:L, b],
+                                   rtol=1e-5, atol=1e-6)
+        # final state == state after exactly L valid steps
+        np.testing.assert_allclose(h[b], hs_ref[L - 1, b],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_chunked_equals_monolithic_pallas_seq_bit_equal():
+    """The persistent kernel with h0/c0 carry + valid-length mask: chunked ==
+    monolithic kernel call, bit for bit (interpret mode)."""
+    p = lstm.init_lstm_params(jax.random.PRNGKey(0), 24, 32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (9, 3, 24)) * 0.5
+    lens = np.array([9, 5, 7])
+    mono, _ = lstm_layer_seq(p, xs, bn=64, bk=64, interpret=True)
+
+    h = c = None
+    outs = []
+    for lo, hi in _chunk_plan(9, 3):           # 3 chunks
+        vl = jnp.asarray(np.clip(lens - lo, 0, hi - lo), jnp.int32)
+        o, (h, c) = lstm_layer_seq(p, xs[lo:hi], h, c, valid_len=vl,
+                                   bn=64, bk=64, interpret=True)
+        outs.append(o)
+    hs = np.asarray(jnp.concatenate(outs))
+    ref = np.asarray(mono)
+    for b, L in enumerate(lens):
+        np.testing.assert_array_equal(hs[:L, b], ref[:L, b])
+        np.testing.assert_array_equal(np.asarray(h)[b], ref[L - 1, b])
+        # masked tail re-emits the carried h (identity steps)
+        if L < 9:
+            np.testing.assert_array_equal(hs[-1, b], ref[L - 1, b])
+
+
+def test_chunked_quantized_bit_identical():
+    """int8 path: chunked calls with opaque (h_q, c_q) state carry and ragged
+    masks are bit-identical to the monolithic silicon-datapath scan."""
+    p = lstm.init_lstm_params(jax.random.PRNGKey(0), 16, 48)
+    qp = systolic.quantize_packed(
+        systolic.pack_lstm(p, systolic.SystolicPlan(16, 48, 16)))
+    xs = jax.random.normal(jax.random.PRNGKey(1), (9, 3, 16)) * 0.5
+    xs_q = quant.quantize(xs, quant.STATE_FMT)
+    hs_ref = np.asarray(systolic.systolic_layer_quantized(qp, xs_q))
+
+    lens = np.array([9, 4, 6])
+    state = None
+    outs = []
+    for lo, hi in _chunk_plan(9, 3):           # 3 chunks
+        vl = jnp.asarray(np.clip(lens - lo, 0, hi - lo), jnp.int32)
+        o, state = lstm_layer_seq_quantized(
+            qp, xs_q[lo:hi], state=state, valid_len=vl, return_state=True,
+            interpret=True)
+        outs.append(o)
+    hs = np.asarray(jnp.concatenate(outs))
+    for b, L in enumerate(lens):
+        np.testing.assert_array_equal(hs[:L, b], hs_ref[:L, b])
+        # carried h codes == codes after exactly L valid steps
+        np.testing.assert_array_equal(
+            np.asarray(state[0])[b, :qp.plan.n_h], hs_ref[L - 1, b])
+
+
+def test_chunked_equals_monolithic_systolic_2dev():
+    """The distributed scale-out backend honours the same chunking/masking
+    contract on a real 2-device mesh (subprocess, forced device count)."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, systolic
+p = lstm.init_lstm_params(jax.random.PRNGKey(0), 23, 37)
+xs = jax.random.normal(jax.random.PRNGKey(1), (8, 3, 23)) * 0.5
+lens = np.array([8, 5, 3])
+for rows, cols in ((1, 2), (2, 1)):
+    mesh = systolic.make_systolic_mesh(rows, cols)
+    mono, _ = systolic.systolic_lstm_seq(p, mesh, xs)
+    h = c = None; outs = []
+    for lo, hi in ((0, 3), (3, 6), (6, 8)):
+        vl = jnp.asarray(np.clip(lens - lo, 0, hi - lo), jnp.int32)
+        o, (h, c) = systolic.systolic_lstm_seq(p, mesh, xs[lo:hi], h, c,
+                                               valid_len=vl)
+        outs.append(o)
+    hs = np.asarray(jnp.concatenate(outs))
+    ref = np.asarray(mono)
+    for b, L in enumerate(lens):
+        np.testing.assert_array_equal(hs[:L, b], ref[:L, b])
+        np.testing.assert_array_equal(np.asarray(h)[b], ref[L - 1, b])
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+# --------------------------------------------------------- packed engine
+def _smoke_setup():
+    cfg = configs.get_smoke_config('chipmunk-ctc')
+    params, _ = get_bundle(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mono_log_probs(cfg, params, frames):
+    lp = chipmunk_net.forward(cfg, params, jnp.asarray(frames)[None])
+    return np.asarray(jnp.moveaxis(lp, 0, 1))[0]
+
+
+def test_engine_streams_match_monolithic_forward():
+    """Ragged streams served in packed chunks (state carried across ≥3
+    chunks) reproduce the monolithic whole-utterance forward."""
+    cfg, params = _smoke_setup()
+    rng = np.random.RandomState(0)
+    lens = [13, 7, 19, 4, 11]                  # 13/4 -> 4 chunks for stream 0
+    utts = [rng.randn(L, cfg.lstm_inputs).astype(np.float32) * 0.5
+            for L in lens]
+    eng = StreamingEngine(cfg, params, max_streams=3, chunk=4)
+    sessions = [eng.submit(u) for u in utts]
+    eng.run()
+    assert len(eng.sched.done) == len(utts)
+    for sess, u in zip(sessions, utts):
+        np.testing.assert_allclose(sess.full_log_probs(),
+                                   _mono_log_probs(cfg, params, u),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_engine_neighbours_unperturbed_by_admission_eviction():
+    """A stream's outputs must not depend on what shares its batch: solo run
+    vs a run with ragged neighbours admitted and evicted mid-flight."""
+    cfg, params = _smoke_setup()
+    rng = np.random.RandomState(1)
+    probe = rng.randn(17, cfg.lstm_inputs).astype(np.float32) * 0.5
+
+    solo = StreamingEngine(cfg, params, max_streams=3, chunk=4)
+    s_solo = solo.submit(probe)
+    solo.run()
+
+    shared = StreamingEngine(cfg, params, max_streams=3, chunk=4)
+    s_probe = shared.submit(probe)
+    noisy = shared.submit(rng.randn(6, cfg.lstm_inputs).astype(np.float32))
+    shared.submit(rng.randn(9, cfg.lstm_inputs).astype(np.float32))
+    shared.step()                               # all three active
+    shared.evict(noisy.sid)                     # evict a neighbour mid-flight
+    shared.submit(rng.randn(5, cfg.lstm_inputs).astype(np.float32))  # refill
+    shared.run()
+
+    # same packed call shape both runs -> identical fp schedule per row
+    np.testing.assert_array_equal(s_probe.full_log_probs(),
+                                  s_solo.full_log_probs())
+    assert len(shared.sched.done) == 3          # evicted stream not retired
+    assert noisy.remaining > 0
+
+
+def test_engine_slot_recycling_zeroes_state():
+    """A stream admitted into a recycled slot starts from zero state: its
+    output equals a fresh engine's."""
+    cfg, params = _smoke_setup()
+    rng = np.random.RandomState(2)
+    first = rng.randn(9, cfg.lstm_inputs).astype(np.float32) * 0.5
+    second = rng.randn(8, cfg.lstm_inputs).astype(np.float32) * 0.5
+
+    eng = StreamingEngine(cfg, params, max_streams=1, chunk=4)
+    eng.submit(first)
+    s2 = eng.submit(second)                     # queued until slot 0 frees
+    eng.run()
+
+    fresh = StreamingEngine(cfg, params, max_streams=1, chunk=4)
+    s2_fresh = fresh.submit(second)
+    fresh.run()
+    np.testing.assert_array_equal(s2.full_log_probs(),
+                                  s2_fresh.full_log_probs())
+
+
+def test_incremental_ctc_equals_monolithic_decode():
+    """Chunked incremental emission == core.ctc.ctc_greedy_decode."""
+    from repro.core import ctc
+    rng = np.random.RandomState(3)
+    lp = rng.randn(23, 7).astype(np.float32)
+    ref, ref_len = ctc.ctc_greedy_decode(jnp.asarray(lp)[:, None, :])
+    ref_syms = np.asarray(ref[0][:int(ref_len[0])]).tolist()
+    dec = IncrementalCTCDecoder()
+    for lo, hi in _chunk_plan(23, 5):
+        dec.feed(lp[lo:hi])
+    assert dec.symbols == ref_syms
+
+
+# ------------------------------------------------------- scheduler / serve
+def test_slot_scheduler_admission_order_and_eviction():
+    sched = SlotScheduler(2)
+    for item in 'abc':
+        sched.submit(item)
+    admitted = sched.refill()
+    assert admitted == [(0, 'a'), (1, 'b')] and sched.busy
+    assert sched.evict(0) == 'a' and sched.done == []
+    assert sched.refill() == [(0, 'c')]
+    sched.finish(0)
+    sched.finish(1)
+    assert [x for x in sched.done] == ['c', 'b'] and not sched.busy
+
+
+def test_serve_request_prefill_is_declared_field():
+    """The prefill queue is a declared dataclass field, not monkey-patched."""
+    from repro.launch.serve import Request
+    names = {f.name for f in dataclasses.fields(Request)}
+    assert '_prefill_left' in names
+    assert Request(rid=0, prompt=[1, 2])._prefill_left == []
+
+
+def test_stream_forward_single_frame_matches_cell():
+    """stream_forward's one-frame case (the registry decode_step) matches
+    stepping lstm_cell — the old stream_step contract."""
+    cfg, params = _smoke_setup()
+    rng = np.random.RandomState(4)
+    frames = rng.randn(2, 6, cfg.lstm_inputs).astype(np.float32) * 0.5
+    states, _ = chipmunk_net.init_state(cfg, 2)
+    outs = []
+    for t in range(6):
+        lp, states = chipmunk_net.stream_forward(
+            cfg, params, states, jnp.asarray(frames[:, t:t + 1]))
+        outs.append(np.asarray(lp)[:, 0])
+    got = np.stack(outs, axis=1)                       # (B, T, K)
+    ref = np.asarray(jnp.moveaxis(
+        chipmunk_net.forward(cfg, params, jnp.asarray(frames)), 0, 1))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
