@@ -3,7 +3,11 @@ Pallas kernels are TPU-targeted and correctness-checked here via interpret
 mode.  Interpret timings are an emulation, but the per-step vs whole-sequence
 LSTM comparison is still structurally meaningful: the per-step path pays T
 kernel invocations and T weight re-streams, the sequence kernel one — the
-same ratio that dominates on hardware)."""
+same ratio that dominates on hardware.  Likewise the layerwise-vs-fused
+stack comparison: the layerwise path pays L launches and L inter-layer
+hidden-sequence round-trips per utterance, the fused wavefront one)."""
+import time
+
 import jax
 import jax.numpy as jnp
 
@@ -39,6 +43,41 @@ def _lstm_seq_vs_step(T: int = 128, B: int = 8):
     emit('kernels/lstm_layer_pallas_seq', t_seq,
          f'{tag} (1 launch, weight-stationary; '
          f'{t_step / t_seq:.2f}x vs per-step)')
+
+
+def _lstm_stack_fused_vs_layerwise(T: int = 128):
+    """The paper's full CTC stack (123->421x3) over a T-frame utterance:
+    layerwise persistent kernels (one launch per layer, hidden sequence
+    round-tripping between launches) vs the fused whole-stack wavefront
+    kernel (one launch, inter-layer handover in scratch) — the §8
+    acceptance rows.  B=8 is the packed-serving shape, B=1 the decode
+    point.  The two paths are timed interleaved (like
+    ``benchmarks/streaming.py``) because A-vs-B wall-clock ratios on a
+    loaded 2-core host flip when one path monopolises a busy window."""
+    stack = lstm.init_lstm_stack(jax.random.PRNGKey(7), 123, 421, 3)
+    for B in (8, 1):
+        xs = jax.random.normal(jax.random.PRNGKey(8), (T, B, 123)) * 0.5
+        tag = f'T={T} B={B} 123->421x3'
+        f_lw = jax.jit(
+            lambda q, x: lstm.lstm_stack_apply(q, x, backend='pallas_seq')[0])
+        f_fu = jax.jit(lambda q, x: lstm.lstm_stack_apply(
+            q, x, backend='pallas_seq_fused')[0])
+        err = float(jnp.max(jnp.abs(f_lw(stack, xs) - f_fu(stack, xs))))
+        t_lw, t_fu = [], []
+        for _ in range(5):                     # interleaved timing
+            t0 = time.perf_counter()
+            jax.block_until_ready(f_lw(stack, xs))
+            t_lw.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(f_fu(stack, xs))
+            t_fu.append(time.perf_counter() - t0)
+        us_lw = sorted(t_lw)[len(t_lw) // 2] * 1e6
+        us_fu = sorted(t_fu)[len(t_fu) // 2] * 1e6
+        emit(f'kernels/lstm_stack_layerwise_seq_B{B}', us_lw,
+             f'{tag} (3 launches, hidden seq round-trips between layers)')
+        emit(f'kernels/lstm_stack_fused_wavefront_B{B}', us_fu,
+             f'{tag} (1 launch, wavefront, inter-layer h in scratch; '
+             f'{us_lw / us_fu:.2f}x vs layerwise, max_err={err:.1e})')
 
 
 def run():
@@ -80,4 +119,5 @@ def run():
          f'S={S} chunk=256 max_err={err:.1e} (O(S) memory)')
 
     _lstm_seq_vs_step()
+    _lstm_stack_fused_vs_layerwise()
     return t_c

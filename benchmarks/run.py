@@ -9,7 +9,8 @@ tracked PR over PR.
   fig5_shmoo          — Fig. 5 (voltage shmoo curves)
   systolic_equivalence— Sec. 3 dataflow equivalence + int8 accuracy/timing
   kernel_bench        — kernel-layer reference timings (incl. the per-step vs
-                        whole-sequence LSTM kernel comparison)
+                        whole-sequence LSTM kernel comparison and the
+                        layerwise vs fused whole-stack wavefront rows)
   systolic_scaleout   — DESIGN.md §6: per-step vs persistent *distributed*
                         execution on a multi-device mesh (subprocess with a
                         forced host device count), incl. a scaled-down

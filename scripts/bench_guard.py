@@ -1,0 +1,114 @@
+"""Benchmark regression guard: fail when a fresh run regresses vs HEAD.
+
+CI regenerates each BENCH_*.json in place (``benchmarks.run --json``); this
+script then diffs the fresh rows against the version committed at ``HEAD``
+(via ``git show``) and exits non-zero when any row's ``us_per_call`` grew by
+more than ``--threshold`` (default 1.5x) — catching per-row perf
+regressions the correctness suite cannot see, PR over PR.
+
+Fresh runs land on different hardware (and different load) than the
+committed baselines, and uniform host-speed drift routinely exceeds any
+usable per-row band, so by default each row's fresh/committed ratio is
+NORMALIZED by the median ratio across all common rows before the threshold
+applies: a machine that is uniformly 2x slower passes, while one kernel row
+that regressed 1.5x relative to its siblings fails.  ``--absolute``
+disables the normalization for same-host comparisons (the median is then
+reported but unused).
+
+Rows present only in the fresh run are new benchmarks (allowed); rows that
+exist at HEAD but vanished from the fresh run fail the guard (a silently
+dropped benchmark looks exactly like a deleted regression).
+
+  python scripts/bench_guard.py --path BENCH_kernels.json
+  python scripts/bench_guard.py --path BENCH_kernels.json --fresh other.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+
+def committed_rows(path: str, ref: str = 'HEAD') -> dict:
+    """``name -> us_per_call`` of the benchmark file committed at ``ref``."""
+    blob = subprocess.run(
+        ['git', 'show', f'{ref}:{path}'], capture_output=True, text=True,
+        check=True).stdout
+    return {r['name']: r['us_per_call'] for r in json.loads(blob)['results']}
+
+
+def fresh_rows(path: str) -> dict:
+    with open(path) as f:
+        return {r['name']: r['us_per_call'] for r in json.load(f)['results']}
+
+
+def _median(xs: list) -> float:
+    xs = sorted(xs)
+    n = len(xs)
+    return xs[n // 2] if n % 2 else (xs[n // 2 - 1] + xs[n // 2]) / 2
+
+
+def diff(committed: dict, fresh: dict, threshold: float,
+         normalize: bool = True) -> tuple:
+    """Return (failure lines, host-drift median).  Empty lines = pass."""
+    common = sorted(set(committed) & set(fresh))
+    ratios = {n: (fresh[n] / committed[n] if committed[n] else float('inf'))
+              for n in common}
+    drift = _median(list(ratios.values())) if common else 1.0
+    scale = drift if (normalize and drift > 0) else 1.0
+    failures = []
+    for name in sorted(committed):
+        if name not in fresh:
+            failures.append(f'{name}: row missing from fresh run '
+                            f'(was {committed[name]:.1f} us at HEAD)')
+            continue
+        rel = ratios[name] / scale
+        if rel > threshold:
+            failures.append(
+                f'{name}: {committed[name]:.1f} us -> {fresh[name]:.1f} us '
+                f'({ratios[name]:.2f}x raw, {rel:.2f}x vs suite median '
+                f'{drift:.2f}x > {threshold:.2f}x threshold)')
+    return failures, drift
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument('--path', required=True,
+                    help='committed benchmark JSON (looked up at HEAD)')
+    ap.add_argument('--fresh', default=None,
+                    help='fresh benchmark JSON (default: --path on disk)')
+    ap.add_argument('--threshold', type=float, default=1.5,
+                    help='max allowed per-row regression (after host-drift '
+                         'normalization unless --absolute)')
+    ap.add_argument('--absolute', action='store_true',
+                    help='compare raw ratios (same-host runs only)')
+    ap.add_argument('--ref', default='HEAD',
+                    help='git ref holding the baseline file')
+    args = ap.parse_args(argv)
+
+    committed = committed_rows(args.path, args.ref)
+    fresh = fresh_rows(args.fresh or args.path)
+    failures, drift = diff(committed, fresh, args.threshold,
+                           normalize=not args.absolute)
+    new = sorted(set(fresh) - set(committed))
+    if new:
+        print(f'new rows (no baseline): {", ".join(new)}')
+    for name in sorted(set(fresh) & set(committed)):
+        ratio = fresh[name] / committed[name]
+        print(f'  {name}: {committed[name]:.1f} -> {fresh[name]:.1f} us '
+              f'({ratio:.2f}x)')
+    mode = 'raw' if args.absolute else f'median-normalized ({drift:.2f}x drift)'
+    if failures:
+        print(f'\nbench_guard FAILED ({len(failures)} row(s) regressed '
+              f'>{args.threshold}x, {mode}):', file=sys.stderr)
+        for line in failures:
+            print(f'  {line}', file=sys.stderr)
+        return 1
+    print(f'\nbench_guard OK: {len(set(fresh) & set(committed))} rows '
+          f'within {args.threshold}x of HEAD ({mode})')
+    return 0
+
+
+if __name__ == '__main__':
+    raise SystemExit(main())

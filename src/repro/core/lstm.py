@@ -219,12 +219,12 @@ def lstm_bwd_recompute_gates(w_h, w_peep, b, pre_x, hs, cs, h0, c0, grads):
 
 
 # ---------------------------------------------------------------------------
-# Backend dispatch: xla_scan | pallas_step | pallas_seq | pallas_seq_systolic
-# (DESIGN.md §3.3 and §6)
+# Backend dispatch: xla_scan | pallas_step | pallas_seq | pallas_seq_fused |
+# pallas_seq_systolic (DESIGN.md §3.3, §6 and §8)
 # ---------------------------------------------------------------------------
 
 BACKENDS = ('auto', 'xla_scan', 'pallas_step', 'pallas_seq',
-            'pallas_seq_systolic')
+            'pallas_seq_fused', 'pallas_seq_systolic')
 
 # The sequence kernel keeps W_h + state resident in VMEM; leave headroom for
 # Mosaic's double-buffered streams out of the ~16 MB budget.
@@ -264,6 +264,36 @@ def select_lstm_backend(n_x: int, n_h: int, T: int, batch: int,
     return 'xla_scan'
 
 
+def select_stack_backend(n_x: int, n_h: int, n_layers: int, T: int,
+                         batch: int, *, platform: Optional[str] = None,
+                         mesh=None) -> str:
+    """Stack-level backend selection (DESIGN.md §8).
+
+    The fused wavefront kernel is a STACK-level choice: it is admitted only
+    when the whole stack's resident working set — every layer's recurrent
+    AND input weight blocks (``stack_vmem_bytes_estimate``) — fits the VMEM
+    budget, there are at least two layers to pipeline, and the sequence is
+    long enough to amortise residency.  An installed systolic mesh that
+    admits the layer takes precedence (the user asked for multi-engine
+    scale-out); everything else falls back to the per-layer
+    ``select_lstm_backend`` rules, i.e. the layerwise composition.
+    Selection never changes numerics — all backends are interchangeable.
+    """
+    per_layer = select_lstm_backend(n_x, n_h, T, batch,
+                                    platform=platform, mesh=mesh)
+    if per_layer == 'pallas_seq_systolic':
+        return per_layer
+    platform = platform or jax.default_backend()
+    if platform != 'tpu':
+        return per_layer
+    from ..kernels.lstm_seq import stack_vmem_bytes_estimate
+    if (n_layers >= 2 and T >= _SEQ_MIN_T
+            and stack_vmem_bytes_estimate(n_x, n_h, n_layers, batch)
+            <= _VMEM_BUDGET_BYTES):
+        return 'pallas_seq_fused'
+    return per_layer
+
+
 def lstm_layer_fused(params: LSTMParams, xs: jax.Array,
                      h0: Optional[jax.Array] = None,
                      c0: Optional[jax.Array] = None, *,
@@ -284,6 +314,8 @@ def lstm_layer_fused(params: LSTMParams, xs: jax.Array,
     if backend == 'auto':
         backend = select_lstm_backend(params.n_x, n_h, xs.shape[0],
                                       math.prod(batch_shape))
+    if backend == 'pallas_seq_fused':
+        backend = 'pallas_seq'      # a 1-layer stack IS the sequence kernel
     if h0 is None:
         h0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
     if c0 is None:
@@ -373,6 +405,8 @@ def lstm_layer_chunk(params: LSTMParams, xs: jax.Array,
     n_h = params.n_h
     if backend == 'auto':
         backend = select_lstm_backend(params.n_x, n_h, T, B)
+    if backend == 'pallas_seq_fused':
+        backend = 'pallas_seq'      # a 1-layer stack IS the sequence kernel
     if h0 is None:
         h0 = jnp.zeros((B, n_h), xs.dtype)
     if c0 is None:
@@ -416,19 +450,53 @@ def init_lstm_stack(key: jax.Array, n_x: int, n_h: int, n_layers: int,
     return LSTMStackParams(tuple(layers), w_out, b_out)
 
 
+def _resolve_stack_backend(params: LSTMStackParams, backend: str,
+                           xs: jax.Array) -> str:
+    """Stack-level dispatch (DESIGN.md §8): resolve ``auto`` through
+    ``select_stack_backend`` and degrade an (explicit or auto-picked)
+    ``pallas_seq_fused`` to the layerwise ``pallas_seq`` when the stack is
+    structurally incompatible with the fused wavefront kernel
+    (heterogeneous widths, a single layer, or a non-(T, B, N_x) input).
+    Pure dispatch — the chosen backend never changes numerics beyond float
+    re-association."""
+    from ..kernels.lstm_seq import stack_fused_compatible
+    compatible = (xs.ndim == 3 and len(params.layers) >= 2
+                  and stack_fused_compatible(params))
+    if backend == 'auto' and compatible:
+        l0 = params.layers[0]
+        backend = select_stack_backend(l0.n_x, l0.n_h, len(params.layers),
+                                       xs.shape[0], xs.shape[1])
+    if backend == 'pallas_seq_fused' and not compatible:
+        backend = 'pallas_seq'
+    return backend
+
+
 def lstm_stack_apply(params: LSTMStackParams, xs: jax.Array,
                      states: Optional[Sequence[Tuple[jax.Array, jax.Array]]] = None,
                      backend: str = 'auto') -> Tuple[jax.Array, list]:
     """Full network: stacked LSTM layers + optional dense read-out (logits, no sigma).
 
     xs: (T, B, N_x).  Returns (ys (T, B, N_out or N_h), final states per layer).
+
+    ``backend='pallas_seq_fused'`` (or ``auto`` when the stack-level rules
+    admit it) runs every layer in ONE fused wavefront launch
+    (``kernels.lstm_seq.lstm_stack_seq``) instead of the per-layer loop —
+    same contract, output allclose, hidden sequences never round-tripping
+    through HBM between layers.
     """
-    h = xs
-    finals = []
-    for l, lp in enumerate(params.layers):
-        h0c0 = states[l] if states is not None else (None, None)
-        h, (h_T, c_T) = lstm_layer_fused(lp, h, *h0c0, backend=backend)
-        finals.append((h_T, c_T))
+    assert backend in BACKENDS, backend
+    backend = _resolve_stack_backend(params, backend, xs)
+    if backend == 'pallas_seq_fused':
+        from ..kernels.lstm_seq import lstm_stack_seq
+        h, finals = lstm_stack_seq(params, xs, states)
+        finals = list(finals)
+    else:
+        h = xs
+        finals = []
+        for l, lp in enumerate(params.layers):
+            h0c0 = states[l] if states is not None else (None, None)
+            h, (h_T, c_T) = lstm_layer_fused(lp, h, *h0c0, backend=backend)
+            finals.append((h_T, c_T))
     if params.w_out is not None:
         h = jnp.einsum('oh,tbh->tbo', params.w_out, h) + params.b_out
     return h, finals
@@ -447,14 +515,28 @@ def lstm_stack_chunk(params: LSTMStackParams, xs: jax.Array, states,
     ``lstm_stack_apply`` on the valid prefix (bit-equal on a fixed backend).
     xs: (T, B, N_x); states: per-layer ``((h, c), ...)`` from the previous
     chunk (or zeros).  Returns (ys (T, B, N_out or N_h), new states).
+
+    On the ``pallas_seq_fused`` backend the whole chunk runs every layer in
+    one wavefront launch with the per-layer carries and the shared
+    ``valid_len`` mask threaded straight into the kernel — the serving
+    engine's packed slot grid rides this path end to end.
     """
-    h = xs
-    finals = []
-    for l, lp in enumerate(params.layers):
-        h0c0 = states[l] if states is not None else (None, None)
-        h, (h_T, c_T) = lstm_layer_chunk(lp, h, *h0c0, valid_len=valid_len,
-                                         backend=backend)
-        finals.append((h_T, c_T))
+    assert backend in BACKENDS, backend
+    backend = _resolve_stack_backend(params, backend, xs)
+    if backend == 'pallas_seq_fused':
+        from ..kernels.lstm_seq import lstm_stack_seq
+        h, finals = lstm_stack_seq(params, xs, states, valid_len=valid_len)
+        finals = tuple(finals)
+    else:
+        h = xs
+        finals = []
+        for l, lp in enumerate(params.layers):
+            h0c0 = states[l] if states is not None else (None, None)
+            h, (h_T, c_T) = lstm_layer_chunk(lp, h, *h0c0,
+                                             valid_len=valid_len,
+                                             backend=backend)
+            finals.append((h_T, c_T))
+        finals = tuple(finals)
     if params.w_out is not None:
         h = jnp.einsum('oh,tbh->tbo', params.w_out, h) + params.b_out
-    return h, tuple(finals)
+    return h, finals

@@ -712,9 +712,41 @@ def systolic_lstm_seq(params: LSTMParams, mesh: Optional[Mesh], xs: jax.Array,
                               params.w_peep, params.b, pre_x, h0, c0)
 
 
+def quantized_x_prefix(qp: QuantizedPackedLSTM, xs_q: jax.Array) -> jax.Array:
+    """Hoisted x-region prefix of the saturating hop chain — the first
+    ``cols_x`` hops, which depend only on the frame stream, computed once
+    for the whole sequence: per-tile int32 MACs saturated to int16, then the
+    sequential engine-order hop.  Bit-identical to folding those columns
+    inside the step loop (the same ops in the same order), so every consumer
+    — the §6 distributed form AND the §8 fused-stack kernel's layer 0 —
+    resumes the chain from exactly the state the silicon would hold.
+    xs_q: (T, B, n_x) int8 codes -> (T, B, R, 4, tile) int32 in ACC_FMT."""
+    plan = qp.plan
+    T, B = xs_q.shape[0], xs_q.shape[1]
+    acc0 = jnp.zeros((T, B, plan.rows, GATES, plan.tile), jnp.int32)
+    if not plan.cols_x:
+        return acc0
+    xs_pad = jnp.zeros((T, B, plan.padded_x), jnp.int8
+                       ).at[..., :plan.n_x].set(xs_q)
+    xcols = xs_pad.reshape(T, B, plan.cols_x, plan.tile)
+    part_x = _sat16(jnp.einsum('rcgij,tbcj->ctbrgi',
+                               qp.tiles_q[:, :plan.cols_x].astype(jnp.int32),
+                               xcols.astype(jnp.int32)))
+
+    def hop(acc, p):
+        return _sat16(acc + p), None
+
+    acc_x, _ = jax.lax.scan(hop, acc0, part_x)
+    return acc_x
+
+
 def systolic_lstm_seq_quantized(qp: QuantizedPackedLSTM, mesh: Optional[Mesh],
-                                xs_q: jax.Array, *, row_axis: str = 'row',
-                                col_axis: str = 'col') -> jax.Array:
+                                xs_q: jax.Array, *,
+                                state: Optional[Tuple[jax.Array, jax.Array]] = None,
+                                valid_len: Optional[jax.Array] = None,
+                                return_state: bool = False,
+                                row_axis: str = 'row',
+                                col_axis: str = 'col'):
     """Distributed whole-sequence int8 LSTM, bit-identical to the silicon scan.
 
     xs_q: (T, B, n_x) int8 codes -> (T, B, n_h) int8 hidden codes, exactly
@@ -729,11 +761,22 @@ def systolic_lstm_seq_quantized(qp: QuantizedPackedLSTM, mesh: Optional[Mesh],
     schedule of the chip.  Requires ``plan.rows % mesh rows == 0`` and
     ``plan.cols_h % mesh cols == 0``.  A ``None``/all-1 mesh degenerates to
     ``kernels.lstm_seq.lstm_layer_seq_quantized``.
+
+    Chunked streaming (DESIGN.md §7, same contract as the single-engine int8
+    kernel): ``state`` is an opaque carry of ``(h_q, c_q)`` padded-layout
+    int8 codes from a previous call with ``return_state=True`` (None = zero
+    state); ``valid_len`` (B,) masks ragged tail steps per stream — a masked
+    step is a pure select identity on the carried codes — so feeding a
+    sequence chunk by chunk over the mesh is bit-identical to the monolithic
+    call, and the §6 scale-out composes with the streaming engine.  With
+    ``return_state=True`` returns ``(hs, (h_q, c_q))``.
     """
     plan = qp.plan
     if mesh is None or all(s == 1 for s in mesh.shape.values()):
         from ..kernels.lstm_seq import lstm_layer_seq_quantized
-        return lstm_layer_seq_quantized(qp, xs_q)
+        return lstm_layer_seq_quantized(qp, xs_q, state=state,
+                                        valid_len=valid_len,
+                                        return_state=return_state)
     mr, mc = _require_systolic_axes(mesh, row_axis, col_axis)
     R, c_h, t = plan.rows, plan.cols_h, plan.tile
     if R % mr or c_h % mc:
@@ -742,34 +785,38 @@ def systolic_lstm_seq_quantized(qp: QuantizedPackedLSTM, mesh: Optional[Mesh],
     assert xs_q.ndim == 3, 'systolic_lstm_seq_quantized expects (T, B, n_x)'
     T, B = xs_q.shape[0], xs_q.shape[1]
     r_l, c_l = R // mr, c_h // mc
+    if state is None:
+        h0_q = jnp.zeros((B, plan.padded_h), jnp.int8)
+        c0_q = jnp.zeros((B, plan.padded_h), jnp.int8)
+    else:
+        h0_q = state[0].reshape(B, plan.padded_h)
+        c0_q = state[1].reshape(B, plan.padded_h)
+    if valid_len is None:
+        mask = jnp.ones((T, B), jnp.int8)
+    else:
+        from .lstm import valid_len_mask
+        mask = valid_len_mask(T, valid_len, B).astype(jnp.int8)
 
-    # Hoisted x-region prefix: the first cols_x hops of the saturating chain
-    # depend only on the frame stream, so they are computed once per sequence
-    # (per-tile int32 MACs saturated to int16, then the sequential hop).
     def hop(acc, p):
         return _sat16(acc + p), None
 
-    acc0 = jnp.zeros((T, B, R, GATES, t), jnp.int32)
-    if plan.cols_x:
-        xs_pad = jnp.zeros((T, B, plan.padded_x), jnp.int8
-                           ).at[..., :plan.n_x].set(xs_q)
-        xcols = xs_pad.reshape(T, B, plan.cols_x, t)
-        part_x = _sat16(jnp.einsum('rcgij,tbcj->ctbrgi',
-                                   qp.tiles_q[:, :plan.cols_x].astype(jnp.int32),
-                                   xcols.astype(jnp.int32)))
-        acc_x, _ = jax.lax.scan(hop, acc0, part_x)
-    else:
-        acc_x = acc0
+    acc_x = quantized_x_prefix(qp, xs_q)
     tiles_h = qp.tiles_q[:, plan.cols_x:]            # (R, c_h, 4, t, t)
 
-    def body(tiles_blk, peep_blk, bias_blk, accx_blk, sig_lut, tanh_lut):
-        """SPMD body: tiles_blk (r_l, c_l, 4, t, t) stationary for all T."""
+    def body(tiles_blk, peep_blk, bias_blk, accx_blk, sig_lut, tanh_lut,
+             h0_full, c0_blk, mask_t):
+        """SPMD body: tiles_blk (r_l, c_l, 4, t, t) stationary for all T.
+
+        h0_full: (B, padded_h) replicated carried codes; c0_blk: (B, r_l*t)
+        this row block's carried cell codes; mask_t: (T, B) replicated.
+        """
         col = jax.lax.axis_index(col_axis)
         peep32 = peep_blk.astype(jnp.int32)
         bias32 = bias_blk.astype(jnp.int32)
 
-        def step(carry, accx_t):
+        def step(carry, inp):
             h_full, c_blk = carry
+            accx_t, m = inp
             h_cols = jax.lax.dynamic_slice(
                 h_full, (0, col * (c_l * t)), (B, c_l * t)).reshape(B, c_l, t)
             parts = _sat16(jnp.einsum('rlgij,blj->lbrgi',
@@ -784,19 +831,27 @@ def systolic_lstm_seq_quantized(qp: QuantizedPackedLSTM, mesh: Optional[Mesh],
             h_flat = h8.reshape(B, r_l * t)
             h_full_new = jax.lax.all_gather(h_flat, row_axis, axis=1,
                                             tiled=True)
-            return (h_full_new, c8), h_full_new
+            # Masked step = identity on the carried codes (pure select, so
+            # an all-ones mask is bit-identical to the unmasked chain).
+            live = (m > 0)[:, None]
+            h_full_new = jnp.where(live, h_full_new, h_full)
+            c8 = jnp.where(live[:, :, None], c8, c_blk)
+            return (h_full_new, c8), (h_full_new, c8)
 
-        h0 = jnp.zeros((B, plan.padded_h), jnp.int8)
-        c0 = jnp.zeros((B, r_l, t), jnp.int8)
-        _, hs = jax.lax.scan(step, (h0, c0), accx_blk)
-        return hs
+        c0 = c0_blk.reshape(B, r_l, t)
+        _, (hs, cs) = jax.lax.scan(step, (h0_full, c0), (accx_blk, mask_t))
+        return hs, cs.reshape(T, B, r_l * t)
 
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(row_axis, col_axis), P(row_axis), P(row_axis),
-                  P(None, None, row_axis), P(None), P(None)),
-        out_specs=P(),
+                  P(None, None, row_axis), P(None), P(None),
+                  P(None, None), P(None, row_axis), P(None, None)),
+        out_specs=(P(), P(None, None, row_axis)),
         check_vma=False,
     )
-    hs = fn(tiles_h, qp.peep_q, qp.bias_q, acc_x, qp.sig_lut, qp.tanh_lut)
-    return hs[..., :plan.n_h]
+    hs, cs = fn(tiles_h, qp.peep_q, qp.bias_q, acc_x, qp.sig_lut,
+                qp.tanh_lut, h0_q, c0_q, mask)
+    if not return_state:
+        return hs[..., :plan.n_h]
+    return hs[..., :plan.n_h], (hs[-1], cs[-1])

@@ -2,7 +2,14 @@ from .kernel import lstm_seq, lstm_seq_quantized
 from .ops import (lstm_layer_seq, lstm_layer_seq_quantized, lstm_seq_fused,
                   vmem_bytes_estimate)
 from .ref import lstm_seq_ref
+from .stack_kernel import lstm_stack_seq_kernel, lstm_stack_seq_kernel_q
+from .stack_ops import (lstm_stack_seq, lstm_stack_seq_fused,
+                        lstm_stack_seq_quantized, stack_fused_compatible,
+                        stack_vmem_bytes_estimate)
 
 __all__ = ['lstm_seq', 'lstm_seq_quantized', 'lstm_layer_seq',
            'lstm_layer_seq_quantized', 'lstm_seq_fused', 'lstm_seq_ref',
-           'vmem_bytes_estimate']
+           'vmem_bytes_estimate', 'lstm_stack_seq', 'lstm_stack_seq_fused',
+           'lstm_stack_seq_quantized', 'lstm_stack_seq_kernel',
+           'lstm_stack_seq_kernel_q', 'stack_fused_compatible',
+           'stack_vmem_bytes_estimate']

@@ -13,6 +13,9 @@ The serving analogue of the paper's deployment story: weights stay resident
     active utterances advance through ONE batched chunked call to the
     whole-sequence LSTM path per step, ragged tails masked, per-stream
     ``(h, c)`` state carried across chunks in the packed session cache.
+    With ``--lstm-backend pallas_seq_fused`` that one call is additionally
+    ONE kernel launch for the whole stack (the §8 wavefront kernel), so a
+    chunk costs a single launch across all streams AND all layers.
 
 Works on CPU with the smoke configs:
   python -m repro.launch.serve --arch qwen3-14b --smoke --requests 6

@@ -15,8 +15,12 @@ admission/eviction/refill never perturbs neighbouring streams.
 
 Backend-agnostic by construction: the engine only speaks
 ``models.chipmunk_net.stream_forward``, which dispatches on
-``cfg.lstm_backend`` (``xla_scan | pallas_seq | pallas_seq_systolic`` via the
-installed mesh).
+``cfg.lstm_backend`` (``xla_scan | pallas_seq | pallas_seq_fused |
+pallas_seq_systolic`` via the installed mesh).  On ``pallas_seq_fused``
+every engine step advances ALL active streams through ALL stack layers in
+ONE wavefront kernel launch (DESIGN.md §8): the per-layer slot states ride
+the kernel's ``(L, B, N_h)`` carries and the ragged mask is shared by every
+layer, so a chunk costs one launch total instead of one per layer.
 """
 from __future__ import annotations
 

@@ -1,0 +1,38 @@
+"""Bench regression guard: pure-python row-diff semantics (scripts/)."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / 'scripts'))
+import bench_guard  # noqa: E402
+
+
+def test_uniform_host_drift_passes():
+    """A uniformly 2x slower runner is host drift, not a regression."""
+    committed = {'a': 100.0, 'b': 200.0, 'c': 400.0}
+    fresh = {k: v * 2.0 for k, v in committed.items()}
+    failures, drift = bench_guard.diff(committed, fresh, threshold=1.5)
+    assert not failures and drift == 2.0
+
+
+def test_single_row_regression_fails_despite_drift():
+    """One row regressing 2x relative to its siblings fails even when the
+    whole suite also drifted uniformly."""
+    committed = {'a': 100.0, 'b': 200.0, 'c': 400.0, 'd': 50.0}
+    fresh = {'a': 150.0, 'b': 300.0, 'c': 600.0, 'd': 150.0}  # d: 3x vs 1.5x
+    failures, _ = bench_guard.diff(committed, fresh, threshold=1.5)
+    assert len(failures) == 1 and failures[0].startswith('d:')
+
+
+def test_missing_row_fails_and_new_row_allowed():
+    committed = {'a': 100.0, 'b': 200.0}
+    fresh = {'a': 100.0, 'new': 1.0}
+    failures, _ = bench_guard.diff(committed, fresh, threshold=1.5)
+    assert len(failures) == 1 and 'missing' in failures[0]
+
+
+def test_absolute_mode_skips_normalization():
+    committed = {'a': 100.0, 'b': 100.0}
+    fresh = {'a': 200.0, 'b': 200.0}
+    failures, _ = bench_guard.diff(committed, fresh, threshold=1.5,
+                                   normalize=False)
+    assert len(failures) == 2

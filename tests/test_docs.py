@@ -10,13 +10,15 @@ import pytest
 
 import repro.core.systolic as systolic_mod
 import repro.kernels.lstm_seq.ops as ops_mod
+import repro.kernels.lstm_seq.stack_ops as stack_ops_mod
 import repro.serving.engine as engine_mod
 import repro.serving.scheduler as scheduler_mod
 import repro.serving.session as session_mod
 from repro.core import lstm as lstm_core
 from repro.models import chipmunk_net
 
-MODULES = (systolic_mod, ops_mod, engine_mod, scheduler_mod, session_mod)
+MODULES = (systolic_mod, ops_mod, stack_ops_mod, engine_mod, scheduler_mod,
+           session_mod)
 
 # Entry point -> substring its docstring must contain (the numerics contract:
 # the reference the function is bit-identical / allclose to, or an explicit
@@ -36,6 +38,13 @@ CONTRACTS = {
     ops_mod.lstm_layer_seq_quantized: 'bit-identical',
     ops_mod.lstm_seq_fused: 'lstm_scan_fused',
     ops_mod.vmem_bytes_estimate: 'selection',
+    # fused whole-stack wavefront kernel contracts (DESIGN.md §8)
+    stack_ops_mod.lstm_stack_seq: 'lstm_stack_apply',
+    stack_ops_mod.lstm_stack_seq_fused: 'lstm_scan_fused',
+    stack_ops_mod.lstm_stack_seq_quantized: 'bit-identical',
+    stack_ops_mod.stack_vmem_bytes_estimate: 'selection',
+    stack_ops_mod.stack_fused_compatible: 'dispatch',
+    lstm_core.select_stack_backend: 'selection',
     # streaming-serving chunking/masking contracts (DESIGN.md §7)
     lstm_core.lstm_layer_chunk: 'bit-equal',
     lstm_core.lstm_stack_chunk: 'lstm_stack_apply',

@@ -1,0 +1,327 @@
+"""Fused whole-stack wavefront LSTM kernel (DESIGN.md §8).
+
+Contracts:
+
+  * f32: ONE wavefront launch over all layers is allclose to the layerwise
+    composition (forward AND gradients via the cross-layer gate-recompute
+    VJP), for zero and carried initial state;
+  * int8: bit-identical to chaining the layerwise silicon-datapath
+    reference layer by layer, including the opaque per-layer ``(h_q, c_q)``
+    chunk carry over ≥3 ragged masked chunks;
+  * dispatch: stack-level auto-selection admits the fused kernel only when
+    the whole stack's resident weights fit the VMEM budget; structurally
+    incompatible (heterogeneous) stacks silently fall back to the layerwise
+    path with identical results;
+  * serving: the streaming engine's packed slot grid rides the fused
+    backend end to end — chunked ragged streams equal the monolithic
+    forward.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lstm, quant, systolic
+from repro.core.lstm import (lstm_stack_apply, lstm_stack_chunk,
+                             select_stack_backend)
+from repro.kernels.lstm_seq import (lstm_stack_seq, lstm_stack_seq_quantized,
+                                    stack_fused_compatible,
+                                    stack_vmem_bytes_estimate)
+
+
+def _stack(key, n_x, n_h, n_layers, n_out=None):
+    return lstm.init_lstm_stack(jax.random.PRNGKey(key), n_x, n_h, n_layers,
+                                n_out)
+
+
+def _chunk_plan(total, chunk):
+    spans = []
+    lo = 0
+    while lo < total:
+        spans.append((lo, min(lo + chunk, total)))
+        lo += chunk
+    return spans
+
+
+# ------------------------------------------------------------------ f32 path
+@pytest.mark.parametrize('n_x,n_h,L,T,B', [
+    (24, 32, 3, 5, 2),      # ragged widths, odd T
+    (32, 32, 2, 6, 3),      # n_x == n_h
+    (16, 48, 4, 4, 1),      # deeper stack, B=1 decode shape
+])
+def test_fused_matches_layerwise_forward(n_x, n_h, L, T, B):
+    p = _stack(n_x + n_h + L, n_x, n_h, L, n_out=None)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (T, B, n_x)) * 0.5
+    ys_ref, fin_ref = lstm_stack_apply(p, xs, backend='xla_scan')
+    ys, fin = lstm_stack_apply(p, xs, backend='pallas_seq_fused')
+    np.testing.assert_allclose(ys, ys_ref, rtol=1e-5, atol=1e-6)
+    for l in range(L):
+        np.testing.assert_allclose(fin[l][0], fin_ref[l][0],
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(fin[l][1], fin_ref[l][1],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fused_with_readout_and_carried_state():
+    p = _stack(7, 16, 32, 2, n_out=8)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 2, 16)) * 0.5
+    states = tuple(
+        (jax.random.normal(jax.random.PRNGKey(10 + l), (2, 32)) * 0.3,
+         jax.random.normal(jax.random.PRNGKey(20 + l), (2, 32)) * 0.3)
+        for l in range(2))
+    ys_ref, fin_ref = lstm_stack_apply(p, xs, states, backend='xla_scan')
+    ys, fin = lstm_stack_apply(p, xs, states, backend='pallas_seq_fused')
+    np.testing.assert_allclose(ys, ys_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(fin[1][1], fin_ref[1][1], rtol=1e-5, atol=1e-6)
+
+
+def test_fused_partial_states_match_layerwise():
+    """A per-layer state list with SOME None entries zeroes only those
+    layers' carries — exactly what the layerwise loop does — never the
+    provided neighbours' (backends must stay numerically interchangeable)."""
+    p = _stack(3, 8, 8, 3)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 8)) * 0.5
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (2, 8)) * 0.3
+    c0 = jax.random.normal(jax.random.PRNGKey(3), (2, 8)) * 0.3
+    states = [(h0, c0), (None, None), (None, None)]
+    ys_ref, fin_ref = lstm_stack_apply(p, xs, states, backend='xla_scan')
+    ys, fin = lstm_stack_apply(p, xs, states, backend='pallas_seq_fused')
+    np.testing.assert_allclose(ys, ys_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(fin[0][1], fin_ref[0][1], rtol=1e-5, atol=1e-6)
+
+
+def test_fused_vjp_matches_layerwise_vjp():
+    """The cross-layer gate-recompute VJP == differentiating the layerwise
+    composition: training must be backend-agnostic whichever the stack-level
+    auto-selection picks."""
+    p = _stack(9, 16, 16, 2)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 16)) * 0.5
+
+    def loss(params, be):
+        ys, fin = lstm_stack_apply(params, xs, backend=be)
+        return jnp.sum(ys ** 2) + sum(jnp.sum(h * c) for h, c in fin)
+
+    g_ref = jax.grad(lambda q: loss(q, 'xla_scan'))(p)
+    g_fus = jax.grad(lambda q: loss(q, 'pallas_seq_fused'))(p)
+    flat_r, _ = jax.tree_util.tree_flatten(g_ref)
+    flat_f, _ = jax.tree_util.tree_flatten(g_fus)
+    for a, b in zip(flat_r, flat_f):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_chunked_equals_monolithic_bit_equal():
+    """≥3 ragged masked chunks with per-layer carried state reproduce the
+    monolithic fused call bit for bit (the §7 contract on the §8 kernel)."""
+    p = _stack(3, 16, 16, 2)
+    xs = jax.random.normal(jax.random.PRNGKey(2), (9, 3, 16)) * 0.5
+    lens = np.array([9, 5, 7])
+    mono, (mono_fin) = lstm_stack_chunk(p, xs, None,
+                                        valid_len=jnp.asarray(lens),
+                                        backend='pallas_seq_fused')
+    st = None
+    outs = []
+    for lo, hi in _chunk_plan(9, 3):           # 3 chunks
+        vl = jnp.asarray(np.clip(lens - lo, 0, hi - lo), jnp.int32)
+        o, st = lstm_stack_chunk(p, xs[lo:hi], st, valid_len=vl,
+                                 backend='pallas_seq_fused')
+        outs.append(o)
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(outs)),
+                                  np.asarray(mono))
+    for l in range(2):
+        np.testing.assert_array_equal(np.asarray(st[l][0]),
+                                      np.asarray(mono_fin[l][0]))
+    # and the masked fused path tracks the masked layerwise path
+    ref, _ = lstm_stack_chunk(p, xs, None, valid_len=jnp.asarray(lens),
+                              backend='xla_scan')
+    for b, L in enumerate(lens):
+        np.testing.assert_allclose(np.asarray(mono)[:L, b],
+                                   np.asarray(ref)[:L, b],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fused_batch_and_layer_blocking_grids():
+    """The bb (serving slots) and lb (layer blocks; lb < L = partial
+    residency, one layer block re-streamed per diagonal) grid dimensions
+    never change numerics — including the tail-bubble slot discipline that
+    only multi-block schedules exercise (a tail bubble must be identity on
+    its WRITE slot, or it clobbers h_{T-1} while the layer above still
+    needs it on the same diagonal)."""
+    from repro.kernels.lstm_seq import lstm_stack_seq
+    p = _stack(11, 24, 32, 3)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (7, 16, 24)) * 0.5
+    ys_ref, fin_ref = lstm_stack_apply(p, xs, backend='xla_scan')
+    for kw in ({'bb': 8}, {'lb': 1}, {'bb': 8, 'lb': 1}):
+        ys, fin = lstm_stack_seq(p, xs, **kw)
+        np.testing.assert_allclose(ys, ys_ref, rtol=1e-5, atol=1e-6,
+                                   err_msg=str(kw))
+        np.testing.assert_allclose(fin[2][1], fin_ref[2][1],
+                                   rtol=1e-5, atol=1e-6, err_msg=str(kw))
+
+
+# ------------------------------------------------------------------ int8 path
+def _quantized_stack(key, n_x, n_h, L, tile):
+    stack = _stack(key, n_x, n_h, L)
+    qps = []
+    for l, lp in enumerate(stack.layers):
+        plan = systolic.SystolicPlan(n_x if l == 0 else n_h, n_h, tile)
+        qps.append(systolic.quantize_packed(systolic.pack_lstm(lp, plan)))
+    return qps
+
+
+@pytest.mark.parametrize('n_x,n_h,tile,L,T,B', [
+    (24, 32, 16, 3, 6, 2),   # x-region narrower than h-region
+    (16, 16, 16, 2, 5, 1),   # single tile per region
+])
+def test_fused_quantized_bit_identical(n_x, n_h, tile, L, T, B):
+    """Fused int8 wavefront == chaining the silicon-reference scan layer by
+    layer, bit for bit."""
+    qps = _quantized_stack(n_x * 13 + n_h, n_x, n_h, L, tile)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (T, B, n_x)) * 0.5
+    h = quant.quantize(xs, quant.STATE_FMT)
+    xs_q = h
+    for qp in qps:
+        h = systolic.systolic_layer_quantized(qp, h)
+    out = lstm_stack_seq_quantized(qps, xs_q, interpret=True)
+    assert out.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(h))
+
+
+def test_fused_quantized_chunked_carry_bit_identical():
+    """int8 chunked serving on the fused stack: ≥3 ragged masked chunks with
+    the opaque per-layer (h_q, c_q) carry == the monolithic layerwise
+    reference, and the carried codes == codes after exactly valid_len
+    steps."""
+    n_x, n_h, tile, L = 24, 32, 16, 2
+    qps = _quantized_stack(5, n_x, n_h, L, tile)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (9, 3, n_x)) * 0.5
+    xs_q = quant.quantize(xs, quant.STATE_FMT)
+    h = xs_q
+    for qp in qps:
+        h = systolic.systolic_layer_quantized(qp, h)
+    ref = np.asarray(h)
+
+    lens = np.array([9, 4, 6])
+    st = None
+    outs = []
+    for lo, hi in _chunk_plan(9, 3):           # 3 chunks
+        vl = jnp.asarray(np.clip(lens - lo, 0, hi - lo), jnp.int32)
+        o, st = lstm_stack_seq_quantized(qps, xs_q[lo:hi], state=st,
+                                         valid_len=vl, return_state=True,
+                                         interpret=True)
+        outs.append(np.asarray(o))
+    hs = np.concatenate(outs)
+    for b, L_v in enumerate(lens):
+        np.testing.assert_array_equal(hs[:L_v, b], ref[:L_v, b])
+        np.testing.assert_array_equal(np.asarray(st[0])[-1, b, :n_h],
+                                      ref[L_v - 1, b])
+
+
+# ---------------------------------------------------------- distributed int8
+def test_distributed_quantized_chunked_carry_bit_identical():
+    """§6 scale-out now honours the same opaque-state chunk carry as the
+    single-engine int8 kernel (the PR-3 ROADMAP deferral), bit for bit —
+    including a mid-sequence handoff of the distributed state INTO the
+    single-engine kernel."""
+    from _subproc import run_with_devices
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, quant, systolic
+from repro.kernels.lstm_seq import lstm_layer_seq_quantized
+p = lstm.init_lstm_params(jax.random.PRNGKey(0), 16, 32)
+qp = systolic.quantize_packed(
+    systolic.pack_lstm(p, systolic.SystolicPlan(16, 32, 16)))
+xs = jax.random.normal(jax.random.PRNGKey(1), (9, 3, 16)) * 0.5
+xs_q = quant.quantize(xs, quant.STATE_FMT)
+ref = np.asarray(systolic.systolic_layer_quantized(qp, xs_q))
+lens = np.array([9, 4, 6])
+for rows, cols in ((1, 2), (2, 1)):
+    mesh = systolic.make_systolic_mesh(rows, cols)
+    state = None; outs = []
+    for lo, hi in ((0, 3), (3, 6), (6, 9)):
+        vl = jnp.asarray(np.clip(lens - lo, 0, hi - lo), jnp.int32)
+        o, state = systolic.systolic_lstm_seq_quantized(
+            qp, mesh, xs_q[lo:hi], state=state, valid_len=vl,
+            return_state=True)
+        outs.append(np.asarray(o))
+    hs = np.concatenate(outs)
+    for b, L in enumerate(lens):
+        np.testing.assert_array_equal(hs[:L, b], ref[:L, b])
+        np.testing.assert_array_equal(np.asarray(state[0])[b, :32],
+                                      ref[L - 1, b])
+    o1, st1 = systolic.systolic_lstm_seq_quantized(qp, mesh, xs_q[:4],
+                                                   return_state=True)
+    o2 = lstm_layer_seq_quantized(qp, xs_q[4:], state=st1, interpret=True)
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(o1), np.asarray(o2)]), ref)
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+# ------------------------------------------------------------------ dispatch
+def test_stack_backend_vmem_admission_on_tpu():
+    # a small homogeneous stack fits -> fused
+    assert select_stack_backend(64, 128, 3, 128, 8,
+                                platform='tpu') == 'pallas_seq_fused'
+    # the paper stack's f32 resident set (3 layers x 2 weight families at
+    # 512-padded width ~ 25 MB) blows the 12 MB budget -> layerwise seq
+    assert select_stack_backend(123, 421, 3, 128, 8,
+                                platform='tpu') == 'pallas_seq'
+    assert stack_vmem_bytes_estimate(123, 421, 3, 8) > 12 * 1024 * 1024
+    # single layer: nothing to pipeline -> per-layer rules
+    assert select_stack_backend(64, 128, 1, 128, 8,
+                                platform='tpu') == 'pallas_seq'
+    # short sequences don't amortise residency -> per-layer rules
+    assert select_stack_backend(64, 128, 3, 2, 8,
+                                platform='tpu') == 'pallas_step'
+    # never auto-picked on CPU (interpret mode is emulation, not speed)
+    assert select_stack_backend(64, 128, 3, 128, 8,
+                                platform='cpu') == 'xla_scan'
+
+
+def test_heterogeneous_stack_falls_back_to_layerwise():
+    """An hourglass stack (mixed widths) cannot ride the wavefront scratch;
+    explicit ``pallas_seq_fused`` degrades to the layerwise ``pallas_seq``
+    path with identical results."""
+    l0 = lstm.init_lstm_params(jax.random.PRNGKey(0), 12, 32)
+    l1 = lstm.init_lstm_params(jax.random.PRNGKey(1), 32, 16)
+    p = lstm.LSTMStackParams(layers=(l0, l1), w_out=None, b_out=None)
+    assert not stack_fused_compatible(p)
+    xs = jax.random.normal(jax.random.PRNGKey(2), (5, 2, 12)) * 0.5
+    ys_seq, _ = lstm_stack_apply(p, xs, backend='pallas_seq')
+    ys_fused, _ = lstm_stack_apply(p, xs, backend='pallas_seq_fused')
+    np.testing.assert_array_equal(np.asarray(ys_fused), np.asarray(ys_seq))
+
+
+def test_single_layer_fused_degenerates_to_seq_kernel():
+    p = lstm.init_lstm_params(jax.random.PRNGKey(0), 16, 32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 2, 16)) * 0.5
+    hs_seq, _ = lstm.lstm_layer_fused(p, xs, backend='pallas_seq')
+    hs_fused, _ = lstm.lstm_layer_fused(p, xs, backend='pallas_seq_fused')
+    np.testing.assert_array_equal(np.asarray(hs_fused), np.asarray(hs_seq))
+
+
+# ----------------------------------------------------------------- serving
+def test_streaming_engine_rides_fused_backend():
+    """Ragged streams served by the packed engine on the fused stack
+    backend (state carried across ≥3 chunks in the slot cache) reproduce
+    the monolithic fused forward."""
+    from repro import configs
+    from repro.models import chipmunk_net, get_bundle
+    from repro.serving import StreamingEngine
+    cfg = configs.get_smoke_config('chipmunk-ctc').replace(
+        lstm_backend='pallas_seq_fused')
+    params, _ = get_bundle(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    lens = [13, 7, 5]                          # 13/4 -> 4 chunks for stream 0
+    utts = [rng.randn(L, cfg.lstm_inputs).astype(np.float32) * 0.5
+            for L in lens]
+    eng = StreamingEngine(cfg, params, max_streams=2, chunk=4)
+    sessions = [eng.submit(u) for u in utts]
+    eng.run()
+    assert len(eng.sched.done) == len(utts)
+    for sess, u in zip(sessions, utts):
+        lp = chipmunk_net.forward(cfg, params, jnp.asarray(u)[None])
+        ref = np.asarray(jnp.moveaxis(lp, 0, 1))[0]
+        np.testing.assert_allclose(sess.full_log_probs(), ref,
+                                   rtol=1e-5, atol=1e-6)

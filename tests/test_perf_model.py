@@ -75,3 +75,55 @@ def test_calibration_is_two_point_fit():
     beta, cpb = pm.fit_calibration()
     assert beta == pytest.approx(pm.BETA, rel=1e-6)
     assert cpb == pytest.approx(pm.LOAD_CPB, rel=1e-4)
+
+
+def test_wavefront_pipelines_long_utterances():
+    """With one array per layer, the wavefront schedule approaches a
+    bottleneck-layer-per-step steady state: for the CTC stack (whose three
+    layers have near-equal step cycles on 5x5 arrays) that is ~3x the
+    sequential model at T=128, degraded only by the (L-1)/(T+L-1)
+    fill/drain bubbles."""
+    cfg = pm.TileConfig(3, 5, 5)
+    T = 128
+    wf = pm.wavefront_cycles(pm.CTC_3L_421H, cfg, T)
+    seq = pm.sequential_cycles(pm.CTC_3L_421H, cfg, T)
+    per = [pm.layer_step_cycles(ld, cfg) for ld in pm.CTC_3L_421H]
+    # exact identity of the model, then the headline ratio
+    assert wf == pytest.approx((T + 2) * max(per))
+    assert seq == pytest.approx(T * sum(per))
+    assert 2.5 < seq / wf < 3.0
+    assert pm.pipeline_fill_drain_overhead(pm.CTC_3L_421H, T) == \
+        pytest.approx(2 / 130)
+
+
+def test_wavefront_fill_drain_dominates_single_frame():
+    """At T=1 (the Table-2 per-frame deadline workload) the pipeline is all
+    fill/drain: the wavefront model must NOT beat the sequential one —
+    exactly why table2() keeps charging frames sequentially."""
+    cfg = pm.TileConfig(3, 5, 5)
+    wf = pm.wavefront_cycles(pm.CTC_3L_421H, cfg, 1)
+    seq = pm.sequential_cycles(pm.CTC_3L_421H, cfg, 1)
+    assert wf >= seq * 0.99
+    assert pm.pipeline_fill_drain_overhead(pm.CTC_3L_421H, 1) == \
+        pytest.approx(2 / 3)
+
+
+def test_wavefront_degenerates_without_layer_arrays():
+    """Fewer arrays than layers cannot overlap layers: the wavefront model
+    collapses to the sequential one (including weight re-streaming)."""
+    for cfg in (pm.TileConfig(1, 5, 5), pm.TileConfig(1, 1, 1)):
+        assert pm.wavefront_cycles(pm.CTC_3L_421H, cfg, 16) == \
+            pytest.approx(pm.sequential_cycles(pm.CTC_3L_421H, cfg, 16))
+
+
+def test_wavefront_gops_bounded_by_peak():
+    """Sustained Gop/s under the fused schedule: above the sequential
+    estimate, below the 75-engine peak."""
+    cfg = pm.TileConfig(3, 5, 5)
+    got = pm.wavefront_gops(pm.CTC_3L_421H, cfg, 1.24, T=128)
+    seq_secs = pm.sequential_cycles(pm.CTC_3L_421H, cfg, 128) / pm.freq_hz(1.24)
+    ops = 2 * 128 * sum(4 * ld.n_h * (ld.n_x + ld.n_h)
+                        for ld in pm.CTC_3L_421H)
+    seq_gops = ops / seq_secs / 1e9
+    assert got > seq_gops * 2.5
+    assert got < pm.peak_gops(1.24) * cfg.n_engines
