@@ -1,4 +1,4 @@
-"""Systolic scale-out benchmark (DESIGN.md §6 acceptance rows).
+"""Systolic scale-out benchmark (DESIGN.md §6 and §9 acceptance rows).
 
 Compares, on a real multi-device ("row","col") mesh, the per-step distributed
 scan (``systolic_lstm_shard_map`` — packed ``[x|h]`` column re-assembled and
@@ -7,14 +7,24 @@ sequence kernel (``systolic_lstm_seq`` — ``W_x @ x`` hoisted once, per-device
 weight blocks tile-stationary for all T steps), on the paper's 123->421 CTC
 layer at T=128, plus a scaled-down graves-75 (3-layer) configuration.
 
+A second subprocess benches the STAGED scale-out (§9) on the full CTC stack:
+the same 50 engines either as ONE flat 5x10 grid running the three layers
+back to back (layerwise ``pallas_seq_systolic`` — the best a stage-1
+placement can do with that much silicon, and the paper's Sec. 3.3 argument
+against flat scaling: the accumulation chain and h-broadcast spans keep
+growing) or as TWO pipelined 5x5 stages (``pallas_seq_fused_systolic`` —
+stage 0 holds layers {0,1}, stage 1 layer {2}, chunks handed over by
+ppermute).  Same arithmetic either way; the staged path wins on rounds
+(2(T+Tc) vs 3T sequential steps) and on per-step collective span (5-wide
+within a stage vs 10-wide across the flat grid) — the same levers as the
+silicon's 3x(5x5) Table-2 row.
+
 The driver process must keep seeing a single device (smoke tests/benches run
-in it), so this suite spawns a subprocess with
+in it), so this suite spawns subprocesses with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the same pattern as
-tests/_subproc.py — and re-emits the rows it prints.  CPU host devices make
-the absolute times an emulation, but the per-step-vs-persistent ratio is
-structurally meaningful: both paths pay the same per-step collectives
-(psum over cols, all_gather over rows); the per-step path additionally
-re-packs and re-MACs the input region every timestep.
+tests/_subproc.py — and re-emits the rows they print.  CPU host devices make
+the absolute times an emulation, but the compared pairs share per-step
+structure, so the ratios are structurally meaningful.
 """
 import os
 import pathlib
@@ -25,6 +35,7 @@ from .common import emit
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 N_DEVICES = 20      # the 123->421 plan at tile=128 is a 4x5 engine grid
+N_DEVICES_STAGED = 50   # 2 stages x (5x5) == one flat 5x10 grid
 
 _SNIPPET = r"""
 import time
@@ -110,12 +121,59 @@ print(f'ROW|scaleout/graves_scaled|{us_g:.1f}|'
 """
 
 
-def run():
+_STAGED_SNIPPET = r"""
+import time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, systolic
+
+n_x, n_h, T, B, Tc = 123, 421, 128, 8, 16
+stack = lstm.init_lstm_stack(jax.random.PRNGKey(42), n_x, n_h, 3)
+xs = jax.random.normal(jax.random.PRNGKey(43), (T, B, n_x)) * 0.5
+mesh_flat = systolic.make_systolic_mesh(5, 10)          # one flat 5x10 grid
+mesh_staged = systolic.make_systolic_mesh(5, 5, stage=2)  # 2 x (5x5) stages
+
+
+def layerwise(x):
+    h = x
+    for lp in stack.layers:
+        h, _ = systolic.systolic_lstm_seq(lp, mesh_flat, h)
+    return h
+
+
+f_lw = jax.jit(layerwise)
+f_st = jax.jit(lambda x: systolic.systolic_lstm_stack_seq(
+    stack, mesh_staged, x, chunk=Tc)[0])
+r_lw = np.asarray(jax.block_until_ready(f_lw(xs)))
+r_st = np.asarray(jax.block_until_ready(f_st(xs)))
+err = float(np.abs(r_lw - r_st).max())
+assert err < 1e-4, err
+
+# Alternate the two paths per iteration so host-load drift hits both equally.
+lws, sts = [], []
+for _ in range(5):
+    t0 = time.perf_counter(); jax.block_until_ready(f_lw(xs))
+    lws.append(time.perf_counter() - t0)
+    t0 = time.perf_counter(); jax.block_until_ready(f_st(xs))
+    sts.append(time.perf_counter() - t0)
+us_lw = sorted(lws)[len(lws) // 2] * 1e6
+us_st = sorted(sts)[len(sts) // 2] * 1e6
+print(f'ROW|scaleout/stack_layerwise_systolic|{us_lw:.1f}|'
+      f'T={T} B={B} 123->421x3 on one flat 5x10 grid (50 engines; 3 '
+      f'sequential whole-sequence launches, 10-wide psum chain per step)')
+print(f'ROW|scaleout/stack_fused_systolic|{us_st:.1f}|'
+      f'T={T} B={B} 123->421x3 on a 2-stage 2x(5x5) mesh (same 50 engines; '
+      f'layer blocks stage-stationary, Tc={Tc} chunks ppermute-pipelined, '
+      f'5-wide collectives; {us_lw / us_st:.2f}x vs layerwise flat grid, '
+      f'max_err={err:.1e})')
+"""
+
+
+def _run_snippet(snippet: str, n_devices: int):
     env = dict(os.environ)
-    env['XLA_FLAGS'] = f'--xla_force_host_platform_device_count={N_DEVICES}'
+    env['XLA_FLAGS'] = f'--xla_force_host_platform_device_count={n_devices}'
     env['PYTHONPATH'] = (str(REPO / 'src') + os.pathsep
                          + env.get('PYTHONPATH', ''))
-    proc = subprocess.run([sys.executable, '-c', _SNIPPET], env=env,
+    proc = subprocess.run([sys.executable, '-c', snippet], env=env,
                           capture_output=True, text=True, timeout=1800)
     if proc.returncode != 0:
         raise RuntimeError(f'scaleout subprocess failed\nSTDOUT:\n'
@@ -124,4 +182,10 @@ def run():
     for row in rows:
         _, name, us, derived = row.split('|', 3)
         emit(name, float(us), derived)
+    return rows
+
+
+def run():
+    rows = _run_snippet(_SNIPPET, N_DEVICES)
+    rows += _run_snippet(_STAGED_SNIPPET, N_DEVICES_STAGED)
     return rows

@@ -62,8 +62,9 @@ class ArchConfig:
     attn_chunk: int = 512                   # kv blocking for chunked attention
     use_pallas: bool = False                # TPU path; off for CPU/dry-run
     # auto | xla_scan | pallas_step | pallas_seq | pallas_seq_fused |
-    # pallas_seq_systolic (core.lstm.BACKENDS; 'auto' also consults the
-    # installed systolic mesh and the stack-level fused-kernel admission)
+    # pallas_seq_systolic | pallas_seq_fused_systolic (core.lstm.BACKENDS;
+    # 'auto' also consults the installed systolic mesh — stage-aware for
+    # stacks — and the stack-level fused-kernel admission)
     lstm_backend: str = 'auto'
     optimizer: str = 'adamw'                # adamw | adafactor | sgd
     scan_layers: bool = True

@@ -218,13 +218,60 @@ def lstm_bwd_recompute_gates(w_h, w_peep, b, pre_x, hs, cs, h0, c0, grads):
     return lstm_bwd_core(w_h, w_peep, hs, cs, gates, h0, c0, dhs, dh_T, dc_T)
 
 
+def lstm_stack_bwd_recompute_gates(w_in, w_h, peep, b, pre_x, hs, cs, h0s,
+                                   c0s, grads):
+    """Cross-layer gate-recompute backward for a homogeneous LSTM stack.
+
+    Composes ``lstm_bwd_recompute_gates`` down the stack from the saved
+    per-layer h/c trajectories: each layer's hoisted input stream is
+    recomputed from the trajectory below it (layer 0's ``pre_x`` was a
+    primal input), the inner layers' input-weight gradients and the
+    handover cotangents being the only additions over the single-layer
+    VJP.  Shared by the fused wavefront kernel's VJP
+    (``kernels.lstm_seq.stack_ops``) and the staged systolic scale-out's
+    VJP (``core.systolic.systolic_lstm_stack_seq``), so the two backward
+    paths cannot diverge.
+
+    w_in/w_h: (L, 4, N_h, N_h) with ``w_in[0]`` zero; pre_x: (T, B, 4,
+    N_h); hs/cs: (L, T, B, N_h) saved trajectories; h0s/c0s: (L, B, N_h);
+    grads: (d_ys, (d_hT (L, B, N_h), d_cT)).  Returns (dw_in, dw_h,
+    d_peep, db, d_pre_x0, dh0s, dc0s).
+    """
+    d_ys, (d_hT, d_cT) = grads
+    L = w_h.shape[0]
+    dw_in, dw_h, d_peep, db, dh0, dc0 = [], [], [], [], [], []
+    d_hs = d_ys                     # cotangent flowing into the top layer
+    d_pre_x0 = None
+    for l in range(L - 1, -1, -1):
+        pre_l = pre_x if l == 0 else jnp.einsum('ghx,tbx->tbgh',
+                                                w_in[l], hs[l - 1])
+        dwh, dp, dbias, dpre, dh, dc = lstm_bwd_recompute_gates(
+            w_h[l], peep[l], b[l], pre_l, hs[l], cs[l], h0s[l], c0s[l],
+            (d_hs, (d_hT[l], d_cT[l])))
+        dw_h.append(dwh)
+        d_peep.append(dp)
+        db.append(dbias)
+        dh0.append(dh)
+        dc0.append(dc)
+        if l > 0:
+            dw_in.append(jnp.einsum('tbgh,tbx->ghx', dpre, hs[l - 1]))
+            d_hs = jnp.einsum('ghx,tbgh->tbx', w_in[l], dpre)
+        else:
+            dw_in.append(jnp.zeros_like(w_in[0]))
+            d_pre_x0 = dpre
+    stack = lambda xs: jnp.stack(xs[::-1])
+    return (stack(dw_in), stack(dw_h), stack(d_peep), stack(db),
+            d_pre_x0, stack(dh0), stack(dc0))
+
+
 # ---------------------------------------------------------------------------
 # Backend dispatch: xla_scan | pallas_step | pallas_seq | pallas_seq_fused |
-# pallas_seq_systolic (DESIGN.md §3.3, §6 and §8)
+# pallas_seq_systolic | pallas_seq_fused_systolic (DESIGN.md §3.3, §6, §8, §9)
 # ---------------------------------------------------------------------------
 
 BACKENDS = ('auto', 'xla_scan', 'pallas_step', 'pallas_seq',
-            'pallas_seq_fused', 'pallas_seq_systolic')
+            'pallas_seq_fused', 'pallas_seq_systolic',
+            'pallas_seq_fused_systolic')
 
 # The sequence kernel keeps W_h + state resident in VMEM; leave headroom for
 # Mosaic's double-buffered streams out of the ~16 MB budget.
@@ -267,18 +314,30 @@ def select_lstm_backend(n_x: int, n_h: int, T: int, batch: int,
 def select_stack_backend(n_x: int, n_h: int, n_layers: int, T: int,
                          batch: int, *, platform: Optional[str] = None,
                          mesh=None) -> str:
-    """Stack-level backend selection (DESIGN.md §8).
+    """Stack-level backend selection (DESIGN.md §8 and §9).
 
     The fused wavefront kernel is a STACK-level choice: it is admitted only
     when the whole stack's resident working set — every layer's recurrent
     AND input weight blocks (``stack_vmem_bytes_estimate``) — fits the VMEM
     budget, there are at least two layers to pipeline, and the sequence is
-    long enough to amortise residency.  An installed systolic mesh that
-    admits the layer takes precedence (the user asked for multi-engine
-    scale-out); everything else falls back to the per-layer
-    ``select_lstm_backend`` rules, i.e. the layerwise composition.
-    Selection never changes numerics — all backends are interchangeable.
+    long enough to amortise residency.  An installed systolic mesh takes
+    precedence (the user asked for multi-engine scale-out): a mesh with a
+    live ``stage`` axis that admits the stack (the stage-aware form of
+    ``seq_scaleout_admissible``) resolves to the staged scale-out of the
+    fused stack, ``pallas_seq_fused_systolic`` (§9 — the paper's 3×(5×5)
+    Table-2 topology as one dispatch path); a stage-1 mesh resolves to the
+    layerwise ``pallas_seq_systolic``.  Everything else falls back to the
+    per-layer ``select_lstm_backend`` rules, i.e. the layerwise
+    composition.  Selection never changes numerics — all backends are
+    interchangeable.
     """
+    if mesh is None:
+        from .systolic import current_mesh
+        mesh = current_mesh()
+    if mesh is not None and T >= _SEQ_MIN_T:
+        from .systolic import seq_scaleout_admissible
+        if seq_scaleout_admissible(n_h, mesh, n_layers=n_layers):
+            return 'pallas_seq_fused_systolic'
     per_layer = select_lstm_backend(n_x, n_h, T, batch,
                                     platform=platform, mesh=mesh)
     if per_layer == 'pallas_seq_systolic':
@@ -292,6 +351,18 @@ def select_stack_backend(n_x: int, n_h: int, n_layers: int, T: int,
             <= _VMEM_BUDGET_BYTES):
         return 'pallas_seq_fused'
     return per_layer
+
+
+def _degrade_staged_single_layer(n_h: int) -> str:
+    """A single-layer call cannot stage-pipeline (nothing to place on the
+    stage axis): ``pallas_seq_fused_systolic`` degrades to the layerwise
+    scale-out when the installed mesh admits the layer on its row/col axes
+    alone, and to the single-engine sequence kernel otherwise.  Pure
+    dispatch — no numerics of its own."""
+    from .systolic import current_mesh, seq_scaleout_admissible
+    return ('pallas_seq_systolic'
+            if seq_scaleout_admissible(n_h, current_mesh())
+            else 'pallas_seq')
 
 
 def lstm_layer_fused(params: LSTMParams, xs: jax.Array,
@@ -316,6 +387,8 @@ def lstm_layer_fused(params: LSTMParams, xs: jax.Array,
                                       math.prod(batch_shape))
     if backend == 'pallas_seq_fused':
         backend = 'pallas_seq'      # a 1-layer stack IS the sequence kernel
+    if backend == 'pallas_seq_fused_systolic':
+        backend = _degrade_staged_single_layer(n_h)
     if h0 is None:
         h0 = jnp.zeros(batch_shape + (n_h,), xs.dtype)
     if c0 is None:
@@ -407,6 +480,8 @@ def lstm_layer_chunk(params: LSTMParams, xs: jax.Array,
         backend = select_lstm_backend(params.n_x, n_h, T, B)
     if backend == 'pallas_seq_fused':
         backend = 'pallas_seq'      # a 1-layer stack IS the sequence kernel
+    if backend == 'pallas_seq_fused_systolic':
+        backend = _degrade_staged_single_layer(n_h)
     if h0 is None:
         h0 = jnp.zeros((B, n_h), xs.dtype)
     if c0 is None:
@@ -450,15 +525,41 @@ def init_lstm_stack(key: jax.Array, n_x: int, n_h: int, n_layers: int,
     return LSTMStackParams(tuple(layers), w_out, b_out)
 
 
+def stack_carry_arrays(states, n_layers: int, batch: int, n_h: int,
+                       dtype) -> Tuple[jax.Array, jax.Array]:
+    """Stack per-layer serving carries into the (L, B, N_h) kernel arrays.
+
+    The ONE defaulting rule for fused-stack entry points (the §8 kernel
+    wrapper and the §9 staged scale-out): a missing state list, a missing
+    layer entry, or a ``None`` half zeroes THAT layer's carry only, never
+    its neighbours' — exactly what the layerwise loop does, so backends
+    stay numerically interchangeable.  Returns (h0s, c0s).
+    """
+    zeros = jnp.zeros((batch, n_h), dtype)
+
+    def gather(part):
+        def one(l):
+            st = None if states is None else states[l]
+            v = None if st is None else st[part]
+            return zeros if v is None else v
+
+        return jnp.stack([one(l) for l in range(n_layers)])
+
+    return gather(0), gather(1)
+
+
 def _resolve_stack_backend(params: LSTMStackParams, backend: str,
                            xs: jax.Array) -> str:
-    """Stack-level dispatch (DESIGN.md §8): resolve ``auto`` through
+    """Stack-level dispatch (DESIGN.md §8 and §9): resolve ``auto`` through
     ``select_stack_backend`` and degrade an (explicit or auto-picked)
-    ``pallas_seq_fused`` to the layerwise ``pallas_seq`` when the stack is
-    structurally incompatible with the fused wavefront kernel
-    (heterogeneous widths, a single layer, or a non-(T, B, N_x) input).
-    Pure dispatch — the chosen backend never changes numerics beyond float
-    re-association."""
+    fused-stack backend when the stack is structurally incompatible with
+    the wavefront schedule (heterogeneous widths, a single layer, or a
+    non-(T, B, N_x) input): ``pallas_seq_fused`` falls back to the
+    layerwise ``pallas_seq``, the staged ``pallas_seq_fused_systolic``
+    likewise (a heterogeneous stack cannot share one stage-padded weight
+    layout; the stage>1 installed mesh is not usable layerwise, so the
+    single-engine composition decides).  Pure dispatch — the chosen
+    backend never changes numerics beyond float re-association."""
     from ..kernels.lstm_seq import stack_fused_compatible
     compatible = (xs.ndim == 3 and len(params.layers) >= 2
                   and stack_fused_compatible(params))
@@ -466,7 +567,8 @@ def _resolve_stack_backend(params: LSTMStackParams, backend: str,
         l0 = params.layers[0]
         backend = select_stack_backend(l0.n_x, l0.n_h, len(params.layers),
                                        xs.shape[0], xs.shape[1])
-    if backend == 'pallas_seq_fused' and not compatible:
+    if backend in ('pallas_seq_fused',
+                   'pallas_seq_fused_systolic') and not compatible:
         backend = 'pallas_seq'
     return backend
 
@@ -482,11 +584,20 @@ def lstm_stack_apply(params: LSTMStackParams, xs: jax.Array,
     admit it) runs every layer in ONE fused wavefront launch
     (``kernels.lstm_seq.lstm_stack_seq``) instead of the per-layer loop —
     same contract, output allclose, hidden sequences never round-tripping
-    through HBM between layers.
+    through HBM between layers.  ``backend='pallas_seq_fused_systolic'``
+    is the staged scale-out of the same composition
+    (``core.systolic.systolic_lstm_stack_seq``, DESIGN.md §9): contiguous
+    layer blocks pinned to the installed mesh's ``stage`` axis, the fused
+    stack running tile-stationary inside each stage.
     """
     assert backend in BACKENDS, backend
     backend = _resolve_stack_backend(params, backend, xs)
-    if backend == 'pallas_seq_fused':
+    if backend == 'pallas_seq_fused_systolic':
+        from .systolic import current_mesh, systolic_lstm_stack_seq
+        h, finals = systolic_lstm_stack_seq(params, current_mesh(), xs,
+                                            states)
+        finals = list(finals)
+    elif backend == 'pallas_seq_fused':
         from ..kernels.lstm_seq import lstm_stack_seq
         h, finals = lstm_stack_seq(params, xs, states)
         finals = list(finals)
@@ -519,11 +630,20 @@ def lstm_stack_chunk(params: LSTMStackParams, xs: jax.Array, states,
     On the ``pallas_seq_fused`` backend the whole chunk runs every layer in
     one wavefront launch with the per-layer carries and the shared
     ``valid_len`` mask threaded straight into the kernel — the serving
-    engine's packed slot grid rides this path end to end.
+    engine's packed slot grid rides this path end to end.  On
+    ``pallas_seq_fused_systolic`` the same chunked call (carries, shared
+    mask) runs the staged scale-out over the installed
+    (stage, row, col) mesh — the cross-engine state handoff of DESIGN.md
+    §9.
     """
     assert backend in BACKENDS, backend
     backend = _resolve_stack_backend(params, backend, xs)
-    if backend == 'pallas_seq_fused':
+    if backend == 'pallas_seq_fused_systolic':
+        from .systolic import current_mesh, systolic_lstm_stack_seq
+        h, finals = systolic_lstm_stack_seq(params, current_mesh(), xs,
+                                            states, valid_len=valid_len)
+        finals = tuple(finals)
+    elif backend == 'pallas_seq_fused':
         from ..kernels.lstm_seq import lstm_stack_seq
         h, finals = lstm_stack_seq(params, xs, states, valid_len=valid_len)
         finals = tuple(finals)

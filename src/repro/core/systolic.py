@@ -44,6 +44,14 @@ Four execution paths, all validated against ``core.lstm.lstm_cell``:
 A process-level mesh registry (``install_mesh`` / ``current_mesh``) lets the
 backend dispatch in ``core.lstm`` auto-select the scale-out path whenever a
 systolic mesh is installed (``launch/mesh.py`` topology presets).
+
+The STAGED scale-out (``systolic_lstm_stack_seq`` and its int8 twin,
+DESIGN.md §9) composes the above with the §8 fused wavefront stack: each
+stage of a ``(stage, row, col)`` mesh holds one contiguous layer block
+weight-stationary and runs the fused composition with the §6 row/col
+dataflow inside the stage, while the hidden-state sequence pipelines across
+stages in chunks handed over by ``ppermute`` — the paper's full 3x(5x5)
+Table-2 topology (``graves-75``) as one dispatch path.
 """
 from __future__ import annotations
 
@@ -100,22 +108,54 @@ def clear_mesh() -> None:
 
 
 def seq_scaleout_admissible(n_h: int, mesh: Optional[Mesh], *,
+                            n_layers: Optional[int] = None,
                             row_axis: str = 'row', col_axis: str = 'col',
+                            stage_axis: str = 'stage',
                             vmem_budget: Optional[int] = None) -> bool:
-    """Tile-admission rule for ``systolic_lstm_seq`` (DESIGN.md §6).
+    """Tile-admission rule for the systolic scale-outs (DESIGN.md §6, §9).
 
-    True iff ``mesh`` has the two systolic axes, no other axis is >1 (a live
-    "stage" axis belongs to ``core.pipeline``), at least one systolic axis is
-    >1 (an all-1 mesh degenerates to the single-engine kernel, whose §3.3
-    platform/shape rules must keep deciding — interpret-mode emulation must
-    never be auto-picked on CPU), and one device's resident block — 4 gate
-    ``bn x bk`` tiles plus the row slice of peepholes/biases, where
+    Single-layer form (``n_layers=None``, consulted by per-layer ``auto``
+    dispatch for ``systolic_lstm_seq``): True iff ``mesh`` has the two
+    systolic axes, no other axis is >1 (a live "stage" axis belongs to the
+    stack-level rule below), at least one systolic axis is >1 (an all-1
+    mesh degenerates to the single-engine kernel, whose §3.3
+    platform/shape rules must keep deciding — interpret-mode emulation
+    must never be auto-picked on CPU), and one device's resident block —
+    4 gate ``bn x bk`` tiles plus the row slice of peepholes/biases, where
     ``bn = n_h_p/rows`` and ``bk = n_h_p/cols`` — fits the VMEM budget.
-    Admission never changes numerics, only whether ``auto`` dispatch picks
-    the scale-out backend.
+
+    Stage-aware fused form (``n_layers`` given, consulted by
+    ``select_stack_backend`` for ``systolic_lstm_stack_seq``): admits the
+    STAGED scale-out of the fused stack iff the mesh's ``stage`` axis is
+    live (>=2 — a stage-1 mesh is the layerwise §6 rule's domain) but not
+    deeper than the stack (an idle stage would only add pipeline bubbles),
+    no axis beyond (stage, row, col) is >1, and one device's resident
+    layer block — ``ceil(n_layers/stages)`` layers' worth of BOTH weight
+    families (``W_h`` and ``W_in`` blocks) plus their peephole/bias rows —
+    fits the VMEM budget.  Admission never changes numerics, only whether
+    ``auto`` dispatch picks a scale-out backend.
     """
     if mesh is None:
         return False
+    names = mesh.axis_names
+    if vmem_budget is None:
+        from .lstm import _VMEM_BUDGET_BYTES as vmem_budget
+    if n_layers is not None:
+        if (row_axis not in names or col_axis not in names
+                or stage_axis not in names):
+            return False
+        if any(mesh.shape[a] > 1 for a in names
+               if a not in (row_axis, col_axis, stage_axis)):
+            return False
+        stages = mesh.shape[stage_axis]
+        if stages < 2 or stages > n_layers:
+            return False
+        mr, mc = mesh.shape[row_axis], mesh.shape[col_axis]
+        n_h_p = _round_up(n_h, math.lcm(mr, mc))
+        bn, bk = n_h_p // mr, n_h_p // mc
+        lb = -(-n_layers // stages)
+        per_layer = 2 * GATES * bn * bk * 4 + (3 + GATES) * bn * 4
+        return lb * per_layer <= vmem_budget
     try:
         mr, mc = _require_systolic_axes(mesh, row_axis, col_axis)
     except ValueError:
@@ -124,8 +164,6 @@ def seq_scaleout_admissible(n_h: int, mesh: Optional[Mesh], *,
         return False
     n_h_p = _round_up(n_h, math.lcm(mr, mc))
     bn, bk = n_h_p // mr, n_h_p // mc
-    if vmem_budget is None:
-        from .lstm import _VMEM_BUDGET_BYTES as vmem_budget
     return GATES * bn * bk * 4 + (3 + GATES) * bn * 4 <= vmem_budget
 
 
@@ -712,32 +750,45 @@ def systolic_lstm_seq(params: LSTMParams, mesh: Optional[Mesh], xs: jax.Array,
                               params.w_peep, params.b, pre_x, h0, c0)
 
 
-def quantized_x_prefix(qp: QuantizedPackedLSTM, xs_q: jax.Array) -> jax.Array:
-    """Hoisted x-region prefix of the saturating hop chain — the first
-    ``cols_x`` hops, which depend only on the frame stream, computed once
-    for the whole sequence: per-tile int32 MACs saturated to int16, then the
-    sequential engine-order hop.  Bit-identical to folding those columns
-    inside the step loop (the same ops in the same order), so every consumer
-    — the §6 distributed form AND the §8 fused-stack kernel's layer 0 —
-    resumes the chain from exactly the state the silicon would hold.
-    xs_q: (T, B, n_x) int8 codes -> (T, B, R, 4, tile) int32 in ACC_FMT."""
-    plan = qp.plan
-    T, B = xs_q.shape[0], xs_q.shape[1]
-    acc0 = jnp.zeros((T, B, plan.rows, GATES, plan.tile), jnp.int32)
-    if not plan.cols_x:
-        return acc0
-    xs_pad = jnp.zeros((T, B, plan.padded_x), jnp.int8
-                       ).at[..., :plan.n_x].set(xs_q)
-    xcols = xs_pad.reshape(T, B, plan.cols_x, plan.tile)
+def _x_prefix_fold(tiles_x: jax.Array, xcols: jax.Array) -> jax.Array:
+    """Raw-array core of ``quantized_x_prefix``: per-tile int32 MACs
+    saturated to int16, then the sequential engine-order hop over the
+    x-region columns.  Single source of truth for the h-independent prefix
+    of the saturating chain — ``quantized_x_prefix`` (host-side hoisting)
+    and the staged scale-out's in-body below-region fold
+    (``systolic_lstm_stack_seq_quantized``) both call it, so every
+    consumer replays the identical saturation/hop order.  tiles_x:
+    (R, C_x, 4, t, t) int8; xcols: (T, B, C_x, t) int8 ->
+    (T, B, R, 4, t) int32 in ACC_FMT."""
     part_x = _sat16(jnp.einsum('rcgij,tbcj->ctbrgi',
-                               qp.tiles_q[:, :plan.cols_x].astype(jnp.int32),
+                               tiles_x.astype(jnp.int32),
                                xcols.astype(jnp.int32)))
 
     def hop(acc, p):
         return _sat16(acc + p), None
 
+    acc0 = jnp.zeros(part_x.shape[1:], jnp.int32)
     acc_x, _ = jax.lax.scan(hop, acc0, part_x)
     return acc_x
+
+
+def quantized_x_prefix(qp: QuantizedPackedLSTM, xs_q: jax.Array) -> jax.Array:
+    """Hoisted x-region prefix of the saturating hop chain — the first
+    ``cols_x`` hops, which depend only on the frame stream, computed once
+    for the whole sequence (the shared ``_x_prefix_fold``).  Bit-identical
+    to folding those columns inside the step loop (the same ops in the same
+    order), so every consumer — the §6 distributed form, the §8
+    fused-stack kernel's layer 0, AND the §9 staged scale-out — resumes
+    the chain from exactly the state the silicon would hold.
+    xs_q: (T, B, n_x) int8 codes -> (T, B, R, 4, tile) int32 in ACC_FMT."""
+    plan = qp.plan
+    T, B = xs_q.shape[0], xs_q.shape[1]
+    if not plan.cols_x:
+        return jnp.zeros((T, B, plan.rows, GATES, plan.tile), jnp.int32)
+    xs_pad = jnp.zeros((T, B, plan.padded_x), jnp.int8
+                       ).at[..., :plan.n_x].set(xs_q)
+    xcols = xs_pad.reshape(T, B, plan.cols_x, plan.tile)
+    return _x_prefix_fold(qp.tiles_q[:, :plan.cols_x], xcols)
 
 
 def systolic_lstm_seq_quantized(qp: QuantizedPackedLSTM, mesh: Optional[Mesh],
@@ -855,3 +906,604 @@ def systolic_lstm_seq_quantized(qp: QuantizedPackedLSTM, mesh: Optional[Mesh],
     if not return_state:
         return hs[..., :plan.n_h]
     return hs[..., :plan.n_h], (hs[-1], cs[-1])
+
+
+# ---------------------------------------------------------------------------
+# Staged systolic scale-out of the fused wavefront stack (DESIGN.md §9):
+# contiguous layer blocks pinned to the mesh "stage" axis, chunks of the
+# hidden-state sequence pipelined stage to stage via ppermute — the paper's
+# 3x(5x5) Table-2 topology as ONE dispatch path.
+# ---------------------------------------------------------------------------
+
+def stage_layer_blocks(n_layers: int, n_stages: int
+                       ) -> Tuple[Tuple[int, int], ...]:
+    """Contiguous balanced layer placement on the stage axis: stage ``s``
+    owns layers ``[lo, hi)``; block sizes differ by at most one (the
+    ceil-sized blocks come first, so 3 layers on 2 stages place layers
+    {0, 1} on stage 0 and {2} on stage 1), and stages beyond the stack
+    (``n_stages > n_layers``) get empty blocks — they pass activations
+    through unchanged, adding pipeline delay but no arithmetic.  Pure
+    geometry; no numerics of its own."""
+    base, rem = divmod(n_layers, n_stages)
+    out, lo = [], 0
+    for s_i in range(n_stages):
+        size = base + (1 if s_i < rem else 0)
+        out.append((lo, lo + size))
+        lo += size
+    return tuple(out)
+
+
+def _require_staged_axes(mesh: Mesh, stage_axis: str, row_axis: str,
+                         col_axis: str) -> Tuple[int, int, int]:
+    """Axis check for the staged scale-out: the three named axes must exist
+    and every other axis must be 1.  Returns (stages, rows, cols)."""
+    names = mesh.axis_names
+    for a in (stage_axis, row_axis, col_axis):
+        if a not in names:
+            raise ValueError(f'mesh axes {names} lack {a!r}')
+    if any(mesh.shape[a] > 1 for a in names
+           if a not in (stage_axis, row_axis, col_axis)):
+        raise ValueError('staged scale-out uses only (stage, row, col) axes')
+    return (mesh.shape[stage_axis], mesh.shape[row_axis],
+            mesh.shape[col_axis])
+
+
+def _stage_stack(x: jax.Array, blocks, n_stages: int, lb: int) -> jax.Array:
+    """Relayout per-layer arrays (L, ...) into per-stage slots
+    (S, Lb, ...), zero-padding slots past each stage's block (their live
+    flags mask them to pure passthrough).  Layout only — no arithmetic."""
+    out = jnp.zeros((n_stages, lb) + x.shape[1:], x.dtype)
+    for s_i, (lo, hi) in enumerate(blocks):
+        if hi > lo:
+            out = out.at[s_i, :hi - lo].set(x[lo:hi])
+    return out
+
+
+def _stage_live(blocks, n_stages: int, lb: int) -> jax.Array:
+    """Per-(stage, slot) liveness flags matching ``_stage_stack``'s
+    padding (1.0 = a real layer, 0.0 = a passthrough slot)."""
+    live = np.zeros((n_stages, lb), np.float32)
+    for s_i, (lo, hi) in enumerate(blocks):
+        live[s_i, :hi - lo] = 1.0
+    return jnp.asarray(live)
+
+
+def _stage_of(blocks, layer: int) -> Tuple[int, int]:
+    """(stage index, slot index) of a global layer under ``blocks``."""
+    for s_i, (lo, hi) in enumerate(blocks):
+        if lo <= layer < hi:
+            return s_i, layer - lo
+    raise ValueError(f'layer {layer} outside {blocks}')
+
+
+def _staged_schedule(n_layers: int, T: int, n_stages: int,
+                     chunk: Optional[int]):
+    """The one source of the staged pipeline geometry, shared by the f32
+    and int8 wrappers so their schedules (and hence the cross-engine state
+    handoff) cannot desynchronize: chunk default ``ceil(T / (4*stages))``
+    (fill/drain stays under ~1/4 of macro-steps; chunk=1 is the paper's
+    frame-by-frame handover), ``K`` chunks padding T to ``T_p``, ``M = K +
+    S - 1`` macro-steps, the contiguous layer blocks and the slot count.
+    Returns (Tc, K, T_p, M, blocks, Lb)."""
+    if chunk is None:
+        chunk = max(1, -(-T // (4 * n_stages)))
+    Tc = min(int(chunk), T)
+    K = -(-T // Tc)
+    blocks = stage_layer_blocks(n_layers, n_stages)
+    Lb = max(1, max(hi - lo for lo, hi in blocks))
+    return Tc, K, K * Tc, K + n_stages - 1, blocks, Lb
+
+
+def _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s, mask=None):
+    """Staged distributed whole-stack forward (padded in, un-padded out).
+
+    Numerics contract: allclose to the layerwise composition (chaining
+    ``core.lstm.lstm_layer`` / the §8 fused stack) — inside a stage each
+    layer of the block runs the §6 per-step dataflow (resident ``bn x bk``
+    recurrent block, per-step ``psum`` over ``col``, ``all_gather`` of the
+    h chunks over ``row``) over one Tc-step chunk at a time, the chunk's
+    below-layer input stream hoisted into one wide matmul; chunks pipeline
+    across stages via ``ppermute`` — at macro-step m, stage s computes
+    chunk ``m - s`` while stage s+1 consumes chunk ``m - s - 1`` — so
+    inter-stage activations never fan through a host gather.  ``mask``:
+    optional (T, B) validity mask; a masked step is identity on every
+    layer's carried state via ``jnp.where`` (pure select, so ``None`` and
+    an all-ones mask are bit-identical).  Returns (hs, cs), each
+    (L, T, B, n_h) — the full trajectories feed the cross-layer VJP and
+    the chunked serving carry.
+    """
+    mesh, stage_axis, row_axis, col_axis, chunk = static
+    T, B, _, n_h = pre_x.shape
+    L = w_h.shape[0]
+    S, mr, mc = (mesh.shape[stage_axis], mesh.shape[row_axis],
+                 mesh.shape[col_axis])
+    n_h_p, bn, bk = _scaleout_blocks(n_h, mr, mc)
+    pad = n_h_p - n_h
+    Tc, K, T_p, M, blocks, Lb = _staged_schedule(L, T, S, chunk)
+
+    if mask is None:
+        mask = jnp.ones((T, B), jnp.bool_)
+    mask_k = jnp.zeros((T_p, B), jnp.bool_).at[:T].set(mask).reshape(K, Tc, B)
+    pre_p = jnp.pad(pre_x, ((0, T_p - T), (0, 0), (0, 0), (0, pad))
+                    ).reshape(K, Tc, B, GATES, n_h_p)
+
+    pad_w = ((0, 0), (0, 0), (0, pad), (0, pad))
+    w_in_s = _stage_stack(jnp.pad(w_in, pad_w), blocks, S, Lb)
+    w_h_s = _stage_stack(jnp.pad(w_h, pad_w), blocks, S, Lb)
+    peep_s = _stage_stack(jnp.pad(peep, ((0, 0), (0, 0), (0, pad))),
+                          blocks, S, Lb)
+    bias_s = _stage_stack(jnp.pad(b, ((0, 0), (0, 0), (0, pad))),
+                          blocks, S, Lb)
+    h0_s = _stage_stack(jnp.pad(h0s, ((0, 0), (0, 0), (0, pad))),
+                        blocks, S, Lb)
+    c0_s = _stage_stack(jnp.pad(c0s, ((0, 0), (0, 0), (0, pad))),
+                        blocks, S, Lb)
+    live = _stage_live(blocks, S, Lb)
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+
+    def body(w_in_l, w_h_l, peep_l, bias_l, h0_l, c0_l, live_l, pre_l,
+             mask_l):
+        """SPMD body on device (s, r, c).
+
+        w_in_l/w_h_l: (1, Lb, 4, bn, bk) — the stage's resident layer
+        block, tile-stationary for the whole utterance; pre_l:
+        (K, Tc, B, 4, bn) hoisted layer-0 stream (consumed by stage 0
+        only); mask_l: (K, Tc, B) replicated validity chunks.
+        """
+        s_idx = jax.lax.axis_index(stage_axis)
+        col = jax.lax.axis_index(col_axis)
+        w_in_l, w_h_l = w_in_l[0], w_h_l[0]
+        peep_l, bias_l, live_l = peep_l[0], bias_l[0], live_l[0]
+
+        def layer_chunk(w4, peep4, bias4, pre_stream, h0f, c0b, m_chunk):
+            # One slot's Tc-step scan — exactly the §6 step dataflow.
+            def step(carry_i, inp):
+                h_full, c = carry_i
+                pre_t, m = inp
+                h_k = jax.lax.dynamic_slice(h_full, (0, col * bk), (B, bk))
+                part = jnp.einsum('gnk,bk->bgn', w4, h_k)
+                pre = jax.lax.psum(part, col_axis) + pre_t
+                i = jax.nn.sigmoid(pre[:, I] + peep4[PEEP_I] * c + bias4[I])
+                f = jax.nn.sigmoid(pre[:, F] + peep4[PEEP_F] * c + bias4[F])
+                g = jnp.tanh(pre[:, G] + bias4[G])
+                c_new = f * c + i * g
+                o = jax.nn.sigmoid(pre[:, O] + peep4[PEEP_O] * c_new
+                                   + bias4[O])
+                h_new = o * jnp.tanh(c_new)
+                h_full_new = jax.lax.all_gather(h_new, row_axis, axis=1,
+                                                tiled=True)
+                # Masked step = identity on the carried state (pure select).
+                keep = m[:, None]
+                h_full_new = jnp.where(keep, h_full_new, h_full)
+                c_new = jnp.where(keep, c_new, c)
+                return (h_full_new, c_new), (h_full_new, c_new)
+
+            (h_T, c_T), (hs_c, cs_c) = jax.lax.scan(
+                step, (h0f, c0b), (pre_stream, m_chunk))
+            return hs_c, cs_c, h_T, c_T
+
+        def macro(carry_m, m_idx):
+            h_state, c_state, out_prev = carry_m
+            k = m_idx - s_idx
+            act = (k >= 0) & (k < K)
+            kc = jnp.clip(k, 0, K - 1)
+            # Inter-stage handover: stage s-1's chunk from macro-step m-1.
+            handed = (out_prev if S == 1 else
+                      jax.lax.ppermute(out_prev, stage_axis, fwd_perm))
+            pre_chunk = jax.lax.dynamic_index_in_dim(pre_l, kc, 0,
+                                                     keepdims=False)
+            m_chunk = jax.lax.dynamic_index_in_dim(mask_l, kc, 0,
+                                                   keepdims=False) & act
+            below = handed
+            hs_slots, cs_slots, new_h, new_c = [], [], [], []
+            for i in range(Lb):
+                def run_slot(ops, i=i):
+                    below_i, h0f, c0b = ops
+                    # Chunk-hoisted input stream: this slot's W_in block
+                    # MACs the below trajectory, partials meeting in a psum
+                    # over "col" — one wide matmul per chunk instead of
+                    # per step.
+                    below_k = jax.lax.dynamic_slice(
+                        below_i, (0, 0, col * bk), (Tc, B, bk))
+                    pre_stream = jax.lax.psum(
+                        jnp.einsum('gnk,tbk->tbgn', w_in_l[i], below_k),
+                        col_axis)
+                    if i == 0:
+                        # Stage 0's first slot streams the hoisted pre_x
+                        # (its W_in block is zero, so the handed term
+                        # vanishes).
+                        pre_stream = pre_stream + jnp.where(s_idx == 0,
+                                                            pre_chunk, 0.0)
+                    return layer_chunk(w_h_l[i], peep_l[i], bias_l[i],
+                                       pre_stream, h0f, c0b, m_chunk)
+
+                def skip_slot(ops):
+                    # Fill/drain bubble or passthrough slot: hand the input
+                    # straight through, carry state untouched, no compute.
+                    # The emitted trajectory entries of a skipped macro-step
+                    # are never gathered (collection takes m = k + s only).
+                    below_i, h0f, c0b = ops
+                    return (below_i, jnp.zeros((Tc, B, bn), below_i.dtype),
+                            h0f, c0b)
+
+                # The predicate is uniform across the stage's (row, col)
+                # group — `act` depends only on the stage index and
+                # `live` is per-stage data — so the collectives inside the
+                # taken branch always match up within their groups.
+                hs_c, cs_c, h_T, c_T = jax.lax.cond(
+                    act & (live_l[i] > 0), run_slot, skip_slot,
+                    (below, h_state[i], c_state[i]))
+                below = hs_c
+                hs_slots.append(hs_c)
+                cs_slots.append(cs_c)
+                new_h.append(h_T)
+                new_c.append(c_T)
+            return ((jnp.stack(new_h), jnp.stack(new_c), below),
+                    (jnp.stack(hs_slots), jnp.stack(cs_slots)))
+
+        out0 = jnp.zeros((Tc, B, n_h_p), pre_l.dtype)
+        _, (hs_all, cs_all) = jax.lax.scan(
+            macro, (h0_l[0], c0_l[0], out0), jnp.arange(M))
+        return hs_all, cs_all
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(stage_axis, None, None, row_axis, col_axis),
+                  P(stage_axis, None, None, row_axis, col_axis),
+                  P(stage_axis, None, None, row_axis),
+                  P(stage_axis, None, None, row_axis),
+                  P(stage_axis, None, None, None),
+                  P(stage_axis, None, None, row_axis),
+                  P(stage_axis, None),
+                  P(None, None, None, None, row_axis),
+                  P(None, None, None)),
+        out_specs=(P(None, stage_axis, None, None, None),
+                   P(None, stage_axis, None, None, row_axis)),
+        check_vma=False,
+    )
+    hs_g, cs_g = fn(w_in_s, w_h_s, peep_s, bias_s, h0_s, c0_s, live,
+                    pre_p, mask_k)
+    hs_g = hs_g.reshape(M, S, Lb, Tc, B, n_h_p)
+    cs_g = cs_g.reshape(M, S, Lb, Tc, B, n_h_p)
+
+    def layer_traj(g, layer):
+        # Stage s emits chunk k at macro-step k + s: a pure re-indexing.
+        s_i, slot = _stage_of(blocks, layer)
+        return g[s_i:s_i + K, s_i, slot].reshape(T_p, B, n_h_p)[:T, :, :n_h]
+
+    hs = jnp.stack([layer_traj(hs_g, l) for l in range(L)])
+    cs = jnp.stack([layer_traj(cs_g, l) for l in range(L)])
+    return hs, cs
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def systolic_stack_seq_fused(static, w_in, w_h, peep, b, pre_x, h0s, c0s):
+    """Staged distributed whole-stack LSTM with the production training VJP.
+
+    Same contract as ``kernels.lstm_seq.stack_ops.lstm_stack_seq_fused``
+    (forward allclose to looping ``lstm_scan_fused`` over the layers;
+    backward composes the cross-layer gate recompute across stage
+    boundaries via the shared ``core.lstm.lstm_stack_bwd_recompute_gates``
+    — the saved trajectories are already stage-gathered, so the backward
+    is numerically identical to the single-engine fused stack's), but the
+    forward runs stage-pipelined on the ``static = (mesh, stage_axis,
+    row_axis, col_axis, chunk)`` grid.
+    """
+    hs, cs = _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s)
+    return hs[-1], (hs[:, -1], cs[:, -1])
+
+
+def _ssf_fwd(static, w_in, w_h, peep, b, pre_x, h0s, c0s):
+    hs, cs = _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s)
+    return ((hs[-1], (hs[:, -1], cs[:, -1])),
+            (w_in, w_h, peep, b, pre_x, hs, cs, h0s, c0s))
+
+
+def _ssf_bwd(static, res, grads):
+    from .lstm import lstm_stack_bwd_recompute_gates
+    w_in, w_h, peep, b, pre_x, hs, cs, h0s, c0s = res
+    return lstm_stack_bwd_recompute_gates(w_in, w_h, peep, b, pre_x, hs, cs,
+                                          h0s, c0s, grads)
+
+
+systolic_stack_seq_fused.defvjp(_ssf_fwd, _ssf_bwd)
+
+
+def systolic_lstm_stack_seq(params, mesh: Optional[Mesh], xs: jax.Array,
+                            states=None, *,
+                            valid_len: Optional[jax.Array] = None,
+                            chunk: Optional[int] = None,
+                            stage_axis: str = 'stage',
+                            row_axis: str = 'row', col_axis: str = 'col'
+                            ) -> Tuple[jax.Array, Tuple]:
+    """Staged scale-out of the fused wavefront stack — the
+    ``pallas_seq_fused_systolic`` backend (DESIGN.md §9).
+
+    Drop-in for the layer loop of ``core.lstm.lstm_stack_apply`` /
+    ``lstm_stack_chunk`` (same signature family as
+    ``kernels.lstm_seq.lstm_stack_seq``): each stage of the installed
+    ``(stage, row, col)`` mesh holds ONE contiguous layer block
+    weight-stationary (``stage_layer_blocks``; the paper's 3x(5x5) places
+    one layer per 5x5 stage) and runs the fused-stack composition over it
+    with the §6 row/col tile-stationary dataflow, while the hidden-state
+    sequence pipelines across stages in ``chunk``-step slices handed over
+    by ``ppermute`` — stage s computes chunk k while stage s+1 consumes
+    chunk k-1, so a T-step utterance costs ``ceil(T/chunk) + S - 1``
+    macro-steps of the bottleneck stage instead of every stage in
+    sequence.
+
+    Output allclose to the layerwise composition (``lstm_stack_apply`` on
+    any backend); differentiable via the cross-layer gate-recompute VJP
+    (``systolic_stack_seq_fused``).  ``valid_len`` follows the §7 masking
+    contract (masked steps are identity on every layer's carried state;
+    inference-only), and ``states`` carries the per-layer ``(h, c)`` for
+    chunked serving.  A ``None`` or all-1 mesh degenerates to the
+    single-engine §8 kernel (``lstm_stack_seq``) — the composition this
+    function scales out.  ``chunk`` defaults to ``ceil(T / (4*stages))``
+    (fill/drain stays under ~1/4 of macro-steps; chunk=1 is the paper's
+    frame-by-frame handover).
+    """
+    from ..kernels.lstm_seq import lstm_stack_seq, stack_fused_compatible
+    assert stack_fused_compatible(params), \
+        'staged scale-out needs homogeneous hidden widths'
+    assert xs.ndim == 3, 'systolic_lstm_stack_seq expects (T, B, N_x) input'
+    if mesh is None or all(sz == 1 for sz in mesh.shape.values()):
+        return lstm_stack_seq(params, xs, states, valid_len=valid_len)
+    S, _, _ = _require_staged_axes(mesh, stage_axis, row_axis, col_axis)
+    layers = params.layers
+    n_h = layers[0].n_h
+    T, B = xs.shape[0], xs.shape[1]
+    Tc = _staged_schedule(len(layers), T, S, chunk)[0]
+
+    from ..kernels.lstm_seq.stack_ops import _stack_arrays
+    from .lstm import stack_carry_arrays
+    w_in, w_h, peep, b = _stack_arrays(params)
+    pre_x = jnp.einsum('ghx,tbx->tbgh', layers[0].w_x, xs)    # hoisted
+
+    h0s, c0s = stack_carry_arrays(states, len(layers), B, n_h, xs.dtype)
+    static = (mesh, stage_axis, row_axis, col_axis, Tc)
+    if valid_len is not None:
+        from .lstm import valid_len_mask
+        mask = valid_len_mask(T, valid_len, B)
+        hs, cs = _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s,
+                                 c0s, mask)
+        ys, h_T, c_T = hs[-1], hs[:, -1], cs[:, -1]
+    else:
+        ys, (h_T, c_T) = systolic_stack_seq_fused(static, w_in, w_h, peep,
+                                                  b, pre_x, h0s, c0s)
+    finals = tuple((h_T[l], c_T[l]) for l in range(len(layers)))
+    return ys, finals
+
+
+def systolic_lstm_stack_seq_quantized(qps, mesh: Optional[Mesh],
+                                      xs_q: jax.Array, *,
+                                      state=None,
+                                      valid_len: Optional[jax.Array] = None,
+                                      return_state: bool = False,
+                                      chunk: Optional[int] = None,
+                                      stage_axis: str = 'stage',
+                                      row_axis: str = 'row',
+                                      col_axis: str = 'col'):
+    """Staged distributed int8 stack, bit-identical to the silicon chain.
+
+    The int8 form of ``systolic_lstm_stack_seq``: same stage placement and
+    chunk pipelining, but every step replays the engine-order saturating
+    datapath — each layer's below/x-region prefix of the hop chain is
+    h-independent within the chunk and folds through the shared
+    ``_x_prefix_fold`` (layer 0's whole-sequence prefix comes from
+    ``quantized_x_prefix``, exactly as in §6/§8), the own-h region tile
+    partials are ``all_gather``ed over ``col`` and hopped sequentially in
+    engine order, and the elementwise tail is the shared
+    ``_quantized_state_update``.  Output is therefore **bit-identical** to
+    chaining the single-engine fused stack
+    (``kernels.lstm_seq.lstm_stack_seq_quantized``) — and hence to
+    chaining ``lstm_layer_seq_quantized`` / the reference
+    ``systolic_cell_quantized`` scan — per layer block.
+
+    qps: per-layer quantized packs (one tile, one hidden width, inner
+    ``n_x == n_h``); xs_q: (T, B, n_x) int8 codes.  ``state`` /
+    ``valid_len`` / ``return_state`` follow the §7 chunk-carry contract of
+    ``lstm_stack_seq_quantized`` verbatim (opaque per-layer
+    ``(h_q, c_q)`` codes, each (L, B, padded_h); masked steps are pure
+    selects on the carried codes), so the staged mesh, the single-engine
+    fused stack and the streaming engine can hand state to each other
+    mid-sequence.  Requires ``plan.rows % mesh rows == 0`` and
+    ``plan.cols_h % mesh cols == 0``; a ``None``/all-1 mesh degenerates to
+    the single-engine fused stack.
+    """
+    from ..kernels.lstm_seq import lstm_stack_seq_quantized
+    if mesh is None or all(sz == 1 for sz in mesh.shape.values()):
+        return lstm_stack_seq_quantized(qps, xs_q, state=state,
+                                        valid_len=valid_len,
+                                        return_state=return_state)
+    plans = [qp.plan for qp in qps]
+    p0 = plans[0]
+    L = len(qps)
+    assert L >= 1
+    assert all(p.tile == p0.tile for p in plans), 'mixed tiles'
+    assert all(p.n_h == p0.n_h for p in plans), 'mixed hidden widths'
+    assert all(p.n_x == p0.n_h for p in plans[1:]), \
+        'inner layers must consume the stack hidden width'
+    S, mr, mc = _require_staged_axes(mesh, stage_axis, row_axis, col_axis)
+    t, R, c_h, padded_h = p0.tile, p0.rows, p0.cols_h, p0.padded_h
+    if R % mr or c_h % mc:
+        raise ValueError(f'engine grid {R}x{c_h} (h-region) does not divide '
+                         f'mesh {mr}x{mc}')
+    r_l, c_l = R // mr, c_h // mc
+    assert xs_q.ndim == 3, \
+        'systolic_lstm_stack_seq_quantized expects (T, B, n_x)'
+    T, B = xs_q.shape[0], xs_q.shape[1]
+    Tc, K, T_p, M, blocks, Lb = _staged_schedule(L, T, S, chunk)
+
+    # Resident weights: own-h region tiles sharded (row, col); below/x
+    # region tiles row-sharded (each row device folds its own prefix).
+    # Layer 0's below slot is zero — its whole-sequence x prefix is
+    # hoisted host-side through the one shared implementation.
+    own_s = _stage_stack(
+        jnp.stack([qp.tiles_q[:, p.cols_x:] for qp, p in zip(qps, plans)]),
+        blocks, S, Lb)
+    below_all = [jnp.zeros((R, c_h, GATES, t, t), jnp.int8)]
+    for qp, p in zip(qps[1:], plans[1:]):
+        below_all.append(qp.tiles_q[:, :p.cols_x])
+    below_s = _stage_stack(jnp.stack(below_all), blocks, S, Lb)
+    peep_s = _stage_stack(jnp.stack([qp.peep_q for qp in qps]), blocks, S, Lb)
+    bias_s = _stage_stack(jnp.stack([qp.bias_q for qp in qps]), blocks, S, Lb)
+
+    xs_flat = jnp.zeros((T_p, B, p0.n_x), jnp.int8).at[:T].set(xs_q)
+    acc_x = quantized_x_prefix(qps[0], xs_flat).reshape(K, Tc, B, R, GATES, t)
+
+    if state is None:
+        h0 = jnp.zeros((L, B, padded_h), jnp.int8)
+        c0 = jnp.zeros((L, B, padded_h), jnp.int8)
+    else:
+        h0 = state[0].reshape(L, B, padded_h)
+        c0 = state[1].reshape(L, B, padded_h)
+    h0_s = _stage_stack(h0, blocks, S, Lb)
+    c0_s = _stage_stack(c0.reshape(L, B, R, t), blocks, S, Lb)
+    if valid_len is None:
+        mask = jnp.ones((T, B), jnp.int8)
+    else:
+        from .lstm import valid_len_mask
+        mask = valid_len_mask(T, valid_len, B).astype(jnp.int8)
+    mask_k = jnp.zeros((T_p, B), jnp.int8).at[:T].set(mask).reshape(K, Tc, B)
+    live = _stage_live(blocks, S, Lb)
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+
+    def body(own_l, below_l, peep_l, bias_l, sig_lut, tanh_lut, accx_l,
+             h0_l, c0_l, live_l, mask_l):
+        """SPMD body on device (s, r, c): own_l (1, Lb, r_l, c_l, 4, t, t)
+        stationary for the whole utterance; below_l (1, Lb, r_l, c_h, 4,
+        t, t) feeds the per-chunk prefix fold; accx_l (K, Tc, B, r_l, 4,
+        t) is layer 0's hoisted x prefix for this row block."""
+        s_idx = jax.lax.axis_index(stage_axis)
+        col = jax.lax.axis_index(col_axis)
+        own_l, below_l = own_l[0], below_l[0]
+        peep32 = peep_l[0].astype(jnp.int32)
+        bias32 = bias_l[0].astype(jnp.int32)
+        live_l = live_l[0]
+
+        def hop(acc, p):
+            return _sat16(acc + p), None
+
+        def layer_chunk(own_i, peep_i, bias_i, acc_chunk, h0f, c0b,
+                        m_chunk):
+            def step(carry_i, inp):
+                h_full, c_blk = carry_i
+                acc_t, m = inp
+                h_cols = jax.lax.dynamic_slice(
+                    h_full, (0, col * (c_l * t)),
+                    (B, c_l * t)).reshape(B, c_l, t)
+                parts = _sat16(jnp.einsum('rlgij,blj->lbrgi',
+                                          own_i.astype(jnp.int32),
+                                          h_cols.astype(jnp.int32)))
+                # Engine-order hop replay from the below-region prefix.
+                parts_all = jax.lax.all_gather(parts, col_axis, axis=0,
+                                               tiled=True)
+                pre_acc, _ = jax.lax.scan(hop, acc_t, parts_all)
+                h8, c8 = _quantized_state_update(
+                    pre_acc, c_blk.astype(jnp.int32), peep_i, bias_i,
+                    sig_lut[0], tanh_lut[0])
+                h_full_new = jax.lax.all_gather(
+                    h8.reshape(B, r_l * t), row_axis, axis=1, tiled=True)
+                # Masked step = identity on the carried codes (pure select).
+                live_step = (m > 0)[:, None]
+                h_full_new = jnp.where(live_step, h_full_new, h_full)
+                c8 = jnp.where(live_step[:, :, None], c8, c_blk)
+                return (h_full_new, c8), (h_full_new, c8)
+
+            (h_T, c_T), (hs_c, cs_c) = jax.lax.scan(step, (h0f, c0b),
+                                                    (acc_chunk, m_chunk))
+            return hs_c, cs_c, h_T, c_T
+
+        def macro(carry_m, m_idx):
+            h_state, c_state, out_prev = carry_m
+            k = m_idx - s_idx
+            act = (k >= 0) & (k < K)
+            kc = jnp.clip(k, 0, K - 1)
+            handed = (out_prev if S == 1 else
+                      jax.lax.ppermute(out_prev, stage_axis, fwd_perm))
+            accx_chunk = jax.lax.dynamic_index_in_dim(accx_l, kc, 0,
+                                                      keepdims=False)
+            m_chunk = jnp.where(
+                act, jax.lax.dynamic_index_in_dim(mask_l, kc, 0,
+                                                  keepdims=False),
+                jnp.int8(0))
+            below = handed
+            hs_slots, cs_slots, new_h, new_c = [], [], [], []
+            for i in range(Lb):
+                def run_slot(ops, i=i):
+                    below_i, h0f, c0b = ops
+                    # Chunk-hoisted below/x-region prefix: h-independent
+                    # within the step, so it folds once per chunk (the
+                    # shared saturation/hop order of _x_prefix_fold —
+                    # bit-identical to folding inside the step loop).
+                    below_cols = below_i.reshape(Tc, B, c_h, t)
+                    acc_chunk = _x_prefix_fold(below_l[i], below_cols)
+                    if i == 0:
+                        acc_chunk = acc_chunk + jnp.where(s_idx == 0,
+                                                          accx_chunk, 0)
+                    return layer_chunk(own_l[i], peep32[i], bias32[i],
+                                       acc_chunk, h0f, c0b, m_chunk)
+
+                def skip_slot(ops):
+                    # Fill/drain bubble or passthrough slot: hand the input
+                    # through, carry codes untouched, no compute (the
+                    # emitted entries of a skipped macro-step are never
+                    # gathered).
+                    below_i, h0f, c0b = ops
+                    return (below_i,
+                            jnp.zeros((Tc, B, r_l, t), jnp.int8),
+                            h0f, c0b)
+
+                # Stage-uniform predicate, as in the f32 body: every
+                # device of a stage's (row, col) collective groups takes
+                # the same branch.
+                hs_c, cs_c, h_T, c_T = jax.lax.cond(
+                    act & (live_l[i] > 0), run_slot, skip_slot,
+                    (below, h_state[i], c_state[i]))
+                below = hs_c
+                hs_slots.append(hs_c)
+                cs_slots.append(cs_c.reshape(Tc, B, r_l * t))
+                new_h.append(h_T)
+                new_c.append(c_T)
+            return ((jnp.stack(new_h), jnp.stack(new_c), below),
+                    (jnp.stack(hs_slots), jnp.stack(cs_slots)))
+
+        out0 = jnp.zeros((Tc, B, R * t), jnp.int8)
+        _, (hs_all, cs_all) = jax.lax.scan(
+            macro, (h0_l[0], c0_l[0], out0), jnp.arange(M))
+        return hs_all, cs_all
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(stage_axis, None, row_axis, col_axis),
+                  P(stage_axis, None, row_axis),
+                  P(stage_axis, None, row_axis),
+                  P(stage_axis, None, row_axis),
+                  P(None), P(None),
+                  P(None, None, None, row_axis),
+                  P(stage_axis),
+                  P(stage_axis, None, None, row_axis),
+                  P(stage_axis),
+                  P(None)),
+        out_specs=(P(None, stage_axis),
+                   P(None, stage_axis, None, None, row_axis)),
+        check_vma=False,
+    )
+    hs_g, cs_g = fn(own_s, below_s, peep_s, bias_s,
+                    qps[0].sig_lut.reshape(1, 256),
+                    qps[0].tanh_lut.reshape(1, 256),
+                    acc_x, h0_s, c0_s, live, mask_k)
+    hs_g = hs_g.reshape(M, S, Lb, Tc, B, padded_h)
+    cs_g = cs_g.reshape(M, S, Lb, Tc, B, padded_h)
+
+    def layer_traj(g, layer):
+        s_i, slot = _stage_of(blocks, layer)
+        return g[s_i:s_i + K, s_i, slot].reshape(T_p, B, padded_h)[:T]
+
+    out = layer_traj(hs_g, L - 1)[:, :, :p0.n_h]
+    if not return_state:
+        return out
+    h_q = jnp.stack([layer_traj(hs_g, l)[-1] for l in range(L)])
+    c_q = jnp.stack([layer_traj(cs_g, l)[-1] for l in range(L)])
+    return out, (h_q, c_q)

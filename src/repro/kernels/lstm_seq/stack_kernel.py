@@ -56,10 +56,16 @@ saturating-hop prefix is precomputed per step (bit-identical hoisting, as in
 ``systolic_lstm_seq_quantized``), inner layers consume the layer-below int8
 ``h`` codes from scratch as their x-region columns — exactly the codes the
 layerwise composition would round-trip through HBM — so the fused stack is
-bit-identical to chaining the layerwise kernel.  Its grid keeps one layer
-per step (``(NB, D, L, R, C)`` — the saturating hop replay is serial per
-layer; batching its diagonals like the f32 kernel is a ROADMAP item), with
-the same wavefront diagonals, scratch handover, and bubble discipline.
+bit-identical to chaining the layerwise kernel.  Like the f32 kernel, each
+diagonal's layers execute TOGETHER: grid ``(NB, D, R, C)`` with one L-wide
+batched ``dot_general`` per hop position — different layers' hop chains are
+independent, so batching across layers never reorders any single chain's
+saturations, while the serial hop replay stays per-layer inside each
+accumulator row — and outputs written diagonal-major exactly as in f32
+(bubbles outside each layer's band flush defined data, never gathered).
+Cutting the grid from ``D·L·R·C`` to ``D·R·C`` steps removes the dominant
+per-grid-step cost of interpret-mode emulation (and L launches' worth of
+grid sequencing on hardware).
 """
 from __future__ import annotations
 
@@ -258,108 +264,117 @@ def lstm_stack_seq_kernel(pre_x: jax.Array, w_in: jax.Array, w_h: jax.Array,
 
 def _stack_kernel_q(accx_ref, w_ref, peep_ref, bias_ref, sig_ref, tanh_ref,
                     h0_ref, c0_ref, mask_ref, hs_ref, cs_ref, h_scr, c_scr,
-                    acc_ref, *, T: int, cols_h: int, tile: int):
-    # Grid (NB, D, L, R, C): wavefront diagonals and layers as in the f32
-    # kernel; R row blocks, C = 2*cols_h column hops (below-h region then
-    # own-h region; layer 0's x-region prefix is hoisted into accx).
+                    acc_ref, *, T: int, L: int, cols_h: int, tile: int):
+    # Grid (NB, D, R, C): wavefront diagonals with EVERY layer batched per
+    # grid step, as in the f32 kernel — R row blocks, C = 2*cols_h column
+    # hops (below-h region then own-h region; layer 0's x-region prefix is
+    # hoisted into accx and its below-region weight columns are zero, so
+    # those hops are exact no-ops on its accumulator row).  The saturating
+    # hop chains of different layers are independent, so the L-wide batched
+    # MAC never reorders any single chain's saturations.
     d = pl.program_id(1)
-    l = pl.program_id(2)
-    r = pl.program_id(3)
-    c = pl.program_id(4)
-    t = d - l
-    active = (t >= 0) & (t < T)
-    tc = jnp.clip(t, 0, T - 1)
+    r = pl.program_id(2)
+    c = pl.program_id(3)
     n_c = 2 * cols_h
-    # Layer 0 has no below-layer region: only the own-h hops are live, and
-    # its saturating chain starts from the hoisted x-prefix accumulator.
-    col_live = active & ((l > 0) | (c >= cols_h))
 
     @pl.when((d == 0) & (r == 0) & (c == 0))
     def _load_state():
-        h_scr[l, 0] = h0_ref[0]
-        c_scr[l] = c0_ref[0]
+        # Both parity slots start defined (the below-layer column read
+        # touches the off-parity slot of layer l-1 before it is first
+        # written; bubbles discard the value, but the read must not touch
+        # undefined memory).
+        h_scr[:, 0] = h0_ref[...]
+        h_scr[:, 1] = h0_ref[...]
+        c_scr[...] = c0_ref[...]
 
-    @pl.when(active & (c == 0) & (l > 0))
+    @pl.when(c == 0)
     def _zero_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(active & (c == cols_h) & (l == 0))
+    @pl.when(c == cols_h)
     def _load_x_prefix():
         # Layer 0 resumes the saturating hop chain from the precomputed
-        # x-region prefix (bit-identical hoisting, as in the §6 scale-out).
-        acc_ref[...] = accx_ref[0, :, 0]
+        # x-region prefix (bit-identical hoisting, as in the §6 scale-out);
+        # its below-region hops left the row at exactly zero.
+        acc_ref[0] = accx_ref[0, :, 0]
 
-    @pl.when(col_live)
-    def _mac_hop():
-        # Column input: below-h region columns read the layer below's h_t
-        # codes (the chip's inter-column handover — the codes the layerwise
-        # composition would stream from HBM); own-h region columns read this
-        # layer's resident h_{t-1}.
-        below = (l > 0) & (c < cols_h)
-        off_b = jnp.clip(c, 0, cols_h - 1) * tile
-        below_col = h_scr[jnp.maximum(l - 1, 0), (tc + 1) % 2,
-                          :, pl.ds(off_b, tile)]
-        off_o = jnp.clip(c - cols_h, 0, cols_h - 1) * tile
+    # Batched tile MAC: stack every layer's column input for this hop
+    # position — below-h region columns read the layer below's h_t codes
+    # (the chip's inter-column handover), own-h region columns this layer's
+    # resident h_{t-1} — then ONE L-wide dot_general in int32 (exact),
+    # saturated to the 16-bit value an engine hands to its row neighbour,
+    # then the hop.
+    off_b = jnp.clip(c, 0, cols_h - 1) * tile
+    off_o = jnp.clip(c - cols_h, 0, cols_h - 1) * tile
+    is_below = c < cols_h
+    cols = []
+    for l in range(L):
+        tc = jnp.clip(d - l, 0, T - 1)
+        below_col = h_scr[max(l - 1, 0), (tc + 1) % 2, :, pl.ds(off_b, tile)]
         own_col = h_scr[l, tc % 2, :, pl.ds(off_o, tile)]
-        col_in = jnp.where(below, below_col, own_col).astype(jnp.int32)
-        # Fused 4-gate tile MAC in int32 (exact), saturated to the 16-bit
-        # value an engine hands to its row neighbour, then the hop.
-        w_blk = w_ref[l, pl.ds(c * tile, tile), :, pl.ds(r * tile, tile)]
-        partial = _sat16(jax.lax.dot_general(
-            col_in, w_blk.astype(jnp.int32).reshape(tile, 4 * tile),
-            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32,
-        ).reshape(col_in.shape[0], 4, tile))
-        acc_ref[...] = _sat16(acc_ref[...] + partial)
+        cols.append(jnp.where(is_below, below_col, own_col))
+    col_in = jnp.stack(cols).astype(jnp.int32)              # (L, bb, tile)
+    w_blk = w_ref[:, pl.ds(c * tile, tile), :, pl.ds(r * tile, tile)]
+    partial = _sat16(jax.lax.dot_general(
+        col_in, w_blk.astype(jnp.int32).reshape(L, tile, 4 * tile),
+        (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.int32,
+    ).reshape(L, col_in.shape[1], 4, tile))
+    acc_ref[...] = _sat16(acc_ref[...] + partial)
 
-    @pl.when(active & (c == n_c - 1))
+    @pl.when(c == n_c - 1)
     def _elementwise():
         sl = pl.ds(r * tile, tile)
-        c_prev32 = c_scr[l, :, sl].astype(jnp.int32)
-        peep32 = peep_ref[l, :, sl].astype(jnp.int32)
-        bias32 = bias_ref[l, :, sl].astype(jnp.int32)
         sig_lut = sig_ref[0]
         tanh_lut = tanh_ref[0]
         shift8 = ACC_FMT.frac_bits - quant.STATE_FMT.frac_bits
+        for l in range(L):
+            t = d - l
+            act = (t >= 0) & (t < T)
+            tc = jnp.clip(t, 0, T - 1)
+            c_prev32 = c_scr[l, :, sl].astype(jnp.int32)
+            peep32 = peep_ref[l, :, sl].astype(jnp.int32)
+            bias32 = bias_ref[l, :, sl].astype(jnp.int32)
+            acc_l = acc_ref[l]
 
-        def gate(idx, peep_idx, c_term, lut):
-            a = acc_ref[...][:, idx, :] + bias32[idx]
-            if peep_idx is not None:
-                a = a + peep32[peep_idx] * c_term
-            a = _sat16(a)
-            a8 = jnp.clip(_rshift_round(a, shift8), -128, 127)
-            return quant.apply_lut(lut, a8, quant.STATE_FMT).astype(jnp.int32)
+            def gate(idx, peep_idx, c_term, lut):
+                a = acc_l[:, idx, :] + bias32[idx]
+                if peep_idx is not None:
+                    a = a + peep32[peep_idx] * c_term
+                a = _sat16(a)
+                a8 = jnp.clip(_rshift_round(a, shift8), -128, 127)
+                return quant.apply_lut(lut, a8,
+                                       quant.STATE_FMT).astype(jnp.int32)
 
-        i = gate(0, 0, c_prev32, sig_lut)
-        f = gate(1, 1, c_prev32, sig_lut)
-        g = gate(2, None, None, tanh_lut)
-        fc = f * c_prev32                        # Q0.7 * Q2.5 -> frac 12
-        ig = _rshift_round(i * g, 2)             # frac 14 -> 12
-        c_new = _sat16(fc + ig)                  # Q3.12
-        c_new8 = jnp.clip(
-            _rshift_round(c_new,
-                          CELL_FMT.frac_bits - quant.STATE_FMT.frac_bits),
-            -128, 127)
-        o = gate(3, 2, c_new8, sig_lut)
-        tanh_c = quant.apply_lut(tanh_lut, c_new8,
-                                 quant.STATE_FMT).astype(jnp.int32)
-        h_new = _rshift_round(o * tanh_c, 14 - quant.STATE_FMT.frac_bits)
-        h8 = jnp.clip(h_new, -128, 127).astype(jnp.int8)
+            i = gate(0, 0, c_prev32, sig_lut)
+            f = gate(1, 1, c_prev32, sig_lut)
+            g = gate(2, None, None, tanh_lut)
+            fc = f * c_prev32                    # Q0.7 * Q2.5 -> frac 12
+            ig = _rshift_round(i * g, 2)         # frac 14 -> 12
+            c_new = _sat16(fc + ig)              # Q3.12
+            c_new8 = jnp.clip(
+                _rshift_round(c_new,
+                              CELL_FMT.frac_bits - quant.STATE_FMT.frac_bits),
+                -128, 127)
+            o = gate(3, 2, c_new8, sig_lut)
+            tanh_c = quant.apply_lut(tanh_lut, c_new8,
+                                     quant.STATE_FMT).astype(jnp.int32)
+            h_new = _rshift_round(o * tanh_c, 14 - quant.STATE_FMT.frac_bits)
+            h_new8 = jnp.clip(h_new, -128, 127).astype(jnp.int8)
 
-        # Masked step = identity on the resident codes (pure select).
-        m = (mask_ref[0] > 0)[:, None]
-        h8 = jnp.where(m, h8, h_scr[l, tc % 2, :, sl])
-        c8 = jnp.where(m, c_new8.astype(jnp.int8), c_scr[l, :, sl])
-
-        h_scr[l, (tc + 1) % 2, :, sl] = h8
-        c_scr[l, :, sl] = c8
-        hs_ref[0, 0] = h8
-        cs_ref[0, 0] = c8
-
-    @pl.when((~active) & (c == n_c - 1))
-    def _bubble_emit():
-        sl = pl.ds(r * tile, tile)
-        hs_ref[0, 0] = h_scr[l, (tc + 1) % 2, :, sl]
-        cs_ref[0, 0] = c_scr[l, :, sl]
+            # Masked step / wavefront bubble = identity on the resident
+            # codes (pure select), with the same write-slot discipline as
+            # the f32 kernel: a masked LIVE step re-emits the carried
+            # h_{t-1} (slot t%2), a bubble is identity on its WRITE slot.
+            m = act & (mask_ref[tc] > 0)
+            live = m[:, None]
+            keep_h = jnp.where(act, h_scr[l, tc % 2, :, sl],
+                               h_scr[l, (tc + 1) % 2, :, sl])
+            h8 = jnp.where(live, h_new8, keep_h)
+            c8 = jnp.where(live, c_new8.astype(jnp.int8), c_scr[l, :, sl])
+            h_scr[l, (tc + 1) % 2, :, sl] = h8
+            c_scr[l, :, sl] = c8
+            hs_ref[0, l] = h8
+            cs_ref[0, l] = c8
 
 
 @functools.partial(jax.jit, static_argnames=('tile', 'cols_h', 'bb',
@@ -384,9 +399,13 @@ def lstm_stack_seq_kernel_q(acc_x: jax.Array, w: jax.Array, peep: jax.Array,
     mask shared by all layers (a masked step carries every layer's codes
     through unchanged; ``None`` is bit-identical to all-ones).
 
-    Returns (hs, cs), each (L, T, B, padded_h) int8 — bit-identical, layer
-    by layer, to chaining ``kernel.lstm_seq_quantized`` with each layer's
-    hidden codes fed as the next layer's input codes.
+    Returns (hs, cs) in DIAGONAL-major layout like the f32 kernel, each
+    (D, L, B, padded_h) int8 with ``D = T + L - 1``: ``hs[d, l]`` is layer
+    ``l``'s step ``d - l``; entries outside each layer's ``[l, l + T)``
+    band are don't-care bubble flushes.  After the ops wrapper's
+    re-indexing the codes are bit-identical, layer by layer, to chaining
+    ``kernel.lstm_seq_quantized`` with each layer's hidden codes fed as
+    the next layer's input codes.
     """
     T, b = acc_x.shape[0], acc_x.shape[1]
     L = w.shape[0]
@@ -399,39 +418,38 @@ def lstm_stack_seq_kernel_q(acc_x: jax.Array, w: jax.Array, peep: jax.Array,
     R = padded_h // tile
     D = T + L - 1
 
-    def t_c(d, l):
-        return jnp.clip(d - l, 0, T - 1)
-
     return pl.pallas_call(
-        functools.partial(_stack_kernel_q, T=T, cols_h=cols_h, tile=tile),
-        grid=(b // bb, D, L, R, 2 * cols_h),
+        functools.partial(_stack_kernel_q, T=T, L=L, cols_h=cols_h,
+                          tile=tile),
+        grid=(b // bb, D, R, 2 * cols_h),
         in_specs=[
             pl.BlockSpec((1, bb, 1, 4, tile),
-                         lambda nb, d, l, r, c: (t_c(d, l), nb, r, 0, 0)),
+                         lambda nb, d, r, c: (jnp.clip(d, 0, T - 1),
+                                              nb, r, 0, 0)),
             pl.BlockSpec((L, 2 * cols_h * tile, 4, padded_h),
-                         lambda nb, d, l, r, c: (0, 0, 0, 0)),
-            pl.BlockSpec((L, 3, padded_h), lambda nb, d, l, r, c: (0, 0, 0)),
-            pl.BlockSpec((L, 4, padded_h), lambda nb, d, l, r, c: (0, 0, 0)),
-            pl.BlockSpec((1, 256), lambda nb, d, l, r, c: (0, 0)),
-            pl.BlockSpec((1, 256), lambda nb, d, l, r, c: (0, 0)),
-            pl.BlockSpec((1, bb, padded_h), lambda nb, d, l, r, c: (l, nb, 0)),
-            pl.BlockSpec((1, bb, padded_h), lambda nb, d, l, r, c: (l, nb, 0)),
-            pl.BlockSpec((1, bb), lambda nb, d, l, r, c: (t_c(d, l), nb)),
+                         lambda nb, d, r, c: (0, 0, 0, 0)),
+            pl.BlockSpec((L, 3, padded_h), lambda nb, d, r, c: (0, 0, 0)),
+            pl.BlockSpec((L, 4, padded_h), lambda nb, d, r, c: (0, 0, 0)),
+            pl.BlockSpec((1, 256), lambda nb, d, r, c: (0, 0)),
+            pl.BlockSpec((1, 256), lambda nb, d, r, c: (0, 0)),
+            pl.BlockSpec((L, bb, padded_h), lambda nb, d, r, c: (0, nb, 0)),
+            pl.BlockSpec((L, bb, padded_h), lambda nb, d, r, c: (0, nb, 0)),
+            pl.BlockSpec((T, bb), lambda nb, d, r, c: (0, nb)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, bb, tile),
-                         lambda nb, d, l, r, c: (l, t_c(d, l), nb, r)),
-            pl.BlockSpec((1, 1, bb, tile),
-                         lambda nb, d, l, r, c: (l, t_c(d, l), nb, r)),
+            pl.BlockSpec((1, L, bb, tile),
+                         lambda nb, d, r, c: (d, 0, nb, r)),
+            pl.BlockSpec((1, L, bb, tile),
+                         lambda nb, d, r, c: (d, 0, nb, r)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((L, T, b, padded_h), jnp.int8),
-            jax.ShapeDtypeStruct((L, T, b, padded_h), jnp.int8),
+            jax.ShapeDtypeStruct((D, L, b, padded_h), jnp.int8),
+            jax.ShapeDtypeStruct((D, L, b, padded_h), jnp.int8),
         ],
         scratch_shapes=[
             pltpu.VMEM((L, 2, bb, padded_h), jnp.int8),  # h codes, t parity
             pltpu.VMEM((L, bb, padded_h), jnp.int8),     # c codes
-            pltpu.VMEM((bb, 4, tile), jnp.int32),        # saturating acc
+            pltpu.VMEM((L, bb, 4, tile), jnp.int32),     # saturating accs
         ],
         interpret=interpret,
     )(acc_x, w, peep, bias, sig_lut, tanh_lut, h0, c0, mask)

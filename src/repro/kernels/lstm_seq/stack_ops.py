@@ -21,7 +21,8 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from ...core.lstm import (GATES, LSTMStackParams, lstm_bwd_recompute_gates,
+from ...core.lstm import (GATES, LSTMStackParams,
+                          lstm_stack_bwd_recompute_gates, stack_carry_arrays,
                           valid_len_mask)
 from ...core.systolic import QuantizedPackedLSTM, quantized_x_prefix
 from .._padding import pad_axis_to as _pad_to, round_up as _round_up
@@ -135,34 +136,11 @@ def _stack_fwd(cfg, w_in, w_h, peep, b, pre_x, h0s, c0s):
 
 
 def _stack_bwd(cfg, res, grads):
+    # Cross-layer gate recompute lives in core.lstm so the staged systolic
+    # scale-out's VJP (core.systolic) composes the identical backward.
     w_in, w_h, peep, b, pre_x, hs, cs, h0s, c0s = res
-    d_ys, (d_hT, d_cT) = grads
-    L = w_h.shape[0]
-    dw_in, dw_h, d_peep, db, dh0, dc0 = [], [], [], [], [], []
-    d_hs = d_ys                     # cotangent flowing into the top layer
-    d_pre_x0 = None
-    for l in range(L - 1, -1, -1):
-        # Recompute the layer's hoisted input stream from the saved
-        # trajectory below it (layer 0's was a primal input).
-        pre_l = pre_x if l == 0 else jnp.einsum('ghx,tbx->tbgh',
-                                                w_in[l], hs[l - 1])
-        dwh, dp, dbias, dpre, dh, dc = lstm_bwd_recompute_gates(
-            w_h[l], peep[l], b[l], pre_l, hs[l], cs[l], h0s[l], c0s[l],
-            (d_hs, (d_hT[l], d_cT[l])))
-        dw_h.append(dwh)
-        d_peep.append(dp)
-        db.append(dbias)
-        dh0.append(dh)
-        dc0.append(dc)
-        if l > 0:
-            dw_in.append(jnp.einsum('tbgh,tbx->ghx', dpre, hs[l - 1]))
-            d_hs = jnp.einsum('ghx,tbgh->tbx', w_in[l], dpre)
-        else:
-            dw_in.append(jnp.zeros_like(w_in[0]))
-            d_pre_x0 = dpre
-    stack = lambda xs: jnp.stack(xs[::-1])
-    return (stack(dw_in), stack(dw_h), stack(d_peep), stack(db),
-            d_pre_x0, stack(dh0), stack(dc0))
+    return lstm_stack_bwd_recompute_gates(w_in, w_h, peep, b, pre_x, hs, cs,
+                                          h0s, c0s, grads)
 
 
 lstm_stack_seq_fused.defvjp(_stack_fwd, _stack_bwd)
@@ -223,18 +201,7 @@ def lstm_stack_seq(params: LSTMStackParams, xs: jax.Array,
     w_in, w_h, peep, b = _stack_arrays(params)
     pre_x = jnp.einsum('ghx,tbx->tbgh', layers[0].w_x, xs)    # hoisted
 
-    def carry(part):
-        # Per-layer defaulting, matching the layerwise loop exactly: a
-        # missing entry zeroes THAT layer's carry only, never its
-        # neighbours' (backends must stay numerically interchangeable).
-        zeros = jnp.zeros((B, n_h), xs.dtype)
-        def one(l):
-            s = None if states is None else states[l]
-            v = None if s is None else s[part]
-            return zeros if v is None else v
-        return jnp.stack([one(l) for l in range(len(layers))])
-
-    h0s, c0s = carry(0), carry(1)
+    h0s, c0s = stack_carry_arrays(states, len(layers), B, n_h, xs.dtype)
     assert lb is None or len(layers) % lb == 0, (len(layers), lb)
     cfg = (bn, bk, bb, lb, bool(interpret))
 
@@ -327,11 +294,16 @@ def lstm_stack_seq_quantized(qps: Sequence[QuantizedPackedLSTM],
         mask = jnp.zeros((T, b_p), jnp.int8).at[:, :B].set(
             valid_len_mask(T, valid_len, B).astype(jnp.int8))
 
-    hs, cs = lstm_stack_seq_kernel_q(
+    hs_d, cs_d = lstm_stack_seq_kernel_q(
         acc_x, w_all, peep_all, bias_all,
         qps[0].sig_lut.reshape(1, 256), qps[0].tanh_lut.reshape(1, 256),
         h0, c0, mask, tile=tile, cols_h=cols_h, bb=bb,
         interpret=bool(interpret))
+    # Diagonal-major -> layer-major, exactly as in the f32 wrapper: layer
+    # l's trajectory is its diagonal band hs_d[l:l+T, l] (pure re-indexing;
+    # bubble entries are dropped).
+    hs = jnp.stack([hs_d[l:l + T, l] for l in range(L)])
+    cs = jnp.stack([cs_d[l:l + T, l] for l in range(L)])
     out = hs[-1, :, :B, :p0.n_h]
     if not return_state:
         return out

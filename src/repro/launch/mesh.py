@@ -26,15 +26,19 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 # ---------------------------------------------------------------------------
-# Systolic topology presets (DESIGN.md §6)
+# Systolic topology presets (DESIGN.md §6 and §9)
 # ---------------------------------------------------------------------------
 # name -> (stage, rows, cols) engine grids from the paper's scaling study.
-# ``stage > 1`` presets drive the layer pipeline (core/pipeline.py, ppermute
-# between stages); ``stage == 1`` presets drive the persistent scale-out
-# kernel (core/systolic.systolic_lstm_seq).  'graves-75' is the 75-tile
-# 3x(5x5) configuration that runs the Graves phoneme topology in real time
-# (paper Sec. 4.2) — emulated with host devices via
-# XLA_FLAGS=--xla_force_host_platform_device_count=75.
+# ``stage == 1`` presets drive the persistent scale-out kernel
+# (core/systolic.systolic_lstm_seq); ``stage > 1`` presets drive the STAGED
+# scale-out of the fused wavefront stack
+# (core/systolic.systolic_lstm_stack_seq, backend
+# ``pallas_seq_fused_systolic``): each stage holds one contiguous layer
+# block, chunks pipeline stage to stage via ppermute.  'graves-75' is the
+# 75-tile 3x(5x5) configuration that runs the Graves phoneme topology in
+# real time (paper Sec. 4.2, Table 2) — runnable end to end with host
+# devices via XLA_FLAGS=--xla_force_host_platform_device_count=75 (see the
+# README serving command).
 SYSTOLIC_TOPOLOGIES = {
     # degenerate single-engine preset: never auto-picked (an all-1 mesh is
     # inadmissible, §6.2) — use with an explicit backend= selection
@@ -59,10 +63,14 @@ def install_systolic_topology(name: str, devices=None) -> Mesh:
     """Build the named preset and install it as the process systolic mesh.
 
     After installation, ``auto`` LSTM backend selection resolves to
-    ``pallas_seq_systolic`` for layers the mesh admits (DESIGN.md §6).
-    Inadmissible presets are installed but never auto-picked: ``stage > 1``
-    (graves-75 exists for the layer pipeline) and the all-1 ``single`` mesh
-    (the single-engine §3.3 rules keep deciding there).
+    ``pallas_seq_systolic`` for layers a stage-1 mesh admits (DESIGN.md
+    §6), and stack-level selection resolves to the staged
+    ``pallas_seq_fused_systolic`` for stacks a ``stage > 1`` mesh admits
+    (DESIGN.md §9 — ``graves-75`` runs the full 3x(5x5) Table-2 topology
+    in one dispatch path).  Inadmissible presets are installed but never
+    auto-picked (e.g. the all-1 ``single`` mesh: the single-engine §3.3
+    rules keep deciding there; explicit ``backend=`` selection still
+    works).
     """
     from ..core import systolic
     return systolic.install_mesh(make_systolic_topology(name, devices))

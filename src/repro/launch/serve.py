@@ -15,7 +15,11 @@ The serving analogue of the paper's deployment story: weights stay resident
     ``(h, c)`` state carried across chunks in the packed session cache.
     With ``--lstm-backend pallas_seq_fused`` that one call is additionally
     ONE kernel launch for the whole stack (the §8 wavefront kernel), so a
-    chunk costs a single launch across all streams AND all layers.
+    chunk costs a single launch across all streams AND all layers.  With
+    ``--systolic-topology graves-75 --lstm-backend pallas_seq_fused_systolic``
+    the same call runs the paper's full 3x(5x5) Table-2 topology (§9):
+    each 5x5 stage holds one layer's weights stationary and the chunk
+    pipelines stage to stage via ppermute.
 
 Works on CPU with the smoke configs:
   python -m repro.launch.serve --arch qwen3-14b --smoke --requests 6
@@ -199,8 +203,10 @@ def main(argv=None):
     ap.add_argument('--systolic-topology', default=None,
                     choices=sorted(SYSTOLIC_TOPOLOGIES),
                     help='install a systolic mesh preset before serving '
-                         '(enables/auto-selects pallas_seq_systolic; '
-                         'multi-device presets need that many JAX devices)')
+                         '(stage-1 presets enable/auto-select '
+                         'pallas_seq_systolic, stage>1 presets the staged '
+                         'pallas_seq_fused_systolic; multi-device presets '
+                         'need that many JAX devices)')
     args = ap.parse_args(argv)
 
     if args.systolic_topology:

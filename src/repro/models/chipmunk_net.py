@@ -41,12 +41,15 @@ def forward(cfg: ArchConfig, params: LSTMStackParams, frames: jax.Array):
     """frames: (B, T, n_in) -> log-probs (T, B, n_out).
 
     The execution engine (XLA scan / per-step Pallas / whole-sequence Pallas /
-    fused whole-stack wavefront / multi-engine systolic scale-out) is
-    selected by ``cfg.lstm_backend`` — call sites never change (DESIGN.md
-    §3.3, §6, §8).  With ``auto`` and an installed systolic mesh the stack
-    runs tile-stationary across engines; on ``pallas_seq_fused`` all three
-    layers run in ONE wavefront launch with the inter-layer hidden
-    sequences never leaving on-chip scratch.
+    fused whole-stack wavefront / multi-engine systolic scale-out / staged
+    fused-systolic pipeline) is selected by ``cfg.lstm_backend`` — call
+    sites never change (DESIGN.md §3.3, §6, §8, §9).  With ``auto`` and an
+    installed systolic mesh the stack runs tile-stationary across engines;
+    on ``pallas_seq_fused`` all three layers run in ONE wavefront launch
+    with the inter-layer hidden sequences never leaving on-chip scratch;
+    on ``pallas_seq_fused_systolic`` with the ``graves-75`` preset each
+    5x5 stage holds one layer stationary — the paper's Table-2 topology
+    end to end.
     """
     xs = jnp.moveaxis(frames, 0, 1)                    # (T, B, n_in)
     xs = logical(xs, 'seq', 'batch', None)

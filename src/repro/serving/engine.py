@@ -16,11 +16,15 @@ admission/eviction/refill never perturbs neighbouring streams.
 Backend-agnostic by construction: the engine only speaks
 ``models.chipmunk_net.stream_forward``, which dispatches on
 ``cfg.lstm_backend`` (``xla_scan | pallas_seq | pallas_seq_fused |
-pallas_seq_systolic`` via the installed mesh).  On ``pallas_seq_fused``
-every engine step advances ALL active streams through ALL stack layers in
-ONE wavefront kernel launch (DESIGN.md §8): the per-layer slot states ride
-the kernel's ``(L, B, N_h)`` carries and the ragged mask is shared by every
-layer, so a chunk costs one launch total instead of one per layer.
+pallas_seq_systolic | pallas_seq_fused_systolic`` via the installed mesh).
+On ``pallas_seq_fused`` every engine step advances ALL active streams
+through ALL stack layers in ONE wavefront kernel launch (DESIGN.md §8):
+the per-layer slot states ride the kernel's ``(L, B, N_h)`` carries and
+the ragged mask is shared by every layer, so a chunk costs one launch
+total instead of one per layer.  On ``pallas_seq_fused_systolic`` the
+same chunked call (same carries, same mask) runs the staged scale-out
+over the installed (stage, row, col) mesh (DESIGN.md §9) — the engine's
+slot states hand off across engines exactly as across chunks.
 """
 from __future__ import annotations
 

@@ -34,6 +34,12 @@ CONTRACTS = {
     systolic_mod.systolic_seq_fused: 'lstm_scan_fused',
     systolic_mod.pack_lstm: 'lossless',
     systolic_mod.quantize_packed: 'quantization',
+    # staged fused-systolic scale-out contracts (DESIGN.md §9)
+    systolic_mod.systolic_lstm_stack_seq: 'lstm_stack_apply',
+    systolic_mod.systolic_lstm_stack_seq_quantized: 'bit-identical',
+    systolic_mod.systolic_stack_seq_fused: 'lstm_scan_fused',
+    systolic_mod.stage_layer_blocks: 'geometry',
+    lstm_core.lstm_stack_bwd_recompute_gates: 'lstm_bwd_recompute_gates',
     ops_mod.lstm_layer_seq: 'lstm_layer',
     ops_mod.lstm_layer_seq_quantized: 'bit-identical',
     ops_mod.lstm_seq_fused: 'lstm_scan_fused',

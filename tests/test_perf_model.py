@@ -116,6 +116,51 @@ def test_wavefront_degenerates_without_layer_arrays():
             pytest.approx(pm.sequential_cycles(pm.CTC_3L_421H, cfg, 16))
 
 
+def test_staged_schedule_identities():
+    """The staged cycle model's exact identities: one layer per stage at
+    chunk=1 IS the per-diagonal wavefront schedule; a 2-stage placement of
+    the 3-layer stack pays the ceil-sized (2-layer) bottleneck block per
+    macro-step; chunking trades handover count for fill/drain depth."""
+    T = 128
+    cfg3 = pm.TileConfig(3, 5, 5)
+    per = [pm.layer_step_cycles(ld, cfg3) for ld in pm.CTC_3L_421H]
+    assert pm.staged_wavefront_cycles(pm.CTC_3L_421H, cfg3, T, chunk=1) == \
+        pytest.approx(pm.wavefront_cycles(pm.CTC_3L_421H, cfg3, T))
+    cfg2 = pm.TileConfig(2, 5, 5)
+    per2 = [pm.layer_step_cycles(ld, cfg2) for ld in pm.CTC_3L_421H]
+    st2 = pm.staged_wavefront_cycles(pm.CTC_3L_421H, cfg2, T, chunk=1)
+    assert st2 == pytest.approx((T + 1) * (per2[0] + per2[1]))
+    # more stages pipeline deeper; any staging beats the sequential charge
+    st3 = pm.staged_wavefront_cycles(pm.CTC_3L_421H, cfg3, T, chunk=1)
+    seq = pm.sequential_cycles(pm.CTC_3L_421H, cfg2, T)
+    assert st3 < st2 < seq
+    # chunked: K + S - 1 macro-steps of chunk * bottleneck
+    st_c = pm.staged_wavefront_cycles(pm.CTC_3L_421H, cfg3, T, chunk=16)
+    assert st_c == pytest.approx((8 + 2) * 16 * max(per))
+    assert pm.staged_fill_drain_overhead(3, T, 1) == pytest.approx(2 / 130)
+    assert pm.staged_fill_drain_overhead(3, T, 16) == pytest.approx(2 / 10)
+    # one array cannot pipeline: degenerates to the sequential model
+    assert pm.staged_wavefront_cycles(pm.CTC_3L_421H,
+                                      pm.TileConfig(1, 5, 5), 16) == \
+        pytest.approx(pm.sequential_cycles(pm.CTC_3L_421H,
+                                           pm.TileConfig(1, 5, 5), 16))
+
+
+def test_graves75_staged_estimate_meets_table2_realtime_claim():
+    """The graves-75 staged estimate against the paper's Table-2 real-time
+    claim: 3x(5x5) executes a frame in 0.09 ms @1.24 V / 0.76 ms @0.75 V,
+    well inside the 10 ms MFCC deadline — the staged steady state pays only
+    the bottleneck layer per frame, so it must come in at ~1/3 of the
+    Table-2 sum-of-layers row (and a fortiori meet the deadline)."""
+    for v in (pm.V_MAX, pm.V_MIN):
+        per_frame = pm.staged_realtime_frame_s(v=v, T=100)
+        table2_s = pm.PAPER_TABLE2_MS[('systolic 3x5x5', round(v, 2))] * 1e-3
+        assert per_frame < pm.FRAME_PERIOD_S          # real time
+        assert per_frame < table2_s                    # beats sum-of-layers
+        # steady state ~ bottleneck/3 of the (near-balanced) 3-layer stack
+        assert per_frame == pytest.approx(table2_s / 3, rel=0.10)
+
+
 def test_wavefront_gops_bounded_by_peak():
     """Sustained Gop/s under the fused schedule: above the sequential
     estimate, below the 75-engine peak."""

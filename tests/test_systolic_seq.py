@@ -3,10 +3,14 @@
 The float path must be allclose to scanning ``systolic_cell_tiled`` (and to
 ``core.lstm.lstm_layer``); the int8 path must be *bit-identical* to
 ``systolic_layer_quantized`` (the silicon datapath) — on real multi-device
-meshes.  Multi-device cases run in subprocesses with a forced host platform
-device count (see tests/_subproc.py); 2 devices keeps them safe on the
-2-core CI boxes (the cpu_count skip-gate only applies to the 256-chip LM
-compile, not to these small meshes).
+meshes.  The STAGED scale-out (DESIGN.md §9, backend
+``pallas_seq_fused_systolic``) additionally pins contiguous layer blocks to
+a live ``stage`` axis and must match the layerwise composition (f32
+allclose + grads) and the single-engine fused stack (int8 bit-identical,
+including the chunked code carry).  Multi-device cases run in subprocesses
+with a forced host platform device count (see tests/_subproc.py); 2 devices
+keeps them safe on the 2-core CI boxes (the cpu_count skip-gate only
+applies to the 256-chip LM compile, not to these small meshes).
 """
 import jax
 import jax.numpy as jnp
@@ -213,6 +217,161 @@ def test_seq_kernel_batch_grid_quantized_bit_identical():
     hs = lstm_layer_seq_quantized(qp, xs_q, bb=4, interpret=True)  # pads B->8
     assert hs.dtype == jnp.int8
     assert bool(jnp.all(hs == hs_ref))
+
+
+# ------------------------------------------ staged fused-systolic (DESIGN §9)
+def test_staged_stack_matches_layerwise_and_grads_2dev():
+    """The staged scale-out on a live ('stage','row','col') mesh (2 stages,
+    uneven 2+1 layer blocks) == the layerwise composition, forward, finals
+    AND gradients (the cross-layer gate-recompute VJP composed across the
+    stage boundary)."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, systolic
+p = lstm.init_lstm_stack(jax.random.PRNGKey(0), 16, 24, 3)
+xs = jax.random.normal(jax.random.PRNGKey(1), (7, 2, 16)) * 0.5
+mesh = systolic.make_systolic_mesh(1, 1, stage=2)
+assert systolic.stage_layer_blocks(3, 2) == ((0, 2), (2, 3))
+ys_ref, fin_ref = lstm.lstm_stack_apply(p, xs, backend='xla_scan')
+ys, fin = systolic.systolic_lstm_stack_seq(p, mesh, xs, chunk=2)
+np.testing.assert_allclose(ys, ys_ref, rtol=1e-5, atol=1e-6)
+for l in range(3):
+    np.testing.assert_allclose(fin[l][0], fin_ref[l][0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(fin[l][1], fin_ref[l][1], rtol=1e-5, atol=1e-6)
+def loss(q, staged):
+    ys, fin = (systolic.systolic_lstm_stack_seq(q, mesh, xs, chunk=2)
+               if staged else lstm.lstm_stack_apply(q, xs, backend='xla_scan'))
+    return jnp.sum(ys ** 2) + sum(jnp.sum(h * c) for h, c in fin)
+g = jax.grad(lambda q: loss(q, True))(p)
+g_ref = jax.grad(lambda q: loss(q, False))(p)
+for a, b in zip(jax.tree_util.tree_flatten(g_ref)[0],
+                jax.tree_util.tree_flatten(g)[0]):
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+# a live stage axis with an intra-stage col axis (2 devices as (2,1,1) only;
+# the col orientation runs in the scale-out bench on 4 devices)
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+def test_staged_quantized_bit_identical_and_chunk_carry_2dev():
+    """int8 staged path == the silicon reference chain AND the single-engine
+    fused stack, bit for bit — including ≥3 ragged masked chunks with the
+    opaque per-layer (h_q, c_q) carry and a mid-sequence handoff of the
+    staged state INTO the single-engine fused stack (cross-engine state
+    handoff for the streaming engine)."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, quant, systolic
+from repro.kernels.lstm_seq import lstm_stack_seq_quantized
+n_x, n_h, tile, L = 24, 32, 16, 3
+st = lstm.init_lstm_stack(jax.random.PRNGKey(5), n_x, n_h, L)
+qps = []
+for l, lp in enumerate(st.layers):
+    plan = systolic.SystolicPlan(n_x if l == 0 else n_h, n_h, tile)
+    qps.append(systolic.quantize_packed(systolic.pack_lstm(lp, plan)))
+xs = jax.random.normal(jax.random.PRNGKey(6), (6, 2, n_x)) * 0.5
+xs_q = quant.quantize(xs, quant.STATE_FMT)
+h = xs_q
+for qp in qps:
+    h = systolic.systolic_layer_quantized(qp, h)
+ref = np.asarray(h)
+mesh = systolic.make_systolic_mesh(1, 1, stage=2)
+out = systolic.systolic_lstm_stack_seq_quantized(qps, mesh, xs_q, chunk=2)
+assert out.dtype == jnp.int8
+np.testing.assert_array_equal(np.asarray(out), ref)
+# == the single-engine fused stack on the same inputs (bit-identical)
+fused = lstm_stack_seq_quantized(qps, xs_q, interpret=True)
+np.testing.assert_array_equal(np.asarray(out), np.asarray(fused))
+# >=3 ragged masked chunks with the opaque per-layer code carry
+lens = np.array([6, 3])
+stt = None; outs = []
+for lo, hi in ((0, 2), (2, 4), (4, 6)):
+    vl = jnp.asarray(np.clip(lens - lo, 0, hi - lo), jnp.int32)
+    o, stt = systolic.systolic_lstm_stack_seq_quantized(
+        qps, mesh, xs_q[lo:hi], state=stt, valid_len=vl, return_state=True,
+        chunk=1)
+    outs.append(np.asarray(o))
+hs = np.concatenate(outs)
+for b, Lv in enumerate(lens):
+    np.testing.assert_array_equal(hs[:Lv, b], ref[:Lv, b])
+    np.testing.assert_array_equal(np.asarray(stt[0])[-1, b, :n_h],
+                                  ref[Lv - 1, b])
+# cross-engine handoff: staged state -> single-engine fused stack
+o1, st1 = systolic.systolic_lstm_stack_seq_quantized(
+    qps, mesh, xs_q[:3], return_state=True, chunk=1)
+o2 = lstm_stack_seq_quantized(qps, xs_q[3:], state=st1, interpret=True)
+np.testing.assert_array_equal(
+    np.concatenate([np.asarray(o1), np.asarray(o2)]), ref)
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+def test_staged_auto_dispatch_and_f32_chunk_carry_2dev():
+    """Installing a stage>1 topology makes stack-level ``auto`` resolve to
+    the staged backend (stage-aware admission), the full dispatch path
+    stays allclose to the scan, and f32 chunked serving with per-layer
+    carried state is bit-equal to the monolithic staged call."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, systolic
+mesh = systolic.install_mesh(systolic.make_systolic_mesh(1, 1, stage=2))
+assert systolic.seq_scaleout_admissible(24, mesh, n_layers=3)
+assert not systolic.seq_scaleout_admissible(24, mesh)       # per-layer form
+assert not systolic.seq_scaleout_admissible(24, mesh, n_layers=1)  # S > L
+assert not systolic.seq_scaleout_admissible(          # VMEM budget rejection
+    1 << 13, mesh, n_layers=3, vmem_budget=1 << 20)
+assert lstm.select_stack_backend(16, 24, 3, 16, 2) == 'pallas_seq_fused_systolic'
+assert lstm.select_stack_backend(16, 24, 3, 2, 2) != 'pallas_seq_fused_systolic'
+assert lstm.select_lstm_backend(16, 24, 16, 2, platform='cpu') == 'xla_scan'
+p = lstm.init_lstm_stack(jax.random.PRNGKey(0), 16, 24, 3)
+xs = jax.random.normal(jax.random.PRNGKey(3), (16, 2, 16)) * 0.5
+ys_a, _ = lstm.lstm_stack_apply(p, xs, backend='auto')
+ys_x, _ = lstm.lstm_stack_apply(p, xs, backend='xla_scan')
+np.testing.assert_allclose(ys_a, ys_x, rtol=1e-5, atol=1e-6)
+lens = np.array([9, 5])
+mono, mono_fin = lstm.lstm_stack_chunk(
+    p, xs[:9], None, valid_len=jnp.asarray(lens),
+    backend='pallas_seq_fused_systolic')
+stt = None; outs = []
+for lo, hi in ((0, 3), (3, 6), (6, 9)):
+    vl = jnp.asarray(np.clip(lens - lo, 0, hi - lo), jnp.int32)
+    o, stt = lstm.lstm_stack_chunk(p, xs[lo:hi], stt, valid_len=vl,
+                                   backend='pallas_seq_fused_systolic')
+    outs.append(np.asarray(o))
+np.testing.assert_array_equal(np.concatenate(outs), np.asarray(mono))
+for l in range(3):
+    np.testing.assert_array_equal(np.asarray(stt[l][0]),
+                                  np.asarray(mono_fin[l][0]))
+systolic.clear_mesh()
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+def test_staged_none_mesh_degenerates_to_fused_stack():
+    """mesh=None (and all-1 meshes) degenerate to the single-engine §8
+    fused stack — the composition the staged scale-out pipelines."""
+    p = lstm.init_lstm_stack(jax.random.PRNGKey(0), 16, 24, 2)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 2, 16)) * 0.5
+    ys_ref, _ = lstm.lstm_stack_apply(p, xs, backend='pallas_seq_fused')
+    ys, _ = systolic.systolic_lstm_stack_seq(p, None, xs)
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(ys_ref))
+
+
+def test_staged_admission_and_blocks():
+    assert systolic.stage_layer_blocks(3, 3) == ((0, 1), (1, 2), (2, 3))
+    assert systolic.stage_layer_blocks(3, 2) == ((0, 2), (2, 3))
+    # stages beyond the stack get empty passthrough blocks
+    assert systolic.stage_layer_blocks(2, 3) == ((0, 1), (1, 2), (2, 2))
+    # stage-aware admission needs a real mesh with the three axes
+    assert not systolic.seq_scaleout_admissible(421, None, n_layers=3)
+    from repro.launch.train import local_mesh
+    assert not systolic.seq_scaleout_admissible(421, local_mesh(), n_layers=3)
+    # a stage-1 mesh belongs to the layerwise §6 rule, never the staged one
+    assert not systolic.seq_scaleout_admissible(
+        421, systolic.make_systolic_mesh(1, 1), n_layers=3)
 
 
 # ----------------------------------------------------------- topology presets
