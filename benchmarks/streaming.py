@@ -16,6 +16,12 @@ packing win.  Timings interleave the two paths per iteration — like
 loaded 2-core host flip when one path monopolises a busy window.  Reported:
 frames/s (tok/s analogue) and p50 per-chunk latency for S = 4 and 8
 concurrent streams.
+
+The ``streaming/guard_*`` rows are the DESIGN.md §10 acceptance pair: the
+fault-tolerant engine's non-finite quarantine guard is fused into the jitted
+chunk call, and its clean-path cost — guard-on vs guard-off on two
+persistent engines, interleaved — must stay under 5%.  ``python -m
+benchmarks.streaming --faults`` runs just that pair standalone.
 """
 import time
 
@@ -39,6 +45,51 @@ def _chunked_serve(fwd, params, states0, frames, n_chunks, valid):
         outs.append(lp)
     jax.block_until_ready(outs[-1])
     return outs
+
+
+def run_guard_overhead():
+    """DESIGN.md §10 acceptance row: clean-path cost of the fused non-finite
+    quarantine guard.  Two persistent ``StreamingEngine`` instances on the
+    full 123→421x3 topology — guard off (no fault config) vs guard on —
+    time their jitted packed chunk call interleaved; the guard adds one
+    fused reduction over the new states, so the overhead must stay <5%."""
+    from repro.configs import get_config
+    from repro.models import get_bundle
+    from repro.runtime import ServingFaultConfig
+    from repro.serving import StreamingEngine
+
+    cfg = get_config('chipmunk-ctc')
+    bundle = get_bundle(cfg)
+    params, _ = bundle.init(jax.random.PRNGKey(0))
+    S = 4
+    eng_off = StreamingEngine(cfg, params, max_streams=S, chunk=CHUNK)
+    eng_on = StreamingEngine(cfg, params, max_streams=S, chunk=CHUNK,
+                             faults=ServingFaultConfig(guard_nonfinite=True))
+
+    rng = np.random.RandomState(0)
+    frames = jnp.asarray(rng.randn(S, CHUNK, N_X).astype(np.float32) * 0.5)
+    valid = jnp.full((S,), CHUNK, jnp.int32)
+
+    def call(eng):
+        lp, st, finite = eng._fwd(params, eng.states, frames, valid)
+        jax.block_until_ready((lp, finite))
+
+    call(eng_off); call(eng_on)            # warm both jit caches
+    t_off, t_on = [], []
+    for _ in range(9):                     # interleaved timing
+        t0 = time.perf_counter(); call(eng_off)
+        t_off.append(time.perf_counter() - t0)
+        t0 = time.perf_counter(); call(eng_on)
+        t_on.append(time.perf_counter() - t0)
+    us_off = sorted(t_off)[len(t_off) // 2] * 1e6
+    us_on = sorted(t_on)[len(t_on) // 2] * 1e6
+    pct = (us_on / us_off - 1.0) * 100.0
+    emit(f'streaming/guard_off_S{S}', us_off,
+         f'S={S} chunk={CHUNK} 123->421x3: packed chunk call, no fault '
+         f'config (non-finite guard compiled out)')
+    emit(f'streaming/guard_on_S{S}', us_on,
+         f'S={S} chunk={CHUNK} 123->421x3: fused non-finite quarantine '
+         f'guard on; overhead {pct:+.1f}% vs guard_off (<5% required)')
 
 
 def run():
@@ -106,3 +157,17 @@ def run():
              f'S={S} T={T} chunk={CHUNK} 123->421x3: {fps_p:.0f} frames/s, '
              f'p50 chunk {chunk_p50_p:.2f} ms, {us_s / us_p:.2f}x vs '
              f'per-slot (one packed call, max_err={err:.1e})')
+
+    run_guard_overhead()
+
+
+if __name__ == '__main__':
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--faults', action='store_true',
+                    help='run only the §10 guard-overhead pair')
+    a = ap.parse_args()
+    if a.faults:
+        run_guard_overhead()
+    else:
+        run()

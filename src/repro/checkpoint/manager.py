@@ -116,24 +116,42 @@ class CheckpointManager:
         return max(steps) if steps else None
 
     def restore(self, state_like, step: Optional[int] = None,
-                shardings=None, validate: bool = True):
+                shardings=None, validate: bool = True,
+                match_paths: bool = True):
         """Restore into the structure of ``state_like`` (arrays or SDS).
 
         ``shardings``: optional matching pytree of NamedShardings — pass the
         *new* topology's shardings to re-shard elastically on restore.
+
+        ``match_paths``: validate each manifest leaf's recorded tree path
+        against the target pytree's path (not just leaf COUNT) — restoring a
+        checkpoint into a structurally different state (renamed field,
+        reordered dict keys, wrong model) fails loudly, naming the first
+        mismatched leaf, instead of silently loading arrays positionally.
+        Set False only when deliberately remapping structures.
         """
         step = self.latest_step() if step is None else step
         if step is None:
             raise FileNotFoundError(f'no checkpoints under {self.dir}')
         d = self.dir / f'step_{step:08d}'
         manifest = json.loads((d / 'manifest.json').read_text())
-        flat, treedef = jax.tree_util.tree_flatten(state_like)
+        pathed, treedef = _flatten_with_paths(state_like)
+        flat = [leaf for _, leaf in pathed]
         sh_flat = (jax.tree_util.tree_flatten(shardings)[0]
                    if shardings is not None else [None] * len(flat))
         if len(manifest['leaves']) != len(flat):
             raise ValueError(
                 f'checkpoint has {len(manifest["leaves"])} leaves, '
                 f'target has {len(flat)}')
+        if match_paths:
+            for i, (meta, (path, _)) in enumerate(zip(manifest['leaves'],
+                                                      pathed)):
+                if meta.get('path') is not None and meta['path'] != path:
+                    raise ValueError(
+                        f'checkpoint/target tree mismatch at leaf {i}: '
+                        f'checkpoint has {meta["path"]!r}, target has '
+                        f'{path!r} (pass match_paths=False to load '
+                        f'positionally)')
         out = []
         for meta, target, sh in zip(manifest['leaves'], flat, sh_flat):
             arr = np.load(d / meta['file'])

@@ -273,6 +273,33 @@ BACKENDS = ('auto', 'xla_scan', 'pallas_step', 'pallas_seq',
             'pallas_seq_fused', 'pallas_seq_systolic',
             'pallas_seq_fused_systolic')
 
+# Serving degradation ladder (DESIGN.md §10): when a mesh engine is declared
+# dead mid-serve, the fault-tolerant serving runtime re-dispatches to the
+# next backend DOWN this ladder — from the full staged scale-out through the
+# single-host fused stack and the per-layer sequence kernel to the
+# always-available XLA scan.  Backends not named on the ladder map onto the
+# nearest rung (``_LADDER_RANK``): the layerwise systolic scale-out degrades
+# like the staged one (both die with the mesh), the per-step kernel like the
+# sequence kernel.
+DEGRADATION_LADDER = ('pallas_seq_fused_systolic', 'pallas_seq_fused',
+                      'pallas_seq', 'xla_scan')
+_LADDER_RANK = {'pallas_seq_fused_systolic': 0, 'pallas_seq_systolic': 0,
+                'pallas_seq_fused': 1, 'pallas_seq': 2, 'pallas_step': 2,
+                'xla_scan': 3}
+
+
+def next_backend_down(backend: str) -> Optional[str]:
+    """The next backend down the serving ``DEGRADATION_LADDER``, or None at
+    the bottom (``xla_scan`` has no fallback — a fault there is retried,
+    not degraded).  Pure dispatch — selection never changes the chunking /
+    masking contract, only which engine executes it; a degraded backend's
+    outputs agree with the original to float tolerance (allclose), and
+    bit-equality contracts continue to hold per backend code path."""
+    rank = _LADDER_RANK.get(backend)
+    if rank is None or rank + 1 >= len(DEGRADATION_LADDER):
+        return None
+    return DEGRADATION_LADDER[rank + 1]
+
 # The sequence kernel keeps W_h + state resident in VMEM; leave headroom for
 # Mosaic's double-buffered streams out of the ~16 MB budget.
 _VMEM_BUDGET_BYTES = 12 * 1024 * 1024
@@ -571,6 +598,24 @@ def _resolve_stack_backend(params: LSTMStackParams, backend: str,
                    'pallas_seq_fused_systolic') and not compatible:
         backend = 'pallas_seq'
     return backend
+
+
+def resolve_serving_backend(params: LSTMStackParams, backend: str,
+                            T: int, B: int) -> str:
+    """Resolve ``backend`` (incl. ``auto``) to the CONCRETE backend a
+    ``(T, B, N_x)`` chunked serving call would dispatch to — the same
+    ``_resolve_stack_backend`` selection ``lstm_stack_chunk`` applies, run
+    ahead of time on a shape placeholder.  The fault-tolerant serving
+    runtime pins this at engine construction so it knows its position on
+    the ``DEGRADATION_LADDER`` before any fault occurs.  Pure dispatch —
+    resolution never changes numerics."""
+    l0 = params.layers[0]
+    xs = jax.ShapeDtypeStruct((T, B, l0.n_x), jnp.float32)
+    resolved = _resolve_stack_backend(params, backend, xs)
+    if resolved == 'auto':           # structurally fused-incompatible stack:
+        # the per-layer rules decide, exactly as lstm_layer_chunk would
+        resolved = select_lstm_backend(l0.n_x, l0.n_h, T, B)
+    return resolved
 
 
 def lstm_stack_apply(params: LSTMStackParams, xs: jax.Array,

@@ -129,9 +129,10 @@ class StreamServer:
     the resident weights are fetched once per chunk for the entire slot grid.
     """
 
-    def __init__(self, cfg, params, num_slots=4, chunk=16):
+    def __init__(self, cfg, params, num_slots=4, chunk=16, faults=None):
         self.engine = StreamingEngine(cfg, params, max_streams=num_slots,
-                                      chunk=chunk, decode_ctc=True)
+                                      chunk=chunk, decode_ctc=True,
+                                      faults=faults)
 
     def submit(self, frames: np.ndarray):
         return self.engine.submit(frames)
@@ -164,10 +165,36 @@ def _run_token_serving(cfg, args):
         print(f'  req {r.rid}: prompt {r.prompt[:4]}... -> {r.out}')
 
 
+def _parse_at_spec(spec: str):
+    """Parse a repeatable ``VALUE@STEP`` injection flag into (step, value)."""
+    value, step = spec.split('@')
+    return int(step), int(value)
+
+
+def _build_fault_config(args):
+    """Assemble a ``runtime.ServingFaultConfig`` from the CLI fault flags;
+    returns None when no fault feature was requested (the engine then runs
+    the zero-overhead non-fault path)."""
+    from ..runtime import ServingFaultConfig
+    fail_at = dict(_parse_at_spec(s) for s in (args.fail_engines or []))
+    if args.fail_at_step is not None and args.fail_at_step not in fail_at:
+        fail_at[args.fail_at_step] = 1
+    poison_at = dict(_parse_at_spec(s) for s in (args.poison_slot or []))
+    if not (fail_at or poison_at or args.stream_ckpt_dir
+            or args.deadline_factor is not None):
+        return None
+    return ServingFaultConfig(fail_at=fail_at, poison_at=poison_at,
+                              backoff_s=0.0,
+                              deadline_factor=args.deadline_factor,
+                              checkpoint_dir=args.stream_ckpt_dir)
+
+
 def _run_stream_serving(cfg, args):
     bundle = get_bundle(cfg)
     params, _ = bundle.init(jax.random.PRNGKey(0))
-    server = StreamServer(cfg, params, num_slots=args.slots, chunk=args.chunk)
+    faults = _build_fault_config(args)
+    server = StreamServer(cfg, params, num_slots=args.slots, chunk=args.chunk,
+                          faults=faults)
 
     rng = np.random.RandomState(0)
     t0 = time.time()
@@ -185,6 +212,17 @@ def _run_stream_serving(cfg, args):
     for s in sorted(server.done, key=lambda s: s.sid)[:3]:
         print(f'  stream {s.sid}: {s.length} frames -> '
               f'phonemes {s.decoder.symbols[:8]}')
+    if faults is not None:
+        counts = stats['event_counts']
+        degr = [e for e in stats['events'] if e['kind'] == 'degrade']
+        print(f'fault summary: backend={stats["backend"]} '
+              f'degrade={counts.get("degrade", 0)} '
+              f'quarantine={counts.get("quarantine", 0)} '
+              f'deadline_misses={stats["deadline_misses"]} '
+              f'checkpoints={counts.get("checkpoint", 0)}')
+        for e in degr:
+            print(f'  degrade @step {e["step"]}: {e["from_backend"]} -> '
+                  f'{e["to_backend"]} ({e["n_dead"]} engine(s) dead)')
 
 
 def main(argv=None):
@@ -207,6 +245,23 @@ def main(argv=None):
                          'pallas_seq_systolic, stage>1 presets the staged '
                          'pallas_seq_fused_systolic; multi-device presets '
                          'need that many JAX devices)')
+    ap.add_argument('--fail-at-step', type=int, default=None,
+                    help='declare one mesh engine dead at this engine step '
+                         '(LSTM streaming; exercises the degradation ladder)')
+    ap.add_argument('--fail-engines', action='append', default=None,
+                    metavar='N@STEP',
+                    help='declare N engines dead at STEP (repeatable)')
+    ap.add_argument('--poison-slot', action='append', default=None,
+                    metavar='SLOT@STEP',
+                    help='poison slot SLOT with NaN state before STEP '
+                         '(repeatable; exercises quarantine)')
+    ap.add_argument('--stream-ckpt-dir', default=None,
+                    help='directory for per-stream (h, c) + cursor '
+                         'checkpoints (enables preempt/resume across runs)')
+    ap.add_argument('--deadline-factor', type=float, default=None,
+                    help='per-chunk deadline as a multiple of the paper '
+                         'real-time frame budget (records deadline_miss '
+                         'events)')
     args = ap.parse_args(argv)
 
     if args.systolic_topology:

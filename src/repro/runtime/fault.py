@@ -1,4 +1,4 @@
-"""Fault tolerance + straggler mitigation for the training loop.
+"""Fault tolerance + straggler mitigation for the training AND serving loops.
 
 What a 1000+ node deployment needs and what we implement:
 
@@ -7,15 +7,30 @@ What a 1000+ node deployment needs and what we implement:
     checkpoint/manager.py this also covers topology changes after node loss.
   * **retry with backoff** — transient faults (preemption notices, flaky
     interconnect RPCs) retry the step before escalating to restore.
-  * **heartbeat** — a progress file external supervisors watch; a stuck job
-    (no heartbeat for k x step-time) is killed+rescheduled by the supervisor,
-    which is the only sound cross-host action (in-process watchdogs cannot
-    observe a wedged XLA collective).
+  * **deadline watchdog** — an optional per-step deadline; steps that
+    overrun it are recorded as ``deadline_miss`` events (an in-process
+    watchdog observes overruns post-hoc — it cannot preempt a running XLA
+    dispatch — so the sound reaction is to log, count, and let the caller's
+    policy decide: the serving layer shrinks the next chunk or sheds load,
+    a supervisor kills a persistently-late job).
+  * **heartbeat** — a progress record external supervisors watch (kept
+    in-memory as ``last_heartbeat`` and optionally mirrored to a file); a
+    stuck job (no heartbeat for k x step-time) is killed+rescheduled by the
+    supervisor, which is the only sound cross-host action (in-process
+    watchdogs cannot observe a wedged XLA collective).
   * **straggler detection** — per-step EWMA of step time; steps slower than
     ``threshold x`` EWMA are logged as straggler events.  On real pods the
     mitigation is re-sharding around the slow host (elastic restore) — here we
     record the decision so the policy is testable.
-  * **failure injection** — deterministic fault schedule for tests.
+  * **failure injection** — deterministic fault schedule for tests.  The
+    schedule may return/raise a *specific* exception instance (e.g.
+    ``runtime.serving_faults.EngineFailure``) so handlers can react by type.
+
+The runner is deliberately workload-agnostic: ``run_step`` drives the
+training ``(state, batch) -> (state, metrics)`` contract, and the
+generalized ``run`` drives ANY zero-arg attempt (the serving engine's
+packed chunk dispatch, ``serving/engine.py``) under the same
+injection/retry/deadline/heartbeat machinery.
 """
 from __future__ import annotations
 
@@ -33,6 +48,9 @@ class FaultConfig:
     straggler_factor: float = 3.0
     ewma_alpha: float = 0.2
     heartbeat_path: Optional[str] = None
+    # optional per-step deadline (seconds); overruns are recorded as
+    # ``deadline_miss`` events, never raised (see module docstring)
+    deadline_s: Optional[float] = None
 
 
 class StepTimer:
@@ -57,42 +75,93 @@ class StepTimer:
 
 
 class FaultTolerantRunner:
-    """Drives (state, batch) -> (state, metrics) with retry/restore semantics."""
+    """Retry/restore/deadline driver for any repeated step-shaped workload.
 
-    def __init__(self, step_fn: Callable, ckpt_manager=None,
-                 cfg: FaultConfig = FaultConfig(),
+    Two entry points share one loop (``run``):
+
+      * ``run_step(step, state, batch)`` — the training contract
+        ``(state, batch) -> (state, metrics)``; on a fault the optional
+        ``restore_fn`` replaces ``state`` before the retry (checkpoint
+        restart).
+      * ``run(step, fn, on_fault=...)`` — the generalized contract: drive
+        any zero-arg attempt with injection/retry/backoff, the deadline
+        watchdog, straggler tracking, and heartbeats.  ``on_fault(exc,
+        attempt)`` runs between a failed attempt and its retry — the
+        serving engine uses it to degrade its backend down the ladder
+        (``runtime/serving_faults.py``) before recomputing the chunk.
+
+    Every runner constructs its own ``FaultConfig`` when none is given
+    (``cfg=None`` default — never a shared mutable default instance).
+    """
+
+    def __init__(self, step_fn: Optional[Callable] = None, ckpt_manager=None,
+                 cfg: Optional[FaultConfig] = None,
                  restore_fn: Optional[Callable] = None,
-                 fail_schedule: Optional[Callable[[int], bool]] = None):
+                 fail_schedule: Optional[Callable[[int], Any]] = None,
+                 on_fault: Optional[Callable[[BaseException, int],
+                                             None]] = None):
         self.step_fn = step_fn
         self.ckpt = ckpt_manager
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else FaultConfig()
         self.restore_fn = restore_fn
         self.fail_schedule = fail_schedule
-        self.timer = StepTimer(cfg.ewma_alpha, cfg.straggler_factor)
+        self.on_fault = on_fault
+        self.timer = StepTimer(self.cfg.ewma_alpha, self.cfg.straggler_factor)
         self.events: List[Dict] = []
+        self.deadline_misses = 0
+        self.last_heartbeat: Optional[Dict] = None
 
-    def _heartbeat(self, step: int, metrics):
+    def _heartbeat(self, step: int):
+        payload = {'step': step, 'time': time.time(),
+                   'ewma_step_s': self.timer.ewma,
+                   'deadline_misses': self.deadline_misses}
+        self.last_heartbeat = payload
         if self.cfg.heartbeat_path:
-            payload = {'step': step, 'time': time.time(),
-                       'ewma_step_s': self.timer.ewma}
             pathlib.Path(self.cfg.heartbeat_path).write_text(
                 json.dumps(payload))
 
-    def run_step(self, step: int, state, batch):
+    def _injected(self, step: int) -> Optional[BaseException]:
+        """Consult the fault schedule; promote truthy results to exceptions."""
+        if self.fail_schedule is None:
+            return None
+        fault = self.fail_schedule(step)
+        if not fault:
+            return None
+        if isinstance(fault, BaseException):
+            return fault
+        return RuntimeError(f'injected fault at step {step}')
+
+    def run(self, step: int, fn: Callable[[], Any],
+            on_fault: Optional[Callable[[BaseException, int], None]] = None):
+        """Drive one attempt of ``fn`` to success under the fault machinery.
+
+        Injects scheduled faults (first attempt only), retries with linear
+        backoff up to ``cfg.max_retries`` (then re-raises), records
+        straggler and ``deadline_miss`` events, and emits a heartbeat on
+        success.  ``on_fault`` (per-call, else the constructor's) runs
+        between a failed attempt and the retry.  Returns ``fn()``'s result.
+        """
+        on_fault = on_fault if on_fault is not None else self.on_fault
         attempts = 0
         while True:
             try:
-                if self.fail_schedule and self.fail_schedule(step) \
-                        and attempts == 0:
-                    raise RuntimeError(f'injected fault at step {step}')
+                if attempts == 0:
+                    injected = self._injected(step)
+                    if injected is not None:
+                        raise injected
                 t0 = time.time()
-                state, metrics = self.step_fn(state, batch)
+                out = fn()
                 dt = time.time() - t0
                 if self.timer.observe(step, dt):
                     self.events.append({'kind': 'straggler', 'step': step,
                                         'dt': dt})
-                self._heartbeat(step, metrics)
-                return state, metrics
+                if self.cfg.deadline_s is not None and dt > self.cfg.deadline_s:
+                    self.deadline_misses += 1
+                    self.events.append({'kind': 'deadline_miss', 'step': step,
+                                        'dt': dt,
+                                        'deadline_s': self.cfg.deadline_s})
+                self._heartbeat(step)
+                return out
             except Exception as e:           # noqa: BLE001 — retry any fault
                 attempts += 1
                 self.events.append({'kind': 'fault', 'step': step,
@@ -100,6 +169,21 @@ class FaultTolerantRunner:
                 if attempts > self.cfg.max_retries:
                     raise
                 time.sleep(self.cfg.backoff_s * attempts)
-                if self.restore_fn is not None:
-                    state = self.restore_fn()
-                    self.events.append({'kind': 'restore', 'step': step})
+                if on_fault is not None:
+                    on_fault(e, attempts)
+
+    def run_step(self, step: int, state, batch):
+        """Training-loop contract: ``(state, batch) -> (state, metrics)``
+        with retry + checkpoint-restore semantics (``restore_fn`` replaces
+        the carried state before a retry)."""
+        box = [state]
+
+        def attempt():
+            return self.step_fn(box[0], batch)
+
+        def restore(e, attempts):
+            if self.restore_fn is not None:
+                box[0] = self.restore_fn()
+                self.events.append({'kind': 'restore', 'step': step})
+
+        return self.run(step, attempt, on_fault=restore)

@@ -1,0 +1,186 @@
+"""Serving-side fault tolerance: the fleet-operation layer (DESIGN.md §10).
+
+The paper's deployment story is an always-on near-sensor engine; its
+multi-die follow-up ("Vau da Muntanialas", PAPERS.md) makes fleet-scale
+operation — engines failing, stalling, or being re-tiled under load — the
+explicit next step.  This module is the policy/state side of that story for
+the packed streaming engine (``serving/engine.py``); the mechanism side is
+the generalized ``FaultTolerantRunner`` (``runtime/fault.py``).  Four
+capabilities, one config object:
+
+  * **stream-state checkpoint/resume** — ``StreamStateCheckpointer``
+    snapshots a preempted/evicted stream's packed per-layer ``(h, c)`` rows
+    (f32 — or the int8 opaque ``(h_q, c_q)`` carries; the checkpointer is
+    pytree-generic) plus its frame cursor through ``CheckpointManager``, so
+    a resubmitted stream restores and continues **bit-equal** to an
+    uninterrupted run instead of being dropped;
+  * **engine-failure injection + graceful degradation** — a deterministic
+    ``fail_at`` schedule raises ``EngineFailure`` mid-serve; the engine
+    reacts by re-dispatching down ``core.lstm.DEGRADATION_LADDER`` and
+    re-placing its packed state cache on the surviving topology
+    (``elastic_replace`` — the in-memory form of the checkpoint manager's
+    elastic restore), with only a logged latency blip and no stream loss;
+  * **deadline watchdog** — per-chunk deadlines derived from the paper's
+    real-time model (``chunk_deadline_s`` on
+    ``core.perf_model.staged_realtime_frame_s``), recorded as structured
+    events by the runner and exposed via ``StreamingEngine.stats()``;
+  * **poisoned-slot quarantine** — a non-finite guard over the packed state
+    cache (``finite_slots``, fused into the engine's jitted chunk call)
+    detects a slot whose carried state went NaN/Inf so the engine can
+    quarantine exactly that slot — zero its rows, evict the session with a
+    terminal error — while neighbouring slots' outputs stay bit-untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+
+
+class EngineFailure(RuntimeError):
+    """A mesh engine (or group of engines) declared dead mid-serve.
+
+    Raised by the deterministic fault schedule (``ServingFaultConfig.fail_at``
+    via ``FaultTolerantRunner``'s injection hook) — or, on real hardware, by
+    the dispatch layer when a device stops answering.  Handlers react by
+    type: the serving engine degrades its backend down the ladder and
+    re-places its packed state cache before retrying the chunk.
+    """
+
+    def __init__(self, n_dead: int = 1,
+                 message: Optional[str] = None):
+        self.n_dead = int(n_dead)
+        super().__init__(message or f'{n_dead} mesh engine(s) declared dead')
+
+
+@dataclasses.dataclass
+class ServingFaultConfig:
+    """Fault policy for one ``StreamingEngine`` (all features opt-in).
+
+    ``fail_at`` maps engine step -> number of engines lost at that step (the
+    deterministic failure-injection schedule); ``poison_at`` maps engine
+    step -> slot index whose packed state rows are overwritten with NaN
+    before that step's chunk (the quarantine-path injection hook).  The
+    non-finite guard (``guard_nonfinite``) is fused into the engine's jitted
+    chunk call; its clean-path overhead is tracked as a
+    ``BENCH_streaming.json`` row (<5% required).  ``deadline_s`` pins an
+    explicit per-chunk deadline; ``deadline_factor`` instead derives one
+    from the paper's real-time model (``chunk_deadline_s``).
+    ``checkpoint_dir`` enables stream-state checkpoint/resume through
+    ``StreamStateCheckpointer``.
+    """
+
+    fail_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    poison_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    guard_nonfinite: bool = True
+    max_retries: int = 3
+    backoff_s: float = 0.05
+    deadline_s: Optional[float] = None
+    deadline_factor: Optional[float] = None
+    checkpoint_dir: Optional[str] = None
+    heartbeat_path: Optional[str] = None
+
+    def resolve_deadline_s(self, chunk: int) -> Optional[float]:
+        """The per-chunk deadline this config implies: the explicit
+        ``deadline_s`` when set, else ``chunk_deadline_s(chunk,
+        deadline_factor)`` (the paper's staged real-time frame budget times
+        the slack factor), else None (watchdog disabled)."""
+        if self.deadline_s is not None:
+            return self.deadline_s
+        if self.deadline_factor is not None:
+            return chunk_deadline_s(chunk, self.deadline_factor)
+        return None
+
+    def make_fail_schedule(self):
+        """The ``FaultTolerantRunner`` injection hook for this config:
+        ``step -> EngineFailure(n_dead)`` on scheduled steps, else None.
+        Deterministic by construction — tests and CI replay it exactly."""
+        fail_at = dict(self.fail_at)
+
+        def schedule(step: int):
+            if step in fail_at:
+                return EngineFailure(fail_at[step])
+            return None
+
+        return schedule
+
+
+def chunk_deadline_s(chunk: int, factor: float = 1.0, **kw) -> float:
+    """Per-chunk serving deadline from the paper's real-time model: ``chunk``
+    frames times ``core.perf_model.staged_realtime_frame_s`` (the graves-75
+    steady-state per-frame execution time), scaled by ``factor`` — the
+    slack multiplier a host-emulated deployment needs over the silicon
+    budget.  Extra ``kw`` pass through to ``staged_realtime_frame_s``."""
+    from ..core.perf_model import staged_realtime_frame_s
+    return chunk * staged_realtime_frame_s(**kw) * factor
+
+
+def finite_slots(states) -> jax.Array:
+    """Per-slot finiteness of a packed state cache: ``(S,) bool``, True iff
+    every layer's ``(h, c)`` row for that slot is entirely finite.  Jit-safe
+    (the engine fuses it into the chunk call, so the clean-path guard costs
+    one fused reduction, no extra dispatch); a False entry is the quarantine
+    trigger — the guard itself performs no mutation."""
+    flat = [x for pair in states for x in pair]
+    finite = jnp.ones((flat[0].shape[0],), bool)
+    for x in flat:
+        ok = jnp.isfinite(x) if jnp.issubdtype(x.dtype, jnp.floating) \
+            else jnp.ones(x.shape, bool)
+        finite = finite & ok.reshape(x.shape[0], -1).all(axis=-1)
+    return finite
+
+
+def elastic_replace(tree):
+    """Re-place every leaf of ``tree`` on the (possibly changed) default
+    topology via an exact host round-trip — the in-memory form of
+    ``CheckpointManager.restore``'s elastic re-placement, used when a mesh
+    engine dies and the packed state cache must move to the surviving
+    devices.  Values are bit-preserved (numpy round-trip, no arithmetic)."""
+    return jax.tree.map(
+        lambda a: jax.device_put(np.asarray(jax.device_get(a))), tree)
+
+
+class StreamStateCheckpointer:
+    """Per-stream ``(h, c)`` + cursor snapshots through ``CheckpointManager``.
+
+    One checkpoint directory per stream id (``<dir>/stream_<sid>``), each
+    written via the manager's atomic tmp+rename layout with per-leaf
+    checksums and manifest-path validation, keyed by the stream's frame
+    cursor.  The payload is pytree-generic: f32 ``(h, c)`` rows and the int8
+    kernels' opaque ``(h_q, c_q)`` carries round-trip equally (bit-exact
+    numpy serialization), so resume is bit-equal / bit-identical on a fixed
+    backend.  ``keep=1``: only a stream's latest preemption point matters.
+    """
+
+    def __init__(self, directory: str):
+        self.dir = pathlib.Path(directory)
+
+    def _manager(self, sid: int) -> CheckpointManager:
+        return CheckpointManager(self.dir / f'stream_{sid:08d}', keep=1)
+
+    def save(self, sid: int, state_rows, cursor: int) -> None:
+        """Checkpoint one stream's packed state rows + frame cursor
+        (blocking — preemption is on the control path, not the hot path)."""
+        payload = {'cursor': np.int64(cursor), 'state': state_rows}
+        self._manager(sid).save(int(cursor), payload, blocking=True)
+
+    def load(self, sid: int, state_like) -> Tuple[tuple, int]:
+        """Restore the latest snapshot of stream ``sid`` into the structure
+        of ``state_like`` (per-layer ``(h, c)`` rows); returns
+        ``(state_rows, cursor)``.  Manifest paths are validated against the
+        target tree, so loading the wrong stream shape fails loudly."""
+        out = self._manager(sid).restore(
+            {'cursor': np.int64(0), 'state': state_like})
+        return out['state'], int(out['cursor'])
+
+    def has(self, sid: int) -> bool:
+        """True iff a committed checkpoint exists for stream ``sid``."""
+        mgr = CheckpointManager.__new__(CheckpointManager)  # no mkdir probe
+        mgr.dir = self.dir / f'stream_{sid:08d}'
+        return mgr.dir.is_dir() and mgr.latest_step() is not None

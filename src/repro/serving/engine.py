@@ -1,4 +1,4 @@
-"""Packed multi-stream stateful streaming engine (DESIGN.md §7).
+"""Packed multi-stream stateful streaming engine (DESIGN.md §7, §10).
 
 The deployment story of the paper — weights stay resident while audio frames
 stream through — turned into a serving substrate: every active stream's
@@ -18,13 +18,20 @@ Backend-agnostic by construction: the engine only speaks
 ``cfg.lstm_backend`` (``xla_scan | pallas_seq | pallas_seq_fused |
 pallas_seq_systolic | pallas_seq_fused_systolic`` via the installed mesh).
 On ``pallas_seq_fused`` every engine step advances ALL active streams
-through ALL stack layers in ONE wavefront kernel launch (DESIGN.md §8):
-the per-layer slot states ride the kernel's ``(L, B, N_h)`` carries and
-the ragged mask is shared by every layer, so a chunk costs one launch
-total instead of one per layer.  On ``pallas_seq_fused_systolic`` the
-same chunked call (same carries, same mask) runs the staged scale-out
-over the installed (stage, row, col) mesh (DESIGN.md §9) — the engine's
-slot states hand off across engines exactly as across chunks.
+through ALL stack layers in ONE wavefront kernel launch (DESIGN.md §8);
+on ``pallas_seq_fused_systolic`` the same chunked call runs the staged
+scale-out over the installed (stage, row, col) mesh (DESIGN.md §9).
+
+Fault tolerance (DESIGN.md §10, ``runtime/serving_faults.py``): with a
+``ServingFaultConfig`` attached, every engine step is driven by the
+generalized ``FaultTolerantRunner`` — injected/real engine failures degrade
+the backend down ``core.lstm.DEGRADATION_LADDER`` and elastically re-place
+the packed cache (no stream loss, a logged latency blip); per-chunk
+deadlines derived from the paper's real-time model are watched; a fused
+non-finite guard quarantines exactly the poisoned slot; and
+preempted/evicted streams checkpoint their packed ``(h, c)`` rows + frame
+cursor so a resubmitted stream resumes **bit-equal** to an uninterrupted
+run.
 """
 from __future__ import annotations
 
@@ -36,6 +43,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import chipmunk_net
+from ..runtime.fault import FaultConfig, FaultTolerantRunner
+from ..runtime.serving_faults import (EngineFailure, ServingFaultConfig,
+                                      StreamStateCheckpointer,
+                                      elastic_replace, finite_slots)
 from .scheduler import SlotScheduler
 from .session import IncrementalCTCDecoder, StreamSession
 
@@ -50,29 +61,77 @@ class StreamingEngine:
     ``chipmunk_net.forward`` of its full utterance on the same backend
     (bit-equal on a fixed backend code path; allclose across backends),
     regardless of which streams shared its batch (tests/test_streaming.py).
+    A preempted stream resumed from its checkpoint continues bit-equal to
+    an uninterrupted run (tests/test_serving_faults.py).
+
+    ``faults`` (a ``runtime.ServingFaultConfig``) opts into the §10 fault
+    model: deterministic engine-failure injection + ladder degradation,
+    per-chunk deadline watchdog, non-finite slot quarantine, and stream
+    checkpoint/resume through ``CheckpointManager``.  Without it the engine
+    behaves exactly as before (no guard, no runner — zero overhead).
     """
 
     def __init__(self, cfg, params, *, max_streams: int = 4, chunk: int = 16,
-                 decode_ctc: bool = False):
+                 decode_ctc: bool = False,
+                 faults: Optional[ServingFaultConfig] = None):
         assert cfg.family == 'lstm', (
             'StreamingEngine serves the stateful recurrent family; token '
             'families keep the per-slot decode loop (launch/serve.py)')
         assert chunk >= 1 and max_streams >= 1
-        self.cfg = cfg
+        from ..core.lstm import resolve_serving_backend
         self.params = params
         self.chunk = chunk
         self.decode_ctc = decode_ctc
+        # pin ONE concrete backend per engine (the §7 bit-equality contract
+        # holds per backend code path; the ladder needs a known rung)
+        self.backend = resolve_serving_backend(
+            params, cfg.lstm_backend, chunk, max_streams)
+        self.cfg = cfg.replace(lstm_backend=self.backend)
         self.sched: SlotScheduler[StreamSession] = SlotScheduler(max_streams)
         self.states = tuple(
             (jnp.zeros((max_streams, cfg.lstm_hidden), cfg.dtype()),
              jnp.zeros((max_streams, cfg.lstm_hidden), cfg.dtype()))
             for _ in range(cfg.n_layers))
         self._next_sid = 0
+        self._step_idx = 0
         self.chunk_walls: List[float] = []   # per-step wall times (latency)
+        self.events: List[dict] = []
+
+        self.faults = faults
+        if faults is not None:
+            self._guard = faults.guard_nonfinite
+            self._ckpt = (StreamStateCheckpointer(faults.checkpoint_dir)
+                          if faults.checkpoint_dir else None)
+            self._runner: Optional[FaultTolerantRunner] = FaultTolerantRunner(
+                cfg=FaultConfig(max_retries=faults.max_retries,
+                                backoff_s=faults.backoff_s,
+                                deadline_s=faults.resolve_deadline_s(chunk),
+                                heartbeat_path=faults.heartbeat_path),
+                fail_schedule=faults.make_fail_schedule())
+        else:
+            self._guard = False
+            self._ckpt = None
+            self._runner = None
+        self._build_fwd()
+
+    def _build_fwd(self):
+        """(Re)build the jitted packed chunk call for the CURRENT backend.
+
+        Called at construction and after every ladder degradation.  The
+        non-finite guard is fused into the same jit (one reduction over the
+        new states, no extra dispatch); with the guard off an all-ones
+        constant is returned, so the clean path's arithmetic is unchanged.
+        """
+        cfg, guard = self.cfg, self._guard
 
         def fwd(params, states, frames, valid):
-            return chipmunk_net.stream_forward(cfg, params, states, frames,
-                                               valid_len=valid)
+            lp, new_states = chipmunk_net.stream_forward(
+                cfg, params, states, frames, valid_len=valid)
+            if guard:
+                finite = finite_slots(new_states)
+            else:
+                finite = jnp.ones((frames.shape[0],), bool)
+            return lp, new_states, finite
 
         self._fwd = jax.jit(fwd)
 
@@ -92,22 +151,157 @@ class StreamingEngine:
         self.sched.submit(sess)
         return sess
 
-    def _zero_slot(self, slot: int, _sess: StreamSession) -> None:
-        # A recycled slot must never leak its previous occupant's state.
-        self.states = jax.tree.map(
-            lambda a: a.at[slot].set(0), self.states)
+    def _admit_slot(self, slot: int, sess: StreamSession) -> None:
+        """Admission callback: a recycled slot must never leak its previous
+        occupant's state — zero its packed rows, or, for a resumed session,
+        scatter the saved per-layer ``(h, c)`` rows back in (an exact host
+        round-trip, so resume is bit-equal to never having been evicted)."""
+        if sess.saved_state is not None:
+            self.states = tuple(
+                (h.at[slot].set(jnp.asarray(rh)),
+                 c.at[slot].set(jnp.asarray(rc)))
+                for (h, c), (rh, rc) in zip(self.states, sess.saved_state))
+            sess.saved_state = None
+            self._record('resume', sid=sess.sid, slot=slot,
+                         cursor=sess.cursor)
+        else:
+            self.states = jax.tree.map(
+                lambda a: a.at[slot].set(0), self.states)
+
+    def _snapshot_slot(self, slot: int) -> tuple:
+        """Host copy of one slot's per-layer ``(h, c)`` rows — the stream's
+        packed state, exactly as carried (bit-preserving numpy transfer, no
+        arithmetic)."""
+        return tuple((np.asarray(h[slot]), np.asarray(c[slot]))
+                     for h, c in self.states)
+
+    def preempt(self, sid: int, requeue: bool = True
+                ) -> Optional[StreamSession]:
+        """Preempt a stream: snapshot its packed per-layer ``(h, c)`` rows +
+        frame cursor onto the session (and through the stream checkpointer
+        when one is configured), free its slot, and — with ``requeue=True``
+        — re-enter it at the front of the pending queue.  The resumed
+        stream continues **bit-equal** to an uninterrupted run on the same
+        backend (tests/test_serving_faults.py).  Returns the session, or
+        None when ``sid`` is not active."""
+        for slot, sess in self.sched.active():
+            if sess.sid == sid:
+                sess.saved_state = self._snapshot_slot(slot)
+                if self._ckpt is not None:
+                    self._ckpt.save(sess.sid, sess.saved_state, sess.cursor)
+                    self._record('checkpoint', sid=sid, cursor=sess.cursor)
+                self.sched.evict(slot, requeue=requeue)
+                self._record('preempt', sid=sid, slot=slot, requeue=requeue)
+                return sess
+        return None
 
     def evict(self, sid: int) -> Optional[StreamSession]:
         """Abandon a stream mid-flight; its slot is freed for refill.
 
         Neighbouring streams are untouched — their state rows are separate
         slots of the packed cache and the freed row is zeroed on the next
-        admission (``_zero_slot``).
-        """
-        for i, sess in self.sched.active():
-            if sess.sid == sid:
-                return self.sched.evict(i)
-        return None
+        admission (``_admit_slot``).  The evicted stream's state is no
+        longer silently discarded: its ``(h, c)`` rows + cursor are
+        snapshotted onto the session (and to disk when a checkpointer is
+        configured), so ``resume``/``resume_from_checkpoint`` can continue
+        it later, bit-equal."""
+        return self.preempt(sid, requeue=False)
+
+    def resume(self, sess: StreamSession) -> StreamSession:
+        """Resubmit a preempted/evicted session; it re-enters the pending
+        queue and, on admission, restores its saved packed state and
+        continues from its cursor — bit-equal to an uninterrupted run on
+        the same backend."""
+        assert sess.error is None, f'stream {sess.sid} was quarantined'
+        self.sched.submit(sess)
+        return sess
+
+    def resume_from_checkpoint(self, frames: np.ndarray, sid: int
+                               ) -> StreamSession:
+        """Rebuild a stream from its on-disk checkpoint and submit it.
+
+        ``frames`` is the full utterance (inputs are not checkpointed —
+        only the packed per-layer ``(h, c)`` rows and the frame cursor);
+        the session resumes at the checkpointed cursor and its emitted
+        log-probs continue from there, bit-equal to the uninterrupted
+        run's suffix on the same backend."""
+        assert self._ckpt is not None, 'no checkpoint_dir configured'
+        frames = np.asarray(frames, np.float32)
+        n_h = self.cfg.lstm_hidden
+        like = tuple(
+            (np.zeros((n_h,), h.dtype), np.zeros((n_h,), c.dtype))
+            for h, c in self.states)
+        state_rows, cursor = self._ckpt.load(sid, like)
+        dec = IncrementalCTCDecoder() if self.decode_ctc else None
+        sess = StreamSession(sid=sid, frames=frames, decoder=dec,
+                             cursor=cursor, t_enqueue=time.time())
+        sess.saved_state = tuple(
+            (np.asarray(rh), np.asarray(rc)) for rh, rc in state_rows)
+        self._next_sid = max(self._next_sid, sid + 1)
+        self.sched.submit(sess)
+        self._record('resume_from_checkpoint', sid=sid, cursor=cursor)
+        return sess
+
+    # -------------------------------------------------------- fault hooks
+    def _record(self, kind: str, **info) -> None:
+        self.events.append({'kind': kind, 'step': self._step_idx, **info})
+
+    def _inject_poison(self) -> None:
+        """Deterministic state-poisoning hook (``faults.poison_at``): write
+        NaN into the scheduled slot's packed rows before this step's chunk.
+        Test/demo injection only — the guard + quarantine path downstream
+        is what production exercises."""
+        if self.faults is None:
+            return
+        slot = self.faults.poison_at.get(self._step_idx)
+        if slot is not None:
+            self.states = jax.tree.map(
+                lambda a: a.at[slot].set(jnp.nan), self.states)
+            self._record('poison_injected', slot=slot)
+
+    def _on_engine_fault(self, exc: BaseException, attempt: int) -> None:
+        """Between a failed chunk attempt and its retry: transient faults
+        just retry; an ``EngineFailure`` degrades the backend one rung down
+        ``core.lstm.DEGRADATION_LADDER``, uninstalls a broken mesh, and
+        elastically re-places the packed state cache on the surviving
+        topology (bit-preserving host round-trip) before the retry
+        recomputes the SAME chunk — no stream loses state or frames."""
+        if not isinstance(exc, EngineFailure):
+            return                          # transient: plain retry
+        from ..core.lstm import next_backend_down
+        if self.backend.endswith('_systolic'):
+            # dead engine invalidates the installed topology; dispatch must
+            # not re-pick a mesh backend on the retry
+            from ..core import systolic
+            systolic.clear_mesh()
+        nxt = next_backend_down(self.backend)
+        if nxt is None:
+            self._record('degrade_exhausted', backend=self.backend,
+                         n_dead=exc.n_dead)
+            return                          # bottom of the ladder: retry as-is
+        prev, self.backend = self.backend, nxt
+        self.cfg = self.cfg.replace(lstm_backend=nxt)
+        self.states = elastic_replace(self.states)
+        self._build_fwd()
+        self._record('degrade', from_backend=prev, to_backend=nxt,
+                     n_dead=exc.n_dead)
+
+    def _quarantine(self, active, finite, new_states) -> tuple:
+        """Quarantine every active slot whose new carried state went
+        non-finite: zero exactly that slot's rows, evict the session with a
+        terminal ``error`` (never retired into ``done``, never requeued),
+        and leave every neighbouring slot's rows and outputs bit-untouched.
+        Returns the scrubbed states."""
+        for slot, sess in active:
+            if not finite[slot]:
+                new_states = jax.tree.map(
+                    lambda a: a.at[slot].set(0), new_states)
+                sess.error = (f'non-finite state quarantined at engine '
+                              f'step {self._step_idx}')
+                sess.saved_state = None
+                self.sched.evict(slot)
+                self._record('quarantine', sid=sess.sid, slot=slot)
+        return new_states
 
     # ------------------------------------------------------------- stepping
     def step(self) -> bool:
@@ -116,13 +310,20 @@ class StreamingEngine:
         Admits pending streams into free slots, packs all active streams
         into ONE batched chunked call (padded slots masked out via
         ``valid_len``), scatters the valid output rows back to the sessions,
-        and retires exhausted streams.  Returns False when there was nothing
-        to do (the drain-loop exit condition).
+        and retires exhausted streams.  With a fault config attached the
+        call is driven by the generalized ``FaultTolerantRunner`` (injected
+        failures degrade the backend and retry the SAME chunk; overruns of
+        the per-chunk deadline are recorded), the packed cache is scrubbed
+        by the non-finite quarantine before commit, and nothing — states,
+        cursors, outputs — is committed unless the attempt succeeded, so a
+        retried chunk is recomputed from unchanged state.  Returns False
+        when there was nothing to do (the drain-loop exit condition).
         """
-        self.sched.refill(self._zero_slot)
+        self.sched.refill(self._admit_slot)
         active = self.sched.active()
         if not active:
             return False
+        self._inject_poison()
 
         S, T = self.sched.num_slots, self.chunk
         frames = np.zeros((S, T, self.cfg.lstm_inputs), np.float32)
@@ -131,19 +332,34 @@ class StreamingEngine:
             part = sess.next_chunk(T)
             frames[i, :len(part)] = part
             valid[i] = len(part)
+        frames_j, valid_j = jnp.asarray(frames), jnp.asarray(valid)
+
+        def attempt():
+            lp, st, finite = self._fwd(self.params, self.states,
+                                       frames_j, valid_j)
+            return (np.asarray(jax.block_until_ready(lp)), st,
+                    np.asarray(finite))
 
         t0 = time.time()
-        log_probs, self.states = self._fwd(
-            self.params, self.states, jnp.asarray(frames),
-            jnp.asarray(valid))
-        host = np.asarray(jax.block_until_ready(log_probs))
+        if self._runner is not None:
+            host, new_states, finite = self._runner.run(
+                self._step_idx, attempt, on_fault=self._on_engine_fault)
+        else:
+            host, new_states, finite = attempt()
         self.chunk_walls.append(time.time() - t0)
 
+        if not finite.all():
+            new_states = self._quarantine(active, finite, new_states)
+        self.states = new_states
+
         for i, sess in active:
+            if sess.error is not None:      # quarantined this step
+                continue
             sess.consume(host[i, :valid[i]])
             if sess.remaining == 0:
                 sess.t_done = time.time()
                 self.sched.finish(i)
+        self._step_idx += 1
         return True
 
     def run(self) -> List[StreamSession]:
@@ -154,14 +370,31 @@ class StreamingEngine:
 
     # ------------------------------------------------------------- metrics
     def stats(self) -> dict:
-        """Throughput/latency summary over the completed streams."""
+        """Throughput/latency summary over the completed streams, plus the
+        §10 fault telemetry: merged structured events (engine + runner),
+        per-kind counts, deadline-miss total, the current (possibly
+        degraded) backend, and the runner's last heartbeat."""
         done = self.sched.done
         frames = sum(s.length for s in done)
         lats = [s.t_done - s.t_enqueue for s in done if s.t_done]
+        events = list(self.events)
+        if self._runner is not None:
+            events += self._runner.events
+        counts: dict = {}
+        for e in events:
+            counts[e['kind']] = counts.get(e['kind'], 0) + 1
         return {
             'streams': len(done),
             'frames': frames,
             'p50_latency_s': float(np.median(lats)) if lats else 0.0,
             'p50_chunk_s': (float(np.median(self.chunk_walls))
                             if self.chunk_walls else 0.0),
+            'backend': self.backend,
+            'steps': self._step_idx,
+            'events': events,
+            'event_counts': counts,
+            'deadline_misses': (self._runner.deadline_misses
+                                if self._runner else 0),
+            'heartbeat': (self._runner.last_heartbeat
+                          if self._runner else None),
         }

@@ -21,9 +21,10 @@ class SlotScheduler(Generic[T]):
     Items are ``submit``ted to a pending queue; ``refill`` admits them into
     free slots (continuous batching — finished slots are refilled without
     stopping the others); ``finish`` retires a slot into ``done``; ``evict``
-    frees a slot without retiring the item (it is NOT re-queued — eviction is
-    the caller saying the stream is abandoned).  Pure bookkeeping: no JAX
-    arrays live here.
+    frees a slot without retiring the item — by default the item leaves the
+    scheduler (abandonment), with ``requeue=True`` it re-enters the FRONT of
+    ``pending`` (preemption: the stream resumes as soon as a slot frees).
+    Pure bookkeeping: no JAX arrays live here.
     """
 
     def __init__(self, num_slots: int):
@@ -76,9 +77,19 @@ class SlotScheduler(Generic[T]):
         self.slots[slot] = None
         return item
 
-    def evict(self, slot: int) -> T:
-        """Free the slot WITHOUT retiring the item (abandoned stream)."""
+    def evict(self, slot: int, requeue: bool = False) -> T:
+        """Free the slot WITHOUT retiring the item.
+
+        ``requeue=False`` (default) is abandonment: the item leaves the
+        scheduler entirely (never enters ``done``).  ``requeue=True`` is
+        preemption: the item re-enters the FRONT of ``pending`` — a
+        preempted stream resumes before newly submitted ones — and the
+        ``busy``/``done`` accounting stays consistent (a pending item keeps
+        the scheduler busy; nothing is retired either way).
+        """
         item = self.slots[slot]
         assert item is not None, f'slot {slot} is empty'
         self.slots[slot] = None
+        if requeue:
+            self.pending.appendleft(item)
         return item

@@ -52,6 +52,13 @@ class StreamSession:
     counts frames already consumed by the engine.  Outputs accumulate in
     ``log_probs`` (list of (t, K) chunks, valid rows only) and, when a
     decoder is attached, incrementally in ``decoder.symbols``.
+
+    Fault-tolerance fields (DESIGN.md §10): ``saved_state`` holds the
+    stream's preempted per-layer ``(h, c)`` rows between eviction and
+    re-admission (scattered back into the packed cache by the engine's
+    admission callback, then cleared); ``error`` is the terminal fault
+    string set when the stream is quarantined — an errored session is never
+    retired into ``done`` and must not be resubmitted.
     """
 
     sid: int
@@ -62,6 +69,8 @@ class StreamSession:
     t_enqueue: float = 0.0
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+    saved_state: Optional[tuple] = None
+    error: Optional[str] = None
 
     @property
     def remaining(self) -> int:

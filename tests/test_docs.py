@@ -11,6 +11,7 @@ import pytest
 import repro.core.systolic as systolic_mod
 import repro.kernels.lstm_seq.ops as ops_mod
 import repro.kernels.lstm_seq.stack_ops as stack_ops_mod
+import repro.runtime.serving_faults as serving_faults_mod
 import repro.serving.engine as engine_mod
 import repro.serving.scheduler as scheduler_mod
 import repro.serving.session as session_mod
@@ -18,7 +19,7 @@ from repro.core import lstm as lstm_core
 from repro.models import chipmunk_net
 
 MODULES = (systolic_mod, ops_mod, stack_ops_mod, engine_mod, scheduler_mod,
-           session_mod)
+           session_mod, serving_faults_mod)
 
 # Entry point -> substring its docstring must contain (the numerics contract:
 # the reference the function is bit-identical / allclose to, or an explicit
@@ -57,6 +58,15 @@ CONTRACTS = {
     chipmunk_net.stream_forward: 'bit-equal',
     engine_mod.StreamingEngine: 'forward',
     session_mod.IncrementalCTCDecoder: 'ctc_greedy_decode',
+    # serving fault-model contracts (DESIGN.md §10)
+    lstm_core.next_backend_down: 'dispatch',
+    lstm_core.resolve_serving_backend: 'dispatch',
+    serving_faults_mod.StreamStateCheckpointer: 'CheckpointManager',
+    serving_faults_mod.chunk_deadline_s: 'staged_realtime_frame_s',
+    serving_faults_mod.finite_slots: 'no mutation',
+    serving_faults_mod.elastic_replace: 'bit-preserved',
+    engine_mod.StreamingEngine.preempt: 'bit-equal',
+    engine_mod.StreamingEngine.resume_from_checkpoint: 'bit-equal',
 }
 
 

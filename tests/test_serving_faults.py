@@ -1,0 +1,321 @@
+"""Fault-tolerant serving runtime (DESIGN.md §10).
+
+The contracts:
+
+  * a preempted/evicted stream resumes **bit-equal** to an uninterrupted run
+    on the same backend — in-engine (saved rows on the session) and across
+    engine restarts (per-stream disk checkpoints via ``CheckpointManager``),
+    for f32 ``(h, c)`` rows and the int8 kernels' opaque ``(h_q, c_q)``
+    carries alike;
+  * an injected ``EngineFailure`` degrades the backend down
+    ``core.lstm.DEGRADATION_LADDER`` and re-places the packed state — every
+    stream still completes (no stream loss), and the degradation composes
+    with checkpoint/resume without breaking bit-equality;
+  * a poisoned slot is quarantined exactly: its session gets a terminal
+    error and never retires into ``done``; every neighbouring stream's
+    outputs are bit-untouched;
+  * the deadline watchdog records misses against the paper-derived
+    per-chunk budget; the clean guard path changes no numerics.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import lstm, quant, systolic
+from repro.kernels.lstm_seq import lstm_layer_seq_quantized
+from repro.models import chipmunk_net
+from repro.runtime import (EngineFailure, ServingFaultConfig,
+                           StreamStateCheckpointer, chunk_deadline_s)
+from repro.serving import SlotScheduler, StreamingEngine
+
+
+CFG = configs.get_smoke_config('chipmunk-ctc')
+PARAMS, _ = chipmunk_net.init(CFG, jax.random.PRNGKey(0))
+
+
+def _utts(n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((30 + 7 * i, CFG.lstm_inputs))
+            .astype(np.float32) * 0.5 for i in range(n)]
+
+
+def _drain(eng, utts, sids=None):
+    for i, u in enumerate(utts):
+        eng.submit(u, sid=None if sids is None else sids[i])
+    done = eng.run()
+    return {s.sid: s.full_log_probs() for s in done}
+
+
+# ------------------------------------------------- checkpoint/resume
+def test_preempt_resume_bit_equal_in_engine():
+    base = _drain(StreamingEngine(CFG, PARAMS, max_streams=2, chunk=8),
+                  _utts())
+    eng = StreamingEngine(CFG, PARAMS, max_streams=2, chunk=8,
+                          faults=ServingFaultConfig())
+    ss = [eng.submit(u) for u in _utts()]
+    eng.step(); eng.step()
+    sess = eng.preempt(ss[0].sid)            # mid-stream, state snapshotted
+    assert sess is sess and sess.saved_state is not None
+    assert eng.sched.pending[0] is sess      # requeued at the FRONT
+    eng.run()
+    got = {s.sid: s.full_log_probs() for s in eng.sched.done}
+    assert set(got) == set(base)
+    for sid in base:
+        np.testing.assert_array_equal(base[sid], got[sid])
+    kinds = [e['kind'] for e in eng.events]
+    assert 'preempt' in kinds and 'resume' in kinds
+
+
+def test_evict_then_resume_bit_equal():
+    """evict() no longer discards state: the abandoned session can be
+    resubmitted via resume() and still finishes bit-equal."""
+    base = _drain(StreamingEngine(CFG, PARAMS, max_streams=2, chunk=8),
+                  _utts())
+    eng = StreamingEngine(CFG, PARAMS, max_streams=2, chunk=8,
+                          faults=ServingFaultConfig())
+    ss = [eng.submit(u) for u in _utts()]
+    eng.step()
+    sess = eng.evict(ss[1].sid)
+    assert sess not in eng.sched.pending     # abandonment: not requeued
+    eng.resume(sess)
+    eng.run()
+    got = {s.sid: s.full_log_probs() for s in eng.sched.done}
+    for sid in base:
+        np.testing.assert_array_equal(base[sid], got[sid])
+
+
+def test_cross_engine_checkpoint_resume_bit_equal(tmp_path):
+    """Preempt to disk, rebuild a FRESH engine, resume from the checkpoint:
+    the suffix continues bit-equal to the uninterrupted run."""
+    utts = _utts()
+    base = _drain(StreamingEngine(CFG, PARAMS, max_streams=2, chunk=8), utts)
+    fc = ServingFaultConfig(checkpoint_dir=str(tmp_path))
+    eng = StreamingEngine(CFG, PARAMS, max_streams=2, chunk=8, faults=fc)
+    ss = [eng.submit(u) for u in utts[:2]]
+    eng.step(); eng.step()                   # 16 frames consumed per slot
+    eng.evict(ss[0].sid)                     # snapshots rows+cursor to disk
+    eng.run()
+
+    eng2 = StreamingEngine(CFG, PARAMS, max_streams=2, chunk=8, faults=fc)
+    assert eng2._ckpt.has(ss[0].sid)
+    sess = eng2.resume_from_checkpoint(utts[0], ss[0].sid)
+    assert sess.cursor == 16
+    eng2.run()
+    np.testing.assert_array_equal(base[ss[0].sid][16:],
+                                  sess.full_log_probs())
+
+
+def test_int8_opaque_state_checkpoint_bit_identical(tmp_path):
+    """The checkpointer is pytree-generic: the int8 kernel's opaque
+    (h_q, c_q) carry round-trips through disk and the resumed chunked run
+    is bit-identical to the uninterrupted one."""
+    p = lstm.init_lstm_params(jax.random.PRNGKey(0), 16, 48)
+    qp = systolic.quantize_packed(
+        systolic.pack_lstm(p, systolic.SystolicPlan(16, 48, 16)))
+    xs = jax.random.normal(jax.random.PRNGKey(1), (9, 3, 16)) * 0.5
+    xs_q = quant.quantize(xs, quant.STATE_FMT)
+
+    def run_chunks(spans, state):
+        outs = []
+        for lo, hi in spans:
+            o, state = lstm_layer_seq_quantized(
+                qp, xs_q[lo:hi], state=state, return_state=True,
+                interpret=True)
+            outs.append(np.asarray(o))
+        return np.concatenate(outs), state
+
+    ref, _ = run_chunks([(0, 3), (3, 6), (6, 9)], None)
+    head, mid_state = run_chunks([(0, 3), (3, 6)], None)
+
+    ckpt = StreamStateCheckpointer(str(tmp_path))
+    ckpt.save(7, (tuple(np.asarray(s) for s in mid_state),), cursor=6)
+    like = (tuple(np.zeros_like(np.asarray(s)) for s in mid_state),)
+    (restored,), cursor = ckpt.load(7, like)
+    assert cursor == 6
+    for a, b in zip(restored, mid_state):
+        assert np.asarray(a).dtype == np.asarray(b).dtype  # int8 preserved
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    tail, _ = run_chunks([(6, 9)], tuple(jnp.asarray(s) for s in restored))
+    np.testing.assert_array_equal(np.concatenate([head, tail]), ref)
+
+
+# ------------------------------------------------- degradation ladder
+def test_degradation_ladder_order():
+    assert lstm.next_backend_down('pallas_seq_fused_systolic') == \
+        'pallas_seq_fused'
+    assert lstm.next_backend_down('pallas_seq_systolic') == 'pallas_seq_fused'
+    assert lstm.next_backend_down('pallas_seq_fused') == 'pallas_seq'
+    assert lstm.next_backend_down('pallas_seq') == 'xla_scan'
+    assert lstm.next_backend_down('pallas_step') == 'xla_scan'
+    assert lstm.next_backend_down('xla_scan') is None
+
+
+def test_engine_failure_degrades_without_stream_loss():
+    cfg = CFG.replace(lstm_backend='pallas_seq')
+    utts = _utts(5)
+    fc = ServingFaultConfig(fail_at={2: 1}, backoff_s=0.0)
+    eng = StreamingEngine(cfg, PARAMS, max_streams=2, chunk=8, faults=fc)
+    assert eng.backend == 'pallas_seq'
+    got = _drain(eng, utts)
+    assert len(got) == len(utts)             # no stream lost
+    st = eng.stats()
+    assert st['backend'] == 'xla_scan'
+    deg = [e for e in st['events'] if e['kind'] == 'degrade']
+    assert deg == [{'kind': 'degrade', 'step': 2,
+                    'from_backend': 'pallas_seq', 'to_backend': 'xla_scan',
+                    'n_dead': 1}]
+    assert st['event_counts']['fault'] == 1
+
+    # outputs agree with a clean pallas_seq run to float tolerance (the
+    # ladder never changes the chunking/masking contract, only the engine)
+    ref = _drain(StreamingEngine(cfg, PARAMS, max_streams=2, chunk=8), utts)
+    for sid in ref:
+        np.testing.assert_allclose(ref[sid], got[sid], atol=1e-5)
+
+
+def test_degradation_exhausted_at_ladder_bottom():
+    """At xla_scan an EngineFailure is retried, not degraded further."""
+    fc = ServingFaultConfig(fail_at={1: 2}, backoff_s=0.0)
+    eng = StreamingEngine(CFG.replace(lstm_backend='xla_scan'), PARAMS,
+                          max_streams=2, chunk=8, faults=fc)
+    got = _drain(eng, _utts(3))
+    assert len(got) == 3
+    st = eng.stats()
+    assert st['backend'] == 'xla_scan'
+    assert st['event_counts']['degrade_exhausted'] == 1
+
+
+def test_degradation_preserves_resume_bit_equality():
+    """Checkpoint/resume stays bit-equal ACROSS an injected degradation
+    event: baseline and preempted run share the same fault schedule, so
+    both compute the suffix on the degraded backend."""
+    cfg = CFG.replace(lstm_backend='pallas_seq')
+    utts = _utts()
+    sched = {2: 1}
+    base = _drain(StreamingEngine(
+        cfg, PARAMS, max_streams=2, chunk=8,
+        faults=ServingFaultConfig(fail_at=sched, backoff_s=0.0)), utts)
+    eng = StreamingEngine(cfg, PARAMS, max_streams=2, chunk=8,
+                          faults=ServingFaultConfig(fail_at=sched,
+                                                    backoff_s=0.0))
+    ss = [eng.submit(u) for u in utts]
+    eng.step(); eng.step(); eng.step()       # degradation fired at step 2
+    eng.preempt(ss[0].sid)
+    eng.run()
+    got = {s.sid: s.full_log_probs() for s in eng.sched.done}
+    for sid in base:
+        np.testing.assert_array_equal(base[sid], got[sid])
+
+
+# ------------------------------------------------- quarantine
+def test_quarantine_isolates_poisoned_slot():
+    """Poisoning one slot quarantines exactly that stream; every
+    neighbouring stream's outputs are bit-identical to a poison-free run
+    of the SAME guard-on engine graph."""
+    utts = _utts(5)
+    base_eng = StreamingEngine(CFG, PARAMS, max_streams=3, chunk=8,
+                               faults=ServingFaultConfig())
+    base = _drain(base_eng, utts)
+
+    eng = StreamingEngine(CFG, PARAMS, max_streams=3, chunk=8,
+                          faults=ServingFaultConfig(poison_at={1: 1}))
+    ss = [eng.submit(u) for u in utts]
+    done = eng.run()
+    done_sids = {s.sid for s in done}
+    victim = [s for s in ss if s.error is not None]
+    assert len(victim) == 1
+    v = victim[0]
+    assert 'quarantined' in v.error and v.sid not in done_sids
+    st = eng.stats()
+    assert st['event_counts']['quarantine'] == 1
+    # neighbours (every non-victim stream) bit-untouched
+    for s in done:
+        np.testing.assert_array_equal(base[s.sid], s.full_log_probs())
+    # the freed slot was recycled: all remaining streams completed
+    assert done_sids == set(base) - {v.sid}
+
+
+def test_quarantine_zeroes_only_poisoned_rows():
+    """After quarantine the packed cache holds no non-finite values and
+    the victim's rows are exactly zero."""
+    eng = StreamingEngine(CFG, PARAMS, max_streams=3, chunk=8,
+                          faults=ServingFaultConfig(poison_at={0: 2}))
+    for u in _utts(3):
+        eng.submit(u)
+    eng.step()
+    for h, c in eng.states:
+        assert bool(jnp.isfinite(h).all()) and bool(jnp.isfinite(c).all())
+        np.testing.assert_array_equal(np.asarray(h[2]), 0.0)
+        np.testing.assert_array_equal(np.asarray(c[2]), 0.0)
+
+
+# ------------------------------------------------- deadline watchdog
+def test_chunk_deadline_derived_from_perf_model():
+    from repro.core.perf_model import staged_realtime_frame_s
+    assert chunk_deadline_s(16, 2.0) == \
+        pytest.approx(16 * staged_realtime_frame_s() * 2.0)
+    fc = ServingFaultConfig(deadline_factor=2.0)
+    assert fc.resolve_deadline_s(16) == pytest.approx(chunk_deadline_s(16, 2.0))
+    assert ServingFaultConfig(deadline_s=0.5).resolve_deadline_s(16) == 0.5
+    assert ServingFaultConfig().resolve_deadline_s(16) is None
+
+
+def test_deadline_watchdog_records_misses():
+    """An impossible deadline flags every chunk as a miss — recorded as
+    events and surfaced in stats(), never raised."""
+    fc = ServingFaultConfig(deadline_s=1e-12)
+    eng = StreamingEngine(CFG, PARAMS, max_streams=2, chunk=8, faults=fc)
+    got = _drain(eng, _utts(3))
+    assert len(got) == 3                     # misses never kill streams
+    st = eng.stats()
+    assert st['deadline_misses'] == st['steps'] > 0
+    misses = [e for e in st['events'] if e['kind'] == 'deadline_miss']
+    assert len(misses) == st['deadline_misses']
+    assert all(m['deadline_s'] == 1e-12 for m in misses)
+    assert st['heartbeat']['deadline_misses'] == st['deadline_misses']
+
+
+# ------------------------------------------------- plumbing
+def test_scheduler_evict_requeue_accounting():
+    s = SlotScheduler(2)
+    for item in 'abc':
+        s.submit(item)
+    s.refill()
+    assert s.active() == [(0, 'a'), (1, 'b')]
+    assert s.evict(0, requeue=True) == 'a'
+    assert list(s.pending) == ['a', 'c']     # requeued at the FRONT
+    assert s.busy and s.done == []
+    s.refill()
+    assert s.active() == [(0, 'a'), (1, 'b')]
+    assert s.evict(1) == 'b'                 # abandonment: gone entirely
+    assert 'b' not in s.pending and 'b' not in s.done
+    s.refill()
+    assert s.active() == [(0, 'a'), (1, 'c')]
+    s.finish(0); s.finish(1)
+    assert not s.busy and s.done == ['a', 'c']
+
+
+def test_fail_schedule_and_resolve_backend():
+    sched = ServingFaultConfig(fail_at={3: 2}).make_fail_schedule()
+    assert sched(0) is None
+    exc = sched(3)
+    assert isinstance(exc, EngineFailure) and exc.n_dead == 2
+    b = lstm.resolve_serving_backend(PARAMS, 'auto', 8, 4)
+    assert b in lstm.BACKENDS and b != 'auto'
+    assert lstm.resolve_serving_backend(PARAMS, 'pallas_seq', 8, 4) == \
+        'pallas_seq'
+
+
+def test_guard_on_engine_matches_plain_engine_bit_equal():
+    """The fused non-finite guard must not change the clean path's
+    numerics: guard-on output == no-fault-config output, bit for bit."""
+    utts = _utts(4, seed=3)
+    plain = _drain(StreamingEngine(CFG, PARAMS, max_streams=2, chunk=8),
+                   utts)
+    guarded = _drain(StreamingEngine(CFG, PARAMS, max_streams=2, chunk=8,
+                                     faults=ServingFaultConfig()), utts)
+    for sid in plain:
+        np.testing.assert_array_equal(plain[sid], guarded[sid])

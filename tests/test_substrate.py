@@ -256,3 +256,93 @@ assert s == jax.sharding.PartitionSpec(None, None), s
 print('OK')
 """, n_devices=512)
     assert 'OK' in out
+
+
+# ------------------------------------------- PR 6: fault/checkpoint hardening
+def test_fault_runner_cfg_default_not_shared():
+    """Each runner must own its FaultConfig — a shared mutable default
+    instance would leak per-runner deadline/backoff mutations globally."""
+    import inspect
+    sig = inspect.signature(FaultTolerantRunner.__init__)
+    assert sig.parameters['cfg'].default is None       # never an instance
+    a, b = FaultTolerantRunner(), FaultTolerantRunner()
+    assert a.cfg is not b.cfg
+    a.cfg.max_retries = 99
+    assert b.cfg.max_retries != 99
+
+
+def test_fault_runner_generalized_run_and_deadline():
+    runner = FaultTolerantRunner(
+        cfg=FaultConfig(max_retries=2, backoff_s=0.0, deadline_s=1e-9),
+        fail_schedule=lambda s: s == 1)
+    seen = []
+    out = runner.run(0, lambda: 'ok')
+    assert out == 'ok'
+    out = runner.run(1, lambda: 'ok2',
+                     on_fault=lambda e, n: seen.append((repr(e), n)))
+    assert out == 'ok2' and len(seen) == 1             # injected once, retried
+    assert runner.deadline_misses >= 2                 # 1 ns deadline: all miss
+    kinds = [e['kind'] for e in runner.events]
+    assert 'deadline_miss' in kinds and 'fault' in kinds
+    assert runner.last_heartbeat['deadline_misses'] == runner.deadline_misses
+
+
+def test_checkpoint_restore_validates_tree_paths(tmp_path):
+    """Restoring into a structurally different tree (renamed key) must fail
+    loudly naming the mismatched leaf — not silently load positionally."""
+    m = CheckpointManager(tmp_path)
+    m.save(1, {'a': jnp.ones((2,)), 'b': jnp.zeros((3,))}, blocking=True)
+    with pytest.raises(ValueError, match=r"\['b'\]"):
+        m.restore({'a': jnp.zeros((2,)), 'c': jnp.zeros((3,))})
+    # explicit opt-out loads positionally (deliberate remapping)
+    out = m.restore({'a': jnp.zeros((2,)), 'c': jnp.zeros((3,))},
+                    match_paths=False)
+    np.testing.assert_array_equal(out['a'], np.ones((2,)))
+
+
+def test_checkpoint_async_save_failure_surfaced_by_wait(tmp_path,
+                                                       monkeypatch):
+    """A background save that raises must surface on the next wait(), and
+    the manager must be usable again afterwards (error cleared)."""
+    import repro.checkpoint.manager as mgr_mod
+    m = CheckpointManager(tmp_path)
+    real_save = mgr_mod.np.save
+
+    def boom(*a, **k):
+        raise OSError('disk full')
+
+    monkeypatch.setattr(mgr_mod.np, 'save', boom)
+    m.save(1, {'x': jnp.ones((4,))}, blocking=False)
+    with pytest.raises(RuntimeError, match='async checkpoint write failed'):
+        m.wait()
+    monkeypatch.setattr(mgr_mod.np, 'save', real_save)
+    m.wait()                                           # error cleared
+    m.save(2, {'x': jnp.ones((4,))}, blocking=True)
+    assert m.latest_step() == 2
+
+
+def test_checkpoint_elastic_restore_different_mesh_shape():
+    """Save under a 1-D 4-way mesh, restore under a 2x2 mesh — the elastic
+    full-array layout must re-place leaves on the new topology bit-exactly."""
+    from _subproc import run_with_devices
+    out = run_with_devices("""
+import jax, numpy as np, tempfile
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.checkpoint import CheckpointManager
+
+devs = np.array(jax.devices())
+td = tempfile.mkdtemp()
+m = CheckpointManager(td)
+x = jnp.arange(64.0).reshape(8, 8)
+mesh1 = Mesh(devs.reshape(4), ('data',))
+m.save(1, {'x': jax.device_put(x, NamedSharding(mesh1, P('data')))},
+       blocking=True)
+mesh2 = Mesh(devs.reshape(2, 2), ('row', 'col'))
+out = m.restore({'x': jnp.zeros((8, 8))},
+                shardings={'x': NamedSharding(mesh2, P('row', 'col'))})
+np.testing.assert_array_equal(np.asarray(out['x']), np.asarray(x))
+assert out['x'].sharding.mesh.shape == {'row': 2, 'col': 2}
+print('OK')
+""", n_devices=4)
+    assert 'OK' in out
