@@ -380,6 +380,33 @@ def select_stack_backend(n_x: int, n_h: int, n_layers: int, T: int,
     return per_layer
 
 
+# Calibration point for the int8 stack dispatch (BENCH_kernels.json pair
+# "T=32 B=4 48->96x3 tile=48 int8"): the fused wavefront LOSES to the
+# layerwise chain at 96 hidden (23.9 ms vs 14.0 ms) — its L-1-diagonal
+# fill/drain bubble, stacked-weight relayout, and diagonal re-indexing are
+# fixed costs, while the per-layer matmul work it amortises shrinks with the
+# hidden width.  Fused admission therefore requires a hidden width safely
+# above that measured losing point; the paper's 421-hidden Table-2 stack
+# clears it.
+_Q_FUSED_MIN_NH = 256
+
+
+def select_quantized_stack_backend(n_h: int, n_layers: int, T: int,
+                                   batch: int) -> str:
+    """Int8 stack dispatch: ``'fused'`` (the §8 wavefront
+    ``lstm_stack_seq_quantized``) or ``'layerwise'`` (chained
+    ``lstm_layer_seq_quantized``).  Both are bit-identical — this picks the
+    faster launch shape only: the wavefront needs at least two layers to
+    pipeline, a sequence long enough to amortise residency (``_SEQ_MIN_T``,
+    as in ``select_stack_backend``), and a hidden width above the
+    ``_Q_FUSED_MIN_NH`` calibration floor — below it the measured
+    BENCH_kernels.json rows show the layerwise chain winning (ROADMAP item:
+    gate the int8 fused stack at small shapes)."""
+    if n_layers >= 2 and T >= _SEQ_MIN_T and n_h >= _Q_FUSED_MIN_NH:
+        return 'fused'
+    return 'layerwise'
+
+
 def _degrade_staged_single_layer(n_h: int) -> str:
     """A single-layer call cannot stage-pipeline (nothing to place on the
     stage axis): ``pallas_seq_fused_systolic`` degrades to the layerwise

@@ -308,6 +308,30 @@ def staged_realtime_frame_s(layers: Sequence[LayerDims] = CTC_3L_421H,
     return staged_wavefront_cycles(layers, cfg, T, chunk) / T / freq_hz(v)
 
 
+def realtime_chunk_budget_s(chunk: int, slack: float = 1.0) -> float:
+    """Wall-clock budget of one serving chunk under the paper's REAL-TIME
+    contract: ``chunk`` MFCC frames arrive every ``FRAME_PERIOD_S`` (10 ms),
+    so a chunk that takes longer than ``chunk * FRAME_PERIOD_S * slack``
+    falls behind the sensor — the Table-2 deadline the serving layer's
+    chunk-size policy enforces (DESIGN.md §11).  Distinct from
+    ``staged_realtime_frame_s``: that is the modelled silicon EXECUTION time
+    per frame (used by the §10 watchdog via ``chunk_deadline_s``); this is
+    the arrival-rate deadline the stream must keep up with.  ``slack`` < 1
+    demands headroom, > 1 tolerates a host-emulation handicap."""
+    assert chunk >= 1 and slack > 0, (chunk, slack)
+    return chunk * FRAME_PERIOD_S * slack
+
+
+def staged_frames_within_s(budget_s: float, **kw) -> int:
+    """How many frames the staged schedule can EXECUTE inside ``budget_s``
+    (floor of budget over ``staged_realtime_frame_s(**kw)``) — the
+    model-derived seed for the serving chunk-size policy: the largest chunk
+    whose modelled execution fits the per-chunk budget.  Pure model
+    arithmetic, no numerics of its own."""
+    per_frame = staged_realtime_frame_s(**kw)
+    return max(1, int(budget_s / per_frame))
+
+
 # Published Table 2 values for validation: (config, voltage) -> exec ms.
 PAPER_TABLE2_MS = {
     ('systolic 3x5x5', 1.24): 0.09, ('systolic 5x5', 1.24): 1.59,

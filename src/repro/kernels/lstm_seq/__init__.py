@@ -4,12 +4,13 @@ from .ops import (lstm_layer_seq, lstm_layer_seq_quantized, lstm_seq_fused,
 from .ref import lstm_seq_ref
 from .stack_kernel import lstm_stack_seq_kernel, lstm_stack_seq_kernel_q
 from .stack_ops import (lstm_stack_seq, lstm_stack_seq_fused,
-                        lstm_stack_seq_quantized, stack_fused_compatible,
-                        stack_vmem_bytes_estimate)
+                        lstm_stack_seq_quantized,
+                        lstm_stack_seq_quantized_auto,
+                        stack_fused_compatible, stack_vmem_bytes_estimate)
 
 __all__ = ['lstm_seq', 'lstm_seq_quantized', 'lstm_layer_seq',
            'lstm_layer_seq_quantized', 'lstm_seq_fused', 'lstm_seq_ref',
            'vmem_bytes_estimate', 'lstm_stack_seq', 'lstm_stack_seq_fused',
-           'lstm_stack_seq_quantized', 'lstm_stack_seq_kernel',
-           'lstm_stack_seq_kernel_q', 'stack_fused_compatible',
-           'stack_vmem_bytes_estimate']
+           'lstm_stack_seq_quantized', 'lstm_stack_seq_quantized_auto',
+           'lstm_stack_seq_kernel', 'lstm_stack_seq_kernel_q',
+           'stack_fused_compatible', 'stack_vmem_bytes_estimate']

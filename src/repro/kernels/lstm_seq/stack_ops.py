@@ -308,3 +308,51 @@ def lstm_stack_seq_quantized(qps: Sequence[QuantizedPackedLSTM],
     if not return_state:
         return out
     return out, (hs[:, -1, :B], cs[:, -1, :B])
+
+
+def lstm_stack_seq_quantized_auto(qps: Sequence[QuantizedPackedLSTM],
+                                  xs_q: jax.Array, *,
+                                  state: Optional[Tuple[jax.Array,
+                                                        jax.Array]] = None,
+                                  valid_len: Optional[jax.Array] = None,
+                                  return_state: bool = False,
+                                  bb: Optional[int] = None,
+                                  interpret: Optional[bool] = None,
+                                  backend: str = 'auto'):
+    """Shape-dispatched whole-stack int8 execution.
+
+    Picks the fused wavefront (``lstm_stack_seq_quantized``) or the
+    layerwise chain of ``lstm_layer_seq_quantized`` calls via
+    ``core.lstm.select_quantized_stack_backend``: the BENCH_kernels.json
+    calibration pair shows the wavefront LOSING to the chain at small hidden
+    widths (its fill/drain bubble and relayout overheads are fixed while the
+    per-layer work shrinks), so small stacks run layerwise.  Bit-identical
+    either way — that is the fused kernel's contract — and BOTH paths speak
+    the STACK state layout (opaque ``(h_q, c_q)``, each ``(L, B, padded_h)``
+    int8), so a chunked streaming caller can carry state across chunks
+    regardless of which launch shape each chunk resolved to.  ``backend``
+    forces ``'fused'``/``'layerwise'`` explicitly (tests pin both).
+    """
+    assert xs_q.ndim == 3, 'lstm_stack_seq_quantized_auto expects (T, B, n_x)'
+    if backend == 'auto':
+        from ...core.lstm import select_quantized_stack_backend
+        backend = select_quantized_stack_backend(
+            qps[0].plan.n_h, len(qps), xs_q.shape[0], xs_q.shape[1])
+    assert backend in ('fused', 'layerwise'), backend
+    if backend == 'fused':
+        return lstm_stack_seq_quantized(
+            qps, xs_q, state=state, valid_len=valid_len,
+            return_state=return_state, bb=bb, interpret=interpret)
+    from .ops import lstm_layer_seq_quantized
+    out = xs_q
+    h_fin, c_fin = [], []
+    for l, qp in enumerate(qps):
+        st_l = None if state is None else (state[0][l], state[1][l])
+        out, (h_l, c_l) = lstm_layer_seq_quantized(
+            qp, out, state=st_l, valid_len=valid_len, return_state=True,
+            bb=bb, interpret=interpret)
+        h_fin.append(h_l)
+        c_fin.append(c_l)
+    if not return_state:
+        return out
+    return out, (jnp.stack(h_fin), jnp.stack(c_fin))

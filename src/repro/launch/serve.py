@@ -129,13 +129,20 @@ class StreamServer:
     the resident weights are fetched once per chunk for the entire slot grid.
     """
 
-    def __init__(self, cfg, params, num_slots=4, chunk=16, faults=None):
+    def __init__(self, cfg, params, num_slots=4, chunk=16, faults=None,
+                 async_dispatch=False, deadline_slo=None):
+        policy = None
+        if deadline_slo is not None:
+            from ..runtime import ChunkSizePolicy
+            policy = ChunkSizePolicy(chunk_max=chunk, slack=deadline_slo)
         self.engine = StreamingEngine(cfg, params, max_streams=num_slots,
                                       chunk=chunk, decode_ctc=True,
-                                      faults=faults)
+                                      faults=faults,
+                                      async_dispatch=async_dispatch,
+                                      chunk_policy=policy)
 
-    def submit(self, frames: np.ndarray):
-        return self.engine.submit(frames)
+    def submit(self, frames: np.ndarray, priority: int = 0):
+        return self.engine.submit(frames, priority=priority)
 
     def drain(self):
         return self.engine.run()
@@ -194,21 +201,27 @@ def _run_stream_serving(cfg, args):
     params, _ = bundle.init(jax.random.PRNGKey(0))
     faults = _build_fault_config(args)
     server = StreamServer(cfg, params, num_slots=args.slots, chunk=args.chunk,
-                          faults=faults)
+                          faults=faults, async_dispatch=args.async_dispatch,
+                          deadline_slo=args.deadline_slo)
 
     rng = np.random.RandomState(0)
     t0 = time.time()
-    for _ in range(args.requests):
+    for r in range(args.requests):
         frames = rng.randn(rng.randint(args.chunk, 4 * args.chunk),
                            cfg.lstm_inputs).astype(np.float32) * 0.5
-        server.submit(frames)
+        # every 3rd utterance is a latency-SLO stream (§11 priority demo)
+        server.submit(frames, priority=1 if r % 3 == 2 else 0)
     server.drain()
     wall = time.time() - t0
     stats = server.engine.stats()
+    mode = 'async' if stats['async'] else 'sync'
     print(f'streamed {stats["streams"]} utterances, {stats["frames"]} frames '
-          f'in {wall:.2f}s ({stats["frames"] / wall:.1f} frames/s); '
+          f'in {wall:.2f}s ({stats["frames"] / wall:.1f} frames/s, {mode}); '
           f'p50 latency {stats["p50_latency_s"]:.3f}s, '
           f'p50 chunk {stats["p50_chunk_s"] * 1e3:.1f}ms')
+    if args.deadline_slo is not None:
+        print(f'deadline slo: chunk_len={stats["chunk_len"]} '
+              f'deadline_misses={stats["deadline_misses"]}')
     for s in sorted(server.done, key=lambda s: s.sid)[:3]:
         print(f'  stream {s.sid}: {s.length} frames -> '
               f'phonemes {s.decoder.symbols[:8]}')
@@ -262,6 +275,17 @@ def main(argv=None):
                     help='per-chunk deadline as a multiple of the paper '
                          'real-time frame budget (records deadline_miss '
                          'events)')
+    ap.add_argument('--async', dest='async_dispatch', action='store_true',
+                    help='double-buffered dispatch (DESIGN.md §11): the '
+                         'next chunk is packed and launched while the '
+                         'in-flight one computes; outputs stay bit-equal '
+                         'to sync serving')
+    ap.add_argument('--deadline-slo', type=float, default=None,
+                    metavar='FACTOR',
+                    help='attach the deadline-aware chunk-size policy: '
+                         'budget = chunk * 10ms frame period * FACTOR '
+                         '(the Table-2 arrival rate); chunk length adapts '
+                         'to observed launch-to-commit wall times')
     args = ap.parse_args(argv)
 
     if args.systolic_topology:

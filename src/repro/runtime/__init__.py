@@ -1,4 +1,4 @@
 from .fault import FaultConfig, FaultTolerantRunner, StepTimer
-from .serving_faults import (EngineFailure, ServingFaultConfig,
-                             StreamStateCheckpointer, chunk_deadline_s,
-                             elastic_replace, finite_slots)
+from .serving_faults import (ChunkSizePolicy, EngineFailure,
+                             ServingFaultConfig, StreamStateCheckpointer,
+                             chunk_deadline_s, elastic_replace, finite_slots)

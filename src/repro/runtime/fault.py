@@ -132,7 +132,10 @@ class FaultTolerantRunner:
         return RuntimeError(f'injected fault at step {step}')
 
     def run(self, step: int, fn: Callable[[], Any],
-            on_fault: Optional[Callable[[BaseException, int], None]] = None):
+            on_fault: Optional[Callable[[BaseException, int], None]] = None,
+            retry_fn: Optional[Callable[[], Any]] = None,
+            launched_at: Optional[float] = None,
+            deadline_s: Optional[float] = None):
         """Drive one attempt of ``fn`` to success under the fault machinery.
 
         Injects scheduled faults (first attempt only), retries with linear
@@ -140,8 +143,21 @@ class FaultTolerantRunner:
         straggler and ``deadline_miss`` events, and emits a heartbeat on
         success.  ``on_fault`` (per-call, else the constructor's) runs
         between a failed attempt and the retry.  Returns ``fn()``'s result.
+
+        Async dispatch support (DESIGN.md §11): when the work was launched
+        non-blocking BEFORE this call and ``fn`` merely resolves it,
+        ``launched_at`` pins the step's start time, so the deadline/straggler
+        duration is charged from launch to COMMIT (resolution), never just
+        the resolve wait — an async chunk that comes back late is a
+        ``deadline_miss`` even though its launch returned instantly.
+        ``retry_fn``, when given, replaces ``fn`` from the second attempt on:
+        a resolved-future attempt cannot be replayed, so retries run a fresh
+        synchronous recompute (timed from their own start).  ``deadline_s``
+        overrides ``cfg.deadline_s`` per call — the serving engine derives
+        it per chunk when the chunk length varies under a size policy.
         """
         on_fault = on_fault if on_fault is not None else self.on_fault
+        deadline = deadline_s if deadline_s is not None else self.cfg.deadline_s
         attempts = 0
         while True:
             try:
@@ -150,16 +166,19 @@ class FaultTolerantRunner:
                     if injected is not None:
                         raise injected
                 t0 = time.time()
-                out = fn()
+                if attempts == 0 and launched_at is not None:
+                    t0 = launched_at
+                out = fn() if (attempts == 0 or retry_fn is None) \
+                    else retry_fn()
                 dt = time.time() - t0
                 if self.timer.observe(step, dt):
                     self.events.append({'kind': 'straggler', 'step': step,
                                         'dt': dt})
-                if self.cfg.deadline_s is not None and dt > self.cfg.deadline_s:
+                if deadline is not None and dt > deadline:
                     self.deadline_misses += 1
                     self.events.append({'kind': 'deadline_miss', 'step': step,
                                         'dt': dt,
-                                        'deadline_s': self.cfg.deadline_s})
+                                        'deadline_s': deadline})
                 self._heartbeat(step)
                 return out
             except Exception as e:           # noqa: BLE001 — retry any fault

@@ -1,4 +1,4 @@
-"""Packed multi-stream stateful streaming engine (DESIGN.md §7, §10).
+"""Packed multi-stream stateful streaming engine (DESIGN.md §7, §10, §11).
 
 The deployment story of the paper — weights stay resident while audio frames
 stream through — turned into a serving substrate: every active stream's
@@ -32,11 +32,29 @@ non-finite guard quarantines exactly the poisoned slot; and
 preempted/evicted streams checkpoint their packed ``(h, c)`` rows + frame
 cursor so a resubmitted stream resumes **bit-equal** to an uninterrupted
 run.
+
+Async double-buffered dispatch (DESIGN.md §11): every step is split into a
+non-blocking LAUNCH (the jitted chunk call is dispatched and its device
+futures recorded) and a later COMMIT (``block_until_ready``, fault/deadline
+handling, quarantine scrub, cursor advance, retirement, refill).  The
+synchronous mode commits immediately after launching — a depth-0 pipeline —
+so both modes share one code path and stay bit-equal by construction.  With
+``async_dispatch=True`` the commit of chunk k is deferred: while the device
+computes chunk k, the host speculatively plans, packs, and launches chunk
+k+1 on top of chunk k's un-committed output-state futures (retirements and
+FIFO/priority admissions are deterministic at launch time, so the
+speculation is exact on the clean path).  If chunk k's commit deviates —
+engine fault, quarantine, or a scheduler decision the speculation could not
+see — the speculative launch is SQUASHED (its results are never observed)
+and the next step relaunches from committed state, preserving PR 6's
+commit-on-success discipline: nothing (states, cursors, outputs,
+checkpoints) commits until the in-flight chunk resolves.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,23 +62,48 @@ import numpy as np
 
 from ..models import chipmunk_net
 from ..runtime.fault import FaultConfig, FaultTolerantRunner
-from ..runtime.serving_faults import (EngineFailure, ServingFaultConfig,
+from ..runtime.serving_faults import (ChunkSizePolicy, EngineFailure,
+                                      ServingFaultConfig,
                                       StreamStateCheckpointer,
                                       elastic_replace, finite_slots)
 from .scheduler import SlotScheduler
 from .session import IncrementalCTCDecoder, StreamSession
 
 
+@dataclasses.dataclass
+class _InFlight:
+    """One launched-but-uncommitted chunk: the device futures of the jitted
+    call plus everything a retry needs to recompute it from committed state
+    (the frames/valid arrays and the poison edit).  Bookkeeping only — no
+    arithmetic of its own."""
+
+    chunk_idx: int                       # logical step index of this chunk
+    active: List[Tuple[int, StreamSession]]   # (slot, session) at launch
+    valid: np.ndarray                    # (S,) valid frame counts
+    frames_j: jax.Array                  # (S, chunk_len, n_in) device input
+    valid_j: jax.Array
+    poison_slot: Optional[int]           # injected NaN edit to re-apply
+    lp: jax.Array                        # device futures of the chunk call
+    new_states: tuple
+    finite: jax.Array
+    t_launch: float
+    chunk_len: int
+
+
 class StreamingEngine:
     """Continuous streaming over a packed slot grid of recurrent state.
 
     One instance owns ``max_streams`` state slots; streams are admitted from
-    a FIFO queue, advance ``chunk`` frames per ``step`` through one batched
-    call, and are retired when their frames are exhausted.  Numerics
-    contract: a stream's emitted log-probs equal the monolithic
-    ``chipmunk_net.forward`` of its full utterance on the same backend
-    (bit-equal on a fixed backend code path; allclose across backends),
-    regardless of which streams shared its batch (tests/test_streaming.py).
+    a priority/FIFO queue, advance up to ``chunk`` frames per ``step``
+    through one batched call, and are retired when their frames are
+    exhausted.  Numerics contract: a stream's emitted log-probs equal the
+    monolithic ``chipmunk_net.forward`` of its full utterance on the same
+    backend (bit-equal on a fixed backend code path; allclose across
+    backends), regardless of which streams shared its batch
+    (tests/test_streaming.py) — and regardless of ``async_dispatch`` and of
+    where the chunk-size policy moves chunk boundaries: the async engine's
+    outputs are bit-equal to the sync engine's for every admission/
+    eviction/preemption/fault schedule (tests/test_serving_async.py).
     A preempted stream resumed from its checkpoint continues bit-equal to
     an uninterrupted run (tests/test_serving_faults.py).
 
@@ -69,11 +112,20 @@ class StreamingEngine:
     per-chunk deadline watchdog, non-finite slot quarantine, and stream
     checkpoint/resume through ``CheckpointManager``.  Without it the engine
     behaves exactly as before (no guard, no runner — zero overhead).
+
+    ``async_dispatch`` enables §11 double buffering (launch of chunk k+1
+    overlapped with device compute of chunk k); ``chunk_policy`` (a
+    ``runtime.ChunkSizePolicy``) makes the per-step chunk length adapt to
+    the observed launch-to-commit wall time against the paper's 10 ms
+    frame-arrival budget.  Both are scheduling-only: outputs are
+    bit-invariant to them.
     """
 
     def __init__(self, cfg, params, *, max_streams: int = 4, chunk: int = 16,
                  decode_ctc: bool = False,
-                 faults: Optional[ServingFaultConfig] = None):
+                 faults: Optional[ServingFaultConfig] = None,
+                 async_dispatch: bool = False,
+                 chunk_policy: Optional[ChunkSizePolicy] = None):
         assert cfg.family == 'lstm', (
             'StreamingEngine serves the stateful recurrent family; token '
             'families keep the per-slot decode loop (launch/serve.py)')
@@ -82,6 +134,12 @@ class StreamingEngine:
         self.params = params
         self.chunk = chunk
         self.decode_ctc = decode_ctc
+        self.async_dispatch = bool(async_dispatch)
+        self._policy = chunk_policy
+        if chunk_policy is not None:
+            assert chunk_policy.chunk_max <= chunk, (
+                'chunk_policy.chunk_max exceeds the engine packing width',
+                chunk_policy.chunk_max, chunk)
         # pin ONE concrete backend per engine (the §7 bit-equality contract
         # holds per backend code path; the ladder needs a known rung)
         self.backend = resolve_serving_backend(
@@ -94,6 +152,8 @@ class StreamingEngine:
             for _ in range(cfg.n_layers))
         self._next_sid = 0
         self._step_idx = 0
+        self._pending: Optional[_InFlight] = None
+        self._poison_recorded: set = set()
         self.chunk_walls: List[float] = []   # per-step wall times (latency)
         self.events: List[dict] = []
 
@@ -136,9 +196,11 @@ class StreamingEngine:
         self._fwd = jax.jit(fwd)
 
     # ------------------------------------------------------------ admission
-    def submit(self, frames: np.ndarray, sid: Optional[int] = None
-               ) -> StreamSession:
-        """Queue an utterance ((L, n_in) host frames) for streaming."""
+    def submit(self, frames: np.ndarray, sid: Optional[int] = None,
+               priority: int = 0) -> StreamSession:
+        """Queue an utterance ((L, n_in) host frames) for streaming.
+        ``priority`` > 0 marks a latency-SLO stream: it is admitted ahead
+        of bulk streams and may displace one (§11 priority admission)."""
         frames = np.asarray(frames, np.float32)
         assert frames.ndim == 2 and frames.shape[1] == self.cfg.lstm_inputs, \
             frames.shape
@@ -147,26 +209,37 @@ class StreamingEngine:
         self._next_sid = max(self._next_sid, sid + 1)
         dec = IncrementalCTCDecoder() if self.decode_ctc else None
         sess = StreamSession(sid=sid, frames=frames, decoder=dec,
-                             t_enqueue=time.time())
+                             priority=priority, t_enqueue=time.time())
         self.sched.submit(sess)
         return sess
 
-    def _admit_slot(self, slot: int, sess: StreamSession) -> None:
-        """Admission callback: a recycled slot must never leak its previous
-        occupant's state — zero its packed rows, or, for a resumed session,
-        scatter the saved per-layer ``(h, c)`` rows back in (an exact host
-        round-trip, so resume is bit-equal to never having been evicted)."""
+    def _apply_admission(self, states: tuple, slot: int,
+                         sess: StreamSession) -> tuple:
+        """Functional slot initialisation, shared by the realized admission
+        (``_admit_slot``) and the §11 speculative launch composition: a
+        recycled slot must never leak its previous occupant's state — zero
+        its packed rows, or, for a resumed session, scatter the saved
+        per-layer ``(h, c)`` rows back in (an exact host round-trip, so
+        resume is bit-equal to never having been evicted).  Pure functional
+        update — both call sites perform the identical op sequence, which
+        is what keeps the speculative input bit-equal to the committed
+        one."""
         if sess.saved_state is not None:
-            self.states = tuple(
+            return tuple(
                 (h.at[slot].set(jnp.asarray(rh)),
                  c.at[slot].set(jnp.asarray(rc)))
-                for (h, c), (rh, rc) in zip(self.states, sess.saved_state))
+                for (h, c), (rh, rc) in zip(states, sess.saved_state))
+        return jax.tree.map(lambda a: a.at[slot].set(0), states)
+
+    def _admit_slot(self, slot: int, sess: StreamSession) -> None:
+        """Admission callback (see ``_apply_admission`` for the numerics):
+        applies the slot initialisation to the committed cache and clears
+        the session's saved rows."""
+        self.states = self._apply_admission(self.states, slot, sess)
+        if sess.saved_state is not None:
             sess.saved_state = None
             self._record('resume', sid=sess.sid, slot=slot,
                          cursor=sess.cursor)
-        else:
-            self.states = jax.tree.map(
-                lambda a: a.at[slot].set(0), self.states)
 
     def _snapshot_slot(self, slot: int) -> tuple:
         """Host copy of one slot's per-layer ``(h, c)`` rows — the stream's
@@ -180,10 +253,14 @@ class StreamingEngine:
         """Preempt a stream: snapshot its packed per-layer ``(h, c)`` rows +
         frame cursor onto the session (and through the stream checkpointer
         when one is configured), free its slot, and — with ``requeue=True``
-        — re-enter it at the front of the pending queue.  The resumed
-        stream continues **bit-equal** to an uninterrupted run on the same
-        backend (tests/test_serving_faults.py).  Returns the session, or
+        — re-enter it at the front of its priority class in the pending
+        queue.  The resumed stream continues **bit-equal** to an
+        uninterrupted run on the same backend (tests/test_serving_faults.py,
+        tests/test_serving_async.py).  A control-plane op: under async
+        dispatch the in-flight chunk is committed first (``_sync``), so the
+        snapshot always reads committed rows.  Returns the session, or
         None when ``sid`` is not active."""
+        self._sync()
         for slot, sess in self.sched.active():
             if sess.sid == sid:
                 sess.saved_state = self._snapshot_slot(slot)
@@ -246,19 +323,6 @@ class StreamingEngine:
     def _record(self, kind: str, **info) -> None:
         self.events.append({'kind': kind, 'step': self._step_idx, **info})
 
-    def _inject_poison(self) -> None:
-        """Deterministic state-poisoning hook (``faults.poison_at``): write
-        NaN into the scheduled slot's packed rows before this step's chunk.
-        Test/demo injection only — the guard + quarantine path downstream
-        is what production exercises."""
-        if self.faults is None:
-            return
-        slot = self.faults.poison_at.get(self._step_idx)
-        if slot is not None:
-            self.states = jax.tree.map(
-                lambda a: a.at[slot].set(jnp.nan), self.states)
-            self._record('poison_injected', slot=slot)
-
     def _on_engine_fault(self, exc: BaseException, attempt: int) -> None:
         """Between a failed chunk attempt and its retry: transient faults
         just retry; an ``EngineFailure`` degrades the backend one rung down
@@ -303,69 +367,266 @@ class StreamingEngine:
                 self._record('quarantine', sid=sess.sid, slot=slot)
         return new_states
 
-    # ------------------------------------------------------------- stepping
-    def step(self) -> bool:
-        """Advance every active stream by up to ``chunk`` frames.
+    # -------------------------------------------------- launch/commit core
+    def _next_chunk_len(self) -> int:
+        """Frames the next chunk should carry: the policy's current size
+        (never above the engine packing width), else the fixed ``chunk``."""
+        if self._policy is not None:
+            return min(self._policy.size, self.chunk)
+        return self.chunk
 
-        Admits pending streams into free slots, packs all active streams
-        into ONE batched chunked call (padded slots masked out via
-        ``valid_len``), scatters the valid output rows back to the sessions,
-        and retires exhausted streams.  With a fault config attached the
-        call is driven by the generalized ``FaultTolerantRunner`` (injected
-        failures degrade the backend and retry the SAME chunk; overruns of
-        the per-chunk deadline are recorded), the packed cache is scrubbed
-        by the non-finite quarantine before commit, and nothing — states,
-        cursors, outputs — is committed unless the attempt succeeded, so a
-        retried chunk is recomputed from unchanged state.  Returns False
-        when there was nothing to do (the drain-loop exit condition).
-        """
-        self.sched.refill(self._admit_slot)
-        active = self.sched.active()
-        if not active:
-            return False
-        self._inject_poison()
+    def _deadline_for(self, chunk_len: int) -> Optional[float]:
+        """Per-chunk deadline for the watchdog: the chunk-size policy's
+        arrival-rate budget when one is attached (so ``deadline_miss``
+        events and the policy's feedback agree), else the fault config's
+        ``resolve_deadline_s`` for THIS chunk length."""
+        if self._policy is not None:
+            return self._policy.budget_s(chunk_len)
+        if self.faults is not None:
+            return self.faults.resolve_deadline_s(chunk_len)
+        return None
 
-        S, T = self.sched.num_slots, self.chunk
-        frames = np.zeros((S, T, self.cfg.lstm_inputs), np.float32)
+    def _pack(self, plan, chunk_len: int):
+        """Host-side packing of one chunk: gather each planned stream's next
+        frames at its planned cursor into the (S, chunk_len, n_in) batch
+        buffer.  ``plan`` rows are (slot, session, cursor) — the cursor is
+        explicit so the async path can pack SPECULATIVELY (committed cursor
+        + in-flight valid count) without mutating any session."""
+        S = self.sched.num_slots
+        frames = np.zeros((S, chunk_len, self.cfg.lstm_inputs), np.float32)
         valid = np.zeros((S,), np.int32)
-        for i, sess in active:
-            part = sess.next_chunk(T)
-            frames[i, :len(part)] = part
-            valid[i] = len(part)
+        for slot, sess, cursor in plan:
+            part = sess.frames[cursor:cursor + chunk_len]
+            frames[slot, :len(part)] = part
+            valid[slot] = len(part)
+        return frames, valid
+
+    def _launch(self, states_in: tuple, plan, chunk_idx: int,
+                chunk_len: int) -> _InFlight:
+        """Dispatch one chunk WITHOUT blocking: compose the injected poison
+        edit (``faults.poison_at``) onto the input states, pack the planned
+        streams' frames, and fire the jitted chunk call — its results stay
+        device futures inside the returned ``_InFlight`` record until
+        ``_commit`` resolves them.  Nothing engine-visible mutates here."""
+        poison = (self.faults.poison_at.get(chunk_idx)
+                  if self.faults is not None else None)
+        if poison is not None:
+            states_in = jax.tree.map(
+                lambda a: a.at[poison].set(jnp.nan), states_in)
+            if chunk_idx not in self._poison_recorded:
+                self._poison_recorded.add(chunk_idx)
+                self._record('poison_injected', slot=poison, step=chunk_idx)
+        frames, valid = self._pack(plan, chunk_len)
         frames_j, valid_j = jnp.asarray(frames), jnp.asarray(valid)
-
-        def attempt():
-            lp, st, finite = self._fwd(self.params, self.states,
-                                       frames_j, valid_j)
-            return (np.asarray(jax.block_until_ready(lp)), st,
-                    np.asarray(finite))
-
         t0 = time.time()
+        lp, st, fin = self._fwd(self.params, states_in, frames_j, valid_j)
+        return _InFlight(chunk_idx=chunk_idx,
+                         active=[(i, s) for i, s, _ in plan],
+                         valid=valid, frames_j=frames_j, valid_j=valid_j,
+                         poison_slot=poison, lp=lp, new_states=st,
+                         finite=fin, t_launch=t0, chunk_len=chunk_len)
+
+    def _commit(self, rec: _InFlight) -> bool:
+        """Resolve one in-flight chunk and commit it: block on the device
+        futures (under the fault runner when configured — injected failures
+        discard the launched futures and retry with a fresh synchronous
+        recompute from COMMITTED state, after the ladder degradation), feed
+        the launch-to-commit wall time to the deadline watchdog and the
+        chunk-size policy, scrub quarantined slots, then — only now —
+        advance states, cursors, outputs, and retirement.  Returns True iff
+        the commit was clean (no fault, no quarantine): the async path may
+        adopt its speculative launch only then."""
+        deadline = self._deadline_for(rec.chunk_len)
+
+        def resolve():
+            return (np.asarray(jax.block_until_ready(rec.lp)),
+                    rec.new_states, np.asarray(rec.finite))
+
+        def retry():
+            # the failed futures are dead; recompute synchronously from the
+            # committed cache (admissions for this chunk are already
+            # realized in it; only the injected poison edit is re-applied)
+            states_in = self.states
+            if rec.poison_slot is not None:
+                states_in = jax.tree.map(
+                    lambda a: a.at[rec.poison_slot].set(jnp.nan), states_in)
+            lp, st, fin = self._fwd(self.params, states_in,
+                                    rec.frames_j, rec.valid_j)
+            return (np.asarray(jax.block_until_ready(lp)), st,
+                    np.asarray(fin))
+
+        faulted = False
         if self._runner is not None:
+            n_before = sum(1 for e in self._runner.events
+                           if e['kind'] == 'fault')
             host, new_states, finite = self._runner.run(
-                self._step_idx, attempt, on_fault=self._on_engine_fault)
+                rec.chunk_idx, resolve, on_fault=self._on_engine_fault,
+                retry_fn=retry, launched_at=rec.t_launch,
+                deadline_s=deadline)
+            faulted = sum(1 for e in self._runner.events
+                          if e['kind'] == 'fault') > n_before
         else:
-            host, new_states, finite = attempt()
-        self.chunk_walls.append(time.time() - t0)
+            host, new_states, finite = resolve()
+        dt = time.time() - rec.t_launch
+        self.chunk_walls.append(dt)
+        if self._policy is not None:
+            self._policy.observe(rec.chunk_len, dt)
+            if self._runner is None and dt > self._policy.budget_s(
+                    rec.chunk_len):
+                self._record('deadline_miss', dt=dt,
+                             deadline_s=self._policy.budget_s(rec.chunk_len))
 
-        if not finite.all():
-            new_states = self._quarantine(active, finite, new_states)
+        quarantined = not bool(finite.all())
+        if quarantined:
+            new_states = self._quarantine(rec.active, finite, new_states)
         self.states = new_states
-
-        for i, sess in active:
+        for i, sess in rec.active:
             if sess.error is not None:      # quarantined this step
                 continue
-            sess.consume(host[i, :valid[i]])
+            sess.consume(host[i, :rec.valid[i]])
             if sess.remaining == 0:
                 sess.t_done = time.time()
                 self.sched.finish(i)
         self._step_idx += 1
+        return not (quarantined or faulted)
+
+    def _sync(self) -> None:
+        """Async control-plane barrier: commit the in-flight chunk, if any.
+        Preemption/eviction snapshots and checkpoint saves must read
+        COMMITTED state, so every control op drains the pipeline first.
+        No-op in sync mode (nothing is ever left in flight)."""
+        if self._pending is not None:
+            rec, self._pending = self._pending, None
+            self._commit(rec)
+
+    def _maybe_priority_preempt(self) -> None:
+        """§11 priority admission: when every slot is busy and a strictly
+        higher-priority stream waits, preempt the scheduler's candidate
+        (checkpoint rows + cursor, requeue within its class) so the next
+        refill admits the SLO stream.  Scheduling only — the displaced
+        stream later resumes bit-equal (§10)."""
+        slot = self.sched.preempt_candidate()
+        if slot is not None:
+            sess = self.sched.slots[slot]
+            self.preempt(sess.sid)
+
+    def _speculate(self, rec: _InFlight):
+        """Plan chunk k+1 while chunk k is still in flight (no mutation).
+
+        Retirements and admissions are deterministic at launch time: a
+        stream retires iff its remaining frames minus the in-flight valid
+        count hit zero, and refill admits the pending queue (already in
+        priority order) into free slots in slot order.  Returns ``(plan,
+        admissions)`` — plan rows are (slot, session, speculative cursor) —
+        or None when the next step cannot be speculated: nothing to run, a
+        scheduled engine failure on the in-flight chunk (its commit will
+        deviate), or a waiting stream that outranks an active one (the
+        commit-time priority preemption must run serialized)."""
+        if self.faults is not None and rec.chunk_idx in self.faults.fail_at:
+            return None
+        survivors, freeing = [], []
+        for slot, sess in rec.active:
+            if sess.remaining - int(rec.valid[slot]) > 0:
+                survivors.append((slot, sess,
+                                  sess.cursor + int(rec.valid[slot])))
+            else:
+                freeing.append(slot)
+        free = sorted({i for i, s in enumerate(self.sched.slots)
+                       if s is None} | set(freeing))
+        queue = list(self.sched.pending)
+        if queue and not free:
+            low = min(s.priority for _, s, _ in survivors)
+            if max(q.priority for q in queue) > low:
+                return None
+        admissions = []
+        for slot in free:
+            if not queue:
+                break
+            admissions.append((slot, queue.pop(0)))
+        plan = survivors + [(slot, sess, sess.cursor)
+                            for slot, sess in admissions]
+        plan.sort(key=lambda row: row[0])
+        if not plan:
+            return None
+        return plan, admissions
+
+    # ------------------------------------------------------------- stepping
+    def _step_async(self) -> bool:
+        """One §11 double-buffered step: speculatively pack + launch chunk
+        k+1 on the in-flight chunk k's output-state futures (host work and
+        device compute overlap here), then commit chunk k; adopt the
+        speculative launch only if the commit was clean AND the realized
+        admissions match the speculation, else squash it."""
+        if self._pending is None:
+            # pipeline fill: plan from committed state, launch, don't commit
+            self._maybe_priority_preempt()
+            self.sched.refill(self._admit_slot)
+            plan = [(i, s, s.cursor) for i, s in self.sched.active()]
+            if not plan:
+                return False
+            self._pending = self._launch(self.states, plan, self._step_idx,
+                                         self._next_chunk_len())
+            return True
+        rec, self._pending = self._pending, None
+        spec = self._speculate(rec)
+        spec_rec = None
+        if spec is not None:
+            plan, admissions = spec
+            states_in = rec.new_states
+            for slot, sess in admissions:
+                states_in = self._apply_admission(states_in, slot, sess)
+            spec_rec = self._launch(states_in, plan, rec.chunk_idx + 1,
+                                    self._next_chunk_len())
+        clean = self._commit(rec)
+        self._maybe_priority_preempt()
+        admitted = self.sched.refill(self._admit_slot)
+        if (clean and spec_rec is not None
+                and [(i, s.sid) for i, s in admitted]
+                == [(i, s.sid) for i, s in spec[1]]):
+            self._pending = spec_rec
+        elif spec_rec is not None:
+            # the commit deviated from the speculation: drop the launched
+            # futures unobserved and relaunch from committed state next step
+            self._record('squash', chunk=spec_rec.chunk_idx)
+        return True
+
+    def step(self) -> bool:
+        """Advance every active stream by up to one chunk of frames.
+
+        Admits pending streams into free slots (priority first), packs all
+        active streams into ONE batched chunked call (padded slots masked
+        out via ``valid_len``), scatters the valid output rows back to the
+        sessions, and retires exhausted streams.  Synchronous mode launches
+        and immediately commits (a depth-0 pipeline); ``async_dispatch``
+        defers the commit one step so host packing overlaps device compute
+        (``_step_async``).  With a fault config attached the commit is
+        driven by the generalized ``FaultTolerantRunner`` (injected
+        failures degrade the backend and retry the SAME chunk
+        synchronously; overruns of the per-chunk deadline are recorded
+        against launch-to-commit time), the packed cache is scrubbed by the
+        non-finite quarantine before commit, and nothing — states, cursors,
+        outputs — is committed unless the attempt succeeded, so a retried
+        chunk is recomputed from unchanged state.  Returns False when there
+        was nothing to do (the drain-loop exit condition).
+        """
+        if self.async_dispatch:
+            return self._step_async()
+        self._maybe_priority_preempt()
+        self.sched.refill(self._admit_slot)
+        plan = [(i, s, s.cursor) for i, s in self.sched.active()]
+        if not plan:
+            return False
+        rec = self._launch(self.states, plan, self._step_idx,
+                           self._next_chunk_len())
+        self._commit(rec)
         return True
 
     def run(self) -> List[StreamSession]:
-        """Drain: step until every submitted stream has been served."""
+        """Drain: step until every submitted stream has been served (the
+        async pipeline is fully committed on exit)."""
         while self.sched.busy:
             self.step()
+        self._sync()
         return self.sched.done
 
     # ------------------------------------------------------------- metrics
@@ -373,7 +634,10 @@ class StreamingEngine:
         """Throughput/latency summary over the completed streams, plus the
         §10 fault telemetry: merged structured events (engine + runner),
         per-kind counts, deadline-miss total, the current (possibly
-        degraded) backend, and the runner's last heartbeat."""
+        degraded) backend, and the runner's last heartbeat.  §11 additions:
+        the dispatch mode and the chunk-size policy's current size/miss
+        count.  Read-only snapshot — an async in-flight chunk is NOT
+        committed by this call."""
         done = self.sched.done
         frames = sum(s.length for s in done)
         lats = [s.t_done - s.t_enqueue for s in done if s.t_done]
@@ -383,6 +647,12 @@ class StreamingEngine:
         counts: dict = {}
         for e in events:
             counts[e['kind']] = counts.get(e['kind'], 0) + 1
+        if self._runner is not None:
+            misses = self._runner.deadline_misses
+        elif self._policy is not None:
+            misses = self._policy.misses
+        else:
+            misses = 0
         return {
             'streams': len(done),
             'frames': frames,
@@ -391,10 +661,11 @@ class StreamingEngine:
                             if self.chunk_walls else 0.0),
             'backend': self.backend,
             'steps': self._step_idx,
+            'async': self.async_dispatch,
+            'chunk_len': self._next_chunk_len(),
             'events': events,
             'event_counts': counts,
-            'deadline_misses': (self._runner.deadline_misses
-                                if self._runner else 0),
+            'deadline_misses': misses,
             'heartbeat': (self._runner.last_heartbeat
                           if self._runner else None),
         }

@@ -59,12 +59,18 @@ class StreamSession:
     admission callback, then cleared); ``error`` is the terminal fault
     string set when the stream is quarantined — an errored session is never
     retired into ``done`` and must not be resubmitted.
+
+    ``priority`` (DESIGN.md §11) is the admission class the scheduler
+    orders the pending queue by: higher values are latency-SLO streams that
+    are admitted first and may displace (preempt) an active bulk stream —
+    scheduling only, a stream's outputs are bit-invariant to it (§7).
     """
 
     sid: int
     frames: np.ndarray
     decoder: Optional[IncrementalCTCDecoder] = None
     cursor: int = 0
+    priority: int = 0
     log_probs: List[np.ndarray] = dataclasses.field(default_factory=list)
     t_enqueue: float = 0.0
     t_first: Optional[float] = None

@@ -29,6 +29,25 @@ def lists(elements, min_size=0, max_size=10):
                                   range(rnd.randint(min_size, max_size))])
 
 
+def booleans():
+    return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+
+def sampled_from(values):
+    values = list(values)
+    return _Strategy(lambda rnd: values[rnd.randrange(len(values))])
+
+
+def tuples(*strats):
+    return _Strategy(lambda rnd: tuple(s.draw(rnd) for s in strats))
+
+
+def builds(fn, *strats, **kw_strats):
+    return _Strategy(lambda rnd: fn(*[s.draw(rnd) for s in strats],
+                                    **{k: s.draw(rnd)
+                                       for k, s in kw_strats.items()}))
+
+
 def given(*strats):
     def deco(fn):
         # NB: no functools.wraps — pytest must see the zero-arg signature of
@@ -56,3 +75,7 @@ strategies = types.ModuleType('hypothesis.strategies')
 strategies.integers = integers
 strategies.floats = floats
 strategies.lists = lists
+strategies.booleans = booleans
+strategies.sampled_from = sampled_from
+strategies.tuples = tuples
+strategies.builds = builds

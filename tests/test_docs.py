@@ -67,6 +67,12 @@ CONTRACTS = {
     serving_faults_mod.elastic_replace: 'bit-preserved',
     engine_mod.StreamingEngine.preempt: 'bit-equal',
     engine_mod.StreamingEngine.resume_from_checkpoint: 'bit-equal',
+    # async dispatch + deadline-aware chunk sizing contracts (DESIGN.md §11)
+    serving_faults_mod.ChunkSizePolicy: 'realtime_chunk_budget_s',
+    lstm_core.select_quantized_stack_backend: 'bit-identical',
+    stack_ops_mod.lstm_stack_seq_quantized_auto: 'bit-identical',
+    engine_mod.StreamingEngine.step: 'commit',
+    scheduler_mod.SlotScheduler.preempt_candidate: 'priority',
 }
 
 
