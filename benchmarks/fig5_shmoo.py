@@ -1,32 +1,48 @@
 """Paper Fig. 5 — frequency / power / efficiency vs core voltage (shmoo).
 
-Sweeps the calibrated silicon model over the functional range 0.75-1.24 V and
-writes the curve to results/fig5_shmoo.csv.
+Sweeps the calibrated silicon model over the functional range 0.75-1.24 V
+and writes the curve to results/fig5_shmoo.csv IN THE SHARED SHMOO RECORD
+FORMAT (``repro.tune.shmoo.ShmooRecord`` / ``write_shmoo_csv`` — the same
+harness the schedule autotuner's candidate sweeps use), so the repo's two
+shmoo paths cannot drift: one record type, one CSV writer, one header
+convention (``suite`` column, then params, then metrics).
 """
 import pathlib
 
 from repro.core import perf_model as pm
+from repro.tune import ShmooRecord, write_shmoo_csv
 
 from .common import emit
 
 OUT = pathlib.Path(__file__).resolve().parent.parent / 'results'
 
 
+def sweep(points: int = 50):
+    """The Fig. 5 voltage sweep as shared shmoo records."""
+    records = []
+    for i in range(points):
+        v = 0.75 + (1.24 - 0.75) * i / (points - 1)
+        records.append(ShmooRecord(
+            suite='fig5_voltage',
+            params={'voltage_v': round(v, 4)},
+            metrics={'freq_mhz': pm.freq_hz(v) / 1e6,
+                     'power_mw': pm.power_w(v) * 1e3,
+                     'gops': pm.peak_gops(v),
+                     'gops_per_mw': pm.efficiency_gops_per_mw(v)}))
+    return records
+
+
 def run():
     OUT.mkdir(exist_ok=True)
-    rows = ['voltage_v,freq_mhz,power_mw,gops,gops_per_mw']
-    best_eff, best_v = 0.0, 0.0
-    for i in range(50):
-        v = 0.75 + (1.24 - 0.75) * i / 49
-        f = pm.freq_hz(v)
-        p = pm.power_w(v)
-        g = pm.peak_gops(v)
-        e = pm.efficiency_gops_per_mw(v)
-        rows.append(f'{v:.4f},{f/1e6:.2f},{p*1e3:.3f},{g:.2f},{e:.3f}')
-        if e > best_eff:
-            best_eff, best_v = e, v
-    (OUT / 'fig5_shmoo.csv').write_text('\n'.join(rows))
+    records = sweep()
+    write_shmoo_csv(OUT / 'fig5_shmoo.csv', records,
+                    param_order=['voltage_v'],
+                    metric_order=['freq_mhz', 'power_mw', 'gops',
+                                  'gops_per_mw'])
+    best = max(records, key=lambda r: r.metrics['gops_per_mw'])
+    best_eff = best.metrics['gops_per_mw']
     emit('fig5/peak_efficiency', 0.0,
-         f'{best_eff:.2f}Gop/s/mW@{best_v:.2f}V (paper: 3.08@0.75V)')
-    emit('fig5/points', 0.0, f'50 -> {OUT / "fig5_shmoo.csv"}')
+         f'{best_eff:.2f}Gop/s/mW@{best.params["voltage_v"]:.2f}V '
+         f'(paper: 3.08@0.75V)')
+    emit('fig5/points', 0.0, f'{len(records)} -> {OUT / "fig5_shmoo.csv"}')
     return best_eff

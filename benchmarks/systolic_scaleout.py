@@ -19,6 +19,18 @@ ppermute).  Same arithmetic either way; the staged path wins on rounds
 within a stage vs 10-wide across the flat grid) — the same levers as the
 silicon's 3x(5x5) Table-2 row.
 
+A third row times the staged stack with the in-stage diagonals BATCHED
+(``in_stage='batched'`` — each stage retires its whole layer block as one
+wavefront of Tc+Lb-1 rounds instead of Lb sequential Tc-loops).  On silicon
+(and in the cycle model, ``staged_wavefront_cycles(in_stage_batched=True)``)
+that trades round count for concurrency and wins ~1.9x; on this host the 50
+"devices" time-slice ONE core, the emulation is FLOP-bound, and the
+sequential order's hoisted full-width below-GEMMs are FLOP-optimal — so the
+measured ratio lands BELOW 1.  The row reports that honestly; the measured-
+schedule autotuner (repro.tune) is the per-host decider, and the committed
+tuned_schedules.json carries this host's measured winner.  The model/
+measurement bracket is pinned in tests/test_perf_model.py.
+
 The driver process must keep seeing a single device (smoke tests/benches run
 in it), so this suite spawns subprocesses with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the same pattern as
@@ -142,29 +154,43 @@ def layerwise(x):
 
 f_lw = jax.jit(layerwise)
 f_st = jax.jit(lambda x: systolic.systolic_lstm_stack_seq(
-    stack, mesh_staged, x, chunk=Tc)[0])
+    stack, mesh_staged, x, chunk=Tc, in_stage='sequential')[0])
+f_bt = jax.jit(lambda x: systolic.systolic_lstm_stack_seq(
+    stack, mesh_staged, x, chunk=Tc, in_stage='batched')[0])
 r_lw = np.asarray(jax.block_until_ready(f_lw(xs)))
 r_st = np.asarray(jax.block_until_ready(f_st(xs)))
+r_bt = np.asarray(jax.block_until_ready(f_bt(xs)))
 err = float(np.abs(r_lw - r_st).max())
 assert err < 1e-4, err
+np.testing.assert_array_equal(r_bt, r_st)   # schedule change, not numerics
 
-# Alternate the two paths per iteration so host-load drift hits both equally.
-lws, sts = [], []
+# Alternate the three paths per iteration so host-load drift hits all equally.
+lws, sts, bts = [], [], []
 for _ in range(5):
     t0 = time.perf_counter(); jax.block_until_ready(f_lw(xs))
     lws.append(time.perf_counter() - t0)
     t0 = time.perf_counter(); jax.block_until_ready(f_st(xs))
     sts.append(time.perf_counter() - t0)
+    t0 = time.perf_counter(); jax.block_until_ready(f_bt(xs))
+    bts.append(time.perf_counter() - t0)
 us_lw = sorted(lws)[len(lws) // 2] * 1e6
 us_st = sorted(sts)[len(sts) // 2] * 1e6
+us_bt = sorted(bts)[len(bts) // 2] * 1e6
 print(f'ROW|scaleout/stack_layerwise_systolic|{us_lw:.1f}|'
       f'T={T} B={B} 123->421x3 on one flat 5x10 grid (50 engines; 3 '
       f'sequential whole-sequence launches, 10-wide psum chain per step)')
 print(f'ROW|scaleout/stack_fused_systolic|{us_st:.1f}|'
       f'T={T} B={B} 123->421x3 on a 2-stage 2x(5x5) mesh (same 50 engines; '
       f'layer blocks stage-stationary, Tc={Tc} chunks ppermute-pipelined, '
-      f'5-wide collectives; {us_lw / us_st:.2f}x vs layerwise flat grid, '
-      f'max_err={err:.1e})')
+      f'5-wide collectives; sequential in-stage slot loop; '
+      f'{us_lw / us_st:.2f}x vs layerwise flat grid, max_err={err:.1e})')
+print(f'ROW|scaleout/stack_fused_systolic_batched|{us_bt:.1f}|'
+      f'T={T} B={B} 123->421x3, same 2-stage 2x(5x5) mesh and Tc={Tc} but '
+      f'in-stage diagonals batched (Tc+Lb-1 rounds/macro-step vs Lb*Tc); '
+      f'{us_st / us_bt:.2f}x vs sequential in-stage, '
+      f'{us_lw / us_bt:.2f}x vs layerwise flat grid; bit-equal outputs; '
+      f'single-core FLOP-bound emulation, silicon model predicts the '
+      f'batched win -- repro.tune picks per host)')
 """
 
 

@@ -338,6 +338,30 @@ def select_lstm_backend(n_x: int, n_h: int, T: int, batch: int,
     return 'xla_scan'
 
 
+def _stack_backend_admissible(backend: str, n_x: int, n_h: int,
+                              n_layers: int, T: int, batch: int, *,
+                              platform: Optional[str] = None,
+                              mesh=None) -> bool:
+    """Whether a cached stack-backend winner may be honoured HERE.
+
+    The schedule cache records measured winners, but admission stays with
+    the live rules: the systolic backends need the (admissible) mesh they
+    were measured on, and the raw Pallas kernels only exist as interpret-
+    mode emulation off-TPU — a cache must never be able to force either.
+    ``xla_scan`` is admissible everywhere.
+    """
+    if backend not in BACKENDS or backend == 'auto':
+        return False
+    if backend == 'xla_scan':
+        return True
+    if backend in ('pallas_seq_systolic', 'pallas_seq_fused_systolic'):
+        from .systolic import seq_scaleout_admissible
+        layers = n_layers if backend == 'pallas_seq_fused_systolic' else None
+        return (mesh is not None and T >= _SEQ_MIN_T
+                and seq_scaleout_admissible(n_h, mesh, n_layers=layers))
+    return (platform or jax.default_backend()) == 'tpu'
+
+
 def select_stack_backend(n_x: int, n_h: int, n_layers: int, T: int,
                          batch: int, *, platform: Optional[str] = None,
                          mesh=None) -> str:
@@ -357,10 +381,24 @@ def select_stack_backend(n_x: int, n_h: int, n_layers: int, T: int,
     per-layer ``select_lstm_backend`` rules, i.e. the layerwise
     composition.  Selection never changes numerics — all backends are
     interchangeable.
+
+    An installed schedule cache (``repro.tune``, kind ``'stack_backend'``)
+    takes precedence over every heuristic below — a measured winner beats
+    an estimated one — but only when the named backend is still admissible
+    here (mesh present/admissible for the systolic backends, TPU for the
+    raw Pallas kernels): admission guards are correctness/efficiency
+    gates, not preferences, so a stale cache can never force an
+    inadmissible launch.
     """
     if mesh is None:
         from .systolic import current_mesh
         mesh = current_mesh()
+    tuned = _tuned_backend('stack_backend', n_x, n_h, n_layers, T, batch,
+                           mesh=mesh)
+    if tuned is not None and _stack_backend_admissible(
+            tuned, n_x, n_h, n_layers, T, batch, platform=platform,
+            mesh=mesh):
+        return tuned
     if mesh is not None and T >= _SEQ_MIN_T:
         from .systolic import seq_scaleout_admissible
         if seq_scaleout_admissible(n_h, mesh, n_layers=n_layers):
@@ -380,15 +418,31 @@ def select_stack_backend(n_x: int, n_h: int, n_layers: int, T: int,
     return per_layer
 
 
-# Calibration point for the int8 stack dispatch (BENCH_kernels.json pair
+# Cold-cache fallback for the int8 stack dispatch (BENCH_kernels.json pair
 # "T=32 B=4 48->96x3 tile=48 int8"): the fused wavefront LOSES to the
 # layerwise chain at 96 hidden (23.9 ms vs 14.0 ms) — its L-1-diagonal
 # fill/drain bubble, stacked-weight relayout, and diagonal re-indexing are
 # fixed costs, while the per-layer matmul work it amortises shrinks with the
-# hidden width.  Fused admission therefore requires a hidden width safely
-# above that measured losing point; the paper's 421-hidden Table-2 stack
-# clears it.
+# hidden width.  Without a measured schedule-cache entry (``repro.tune``),
+# fused admission therefore requires a hidden width safely above that
+# measured losing point; the paper's 421-hidden Table-2 stack clears it.
 _Q_FUSED_MIN_NH = 256
+
+
+def _tuned_backend(kind: str, n_x: int, n_h: int, n_layers: int, T: int,
+                   batch: int, mesh=None) -> Optional[str]:
+    """Measured winner for a backend decision from the installed schedule
+    cache (``repro.tune.install_schedule_cache``), or None on a miss.
+    Dispatch-only by the cache contract: every backend an entry can name is
+    numerics-equivalent to the fallback choice, so a hit changes the launch
+    shape, never the outputs."""
+    from ..tune.schedule import current_schedule_cache, mesh_signature
+    cache = current_schedule_cache()
+    if cache is None:
+        return None
+    ent = cache.lookup(kind, n_x=n_x, n_h=n_h, n_layers=n_layers, T=T,
+                       B=batch, mesh=mesh_signature(mesh))
+    return ent.backend if ent is not None and ent.backend else None
 
 
 def select_quantized_stack_backend(n_h: int, n_layers: int, T: int,
@@ -396,15 +450,20 @@ def select_quantized_stack_backend(n_h: int, n_layers: int, T: int,
     """Int8 stack dispatch: ``'fused'`` (the §8 wavefront
     ``lstm_stack_seq_quantized``) or ``'layerwise'`` (chained
     ``lstm_layer_seq_quantized``).  Both are bit-identical — this picks the
-    faster launch shape only: the wavefront needs at least two layers to
-    pipeline, a sequence long enough to amortise residency (``_SEQ_MIN_T``,
-    as in ``select_stack_backend``), and a hidden width above the
-    ``_Q_FUSED_MIN_NH`` calibration floor — below it the measured
-    BENCH_kernels.json rows show the layerwise chain winning (ROADMAP item:
-    gate the int8 fused stack at small shapes)."""
-    if n_layers >= 2 and T >= _SEQ_MIN_T and n_h >= _Q_FUSED_MIN_NH:
-        return 'fused'
-    return 'layerwise'
+    faster launch shape only.  The structural guards are authoritative (the
+    wavefront needs at least two layers to pipeline and a sequence long
+    enough to amortise residency, ``_SEQ_MIN_T``); past them, a MEASURED
+    winner from the installed schedule cache (``repro.tune``, kind
+    ``'q_stack_backend'``) decides, and only on a cache miss does the
+    hand-calibrated ``_Q_FUSED_MIN_NH`` hidden-width floor — below it the
+    measured BENCH_kernels.json rows show the layerwise chain winning —
+    remain as the cold-cache fallback."""
+    if n_layers < 2 or T < _SEQ_MIN_T:
+        return 'layerwise'
+    tuned = _tuned_backend('q_stack_backend', n_h, n_h, n_layers, T, batch)
+    if tuned in ('fused', 'layerwise'):
+        return tuned
+    return 'fused' if n_h >= _Q_FUSED_MIN_NH else 'layerwise'
 
 
 def _degrade_staged_single_layer(n_h: int) -> str:

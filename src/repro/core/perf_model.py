@@ -256,31 +256,56 @@ def wavefront_gops(layers: Sequence[LayerDims], cfg: TileConfig, v: float,
 
 def staged_wavefront_cycles(layers: Sequence[LayerDims], cfg: TileConfig,
                             T: int, chunk: int = 1, tile: int = N_LSTM,
-                            beta: float = BETA) -> float:
+                            beta: float = BETA,
+                            in_stage_batched: bool = False) -> float:
     """Cycles for a T-step utterance under the staged pipeline schedule.
 
-    ``(K + S - 1) * chunk * max(block cycles)`` with ``K = ceil(T/chunk)``:
-    every macro-step costs the bottleneck stage's layer block over one
-    chunk.  With one layer per stage and ``chunk=1`` this reduces exactly
-    to ``wavefront_cycles`` (the per-diagonal schedule); fewer stages than
-    layers grow the bottleneck block — trading pipeline depth for
-    per-stage serialisation, which is what the Table-2 staged comparison
-    quantifies.  ``arrays == 1`` degenerates to the sequential model
-    (including per-frame weight re-streaming).
+    ``(K + S - 1) * max(macro cycles)`` with ``K = ceil(T/chunk)``: every
+    macro-step costs the bottleneck stage's layer block over one chunk.
+    The in-stage order decides what a macro-step costs (the §9
+    ``in_stage`` knob — schedule-only, bit-equal either way):
+
+    * sequential (default, the PR 5 dataflow): the block's layers run slot
+      by slot over the chunk — ``Lb * Tc`` rounds, ``chunk * sum(layer
+      step cycles)`` per macro-step;
+    * ``in_stage_batched``: the (slot, step) grid walks diagonal-major
+      with every live slot in one batched dot per diagonal — ``Tc + Lb -
+      1`` rounds, each costing the block's WIDEST layer step (the slots
+      execute concurrently across the array, so a round is bottlenecked,
+      not summed).
+
+    With one layer per stage the two orders coincide, and ``chunk=1``
+    reduces exactly to ``wavefront_cycles`` (the per-diagonal schedule);
+    fewer stages than layers grow the bottleneck block — trading pipeline
+    depth for per-stage serialisation, which is what the Table-2 staged
+    comparison quantifies.  ``arrays == 1`` degenerates to the sequential
+    model (including per-frame weight re-streaming).
+
+    NOTE the model charges CONCURRENT slots for the batched order — true
+    of the silicon (one array per layer) and of any genuinely parallel
+    mesh, but NOT of a single-core host emulating the mesh as threads:
+    there the per-diagonal skinny GEMMs cost the same FLOPs on the same
+    core as the sequential order's hoisted wide GEMMs (at worse GEMM
+    efficiency), so the measured single-host ratio falls BELOW 1 while
+    this model predicts above — tests/test_perf_model.py pins that
+    bracket against BENCH_systolic.json.
     """
     S = cfg.arrays
     if S <= 1:
         return sequential_cycles(layers, cfg, T, tile, beta)
     base, rem = divmod(len(layers), S)
-    per_block, lo = [], 0
+    per_macro, lo = [], 0
     for s in range(S):
         size = base + (1 if s < rem else 0)
         blk = layers[lo:lo + size]
         lo += size
-        per_block.append(sum(layer_step_cycles(ld, cfg, tile, beta)
-                             for ld in blk))
+        steps = [layer_step_cycles(ld, cfg, tile, beta) for ld in blk]
+        if in_stage_batched and blk:
+            per_macro.append((chunk + len(blk) - 1) * max(steps))
+        else:
+            per_macro.append(chunk * sum(steps))
     K = math.ceil(T / chunk)
-    return (K + S - 1) * chunk * max(per_block)
+    return (K + S - 1) * max(per_macro)
 
 
 def staged_fill_drain_overhead(n_stages: int, T: int,

@@ -994,6 +994,60 @@ def _staged_schedule(n_layers: int, T: int, n_stages: int,
     return Tc, K, K * Tc, K + n_stages - 1, blocks, Lb
 
 
+#: Legal in-stage schedules for the staged backend: ``'batched'`` walks the
+#: chunk's (slot, step) grid diagonal-major — one slot-batched dot per
+#: diagonal, ``Tc + Lb - 1`` rounds per macro-step — while ``'sequential'``
+#: (the PR 5 dataflow) runs the layer block slot by slot, ``Lb * Tc`` rounds.
+#: Both orders produce bit-equal f32 / bit-identical int8 trajectories; the
+#: choice is schedule-only.
+IN_STAGE_MODES = ('batched', 'sequential')
+
+
+def resolve_staged_chunk(n_layers: int, T: int, n_stages: int, *,
+                         n_h: int = 0, n_x: int = 0, batch: int = 0,
+                         mesh: Optional[Mesh] = None,
+                         kind: str = 'stack_f32') -> int:
+    """Chunk depth ``Tc`` the staged wrappers will use when the caller
+    passes ``chunk=None``: a measured winner from the installed schedule
+    cache (``repro.tune``) when one matches this ``(shape, mesh)``, else
+    the hand-derived ``_staged_schedule`` default ``ceil(T / (4*stages))``.
+    Selection only — the returned depth changes the pipeline schedule, not
+    the numerics (chunked and monolithic trajectories are bit-equal, see
+    ``systolic_lstm_stack_seq``)."""
+    from ..tune.schedule import current_schedule_cache, mesh_signature
+    cache = current_schedule_cache()
+    if cache is not None:
+        ent = cache.lookup(kind, n_x=n_x, n_h=n_h, n_layers=n_layers,
+                           T=T, B=batch, mesh=mesh_signature(mesh))
+        if ent is not None and ent.tc:
+            return min(int(ent.tc), T)
+    return _staged_schedule(n_layers, T, n_stages, None)[0]
+
+
+def resolve_staged_in_stage(n_layers: int, T: int, n_stages: int, *,
+                            n_h: int = 0, n_x: int = 0, batch: int = 0,
+                            mesh: Optional[Mesh] = None,
+                            kind: str = 'stack_f32') -> str:
+    """In-stage round order the staged wrappers use when the caller passes
+    ``in_stage=None``: the measured winner from the installed schedule
+    cache for this ``(shape, mesh)`` when one exists, else ``'batched'``
+    (the ``Tc + Lb - 1``-round diagonal order — the silicon's dataflow).
+    Selection only: both orders are bit-equal f32 / bit-identical int8
+    (``IN_STAGE_MODES``), so the cache can only pick among proven-
+    identical schedules.  The measured choice matters because the orders
+    optimise for different hosts: batched wins where stages' slots truly
+    run concurrently (real multi-core / the silicon), sequential's hoisted
+    wide below-GEMMs win on FLOP-bound single-core emulation."""
+    from ..tune.schedule import current_schedule_cache, mesh_signature
+    cache = current_schedule_cache()
+    if cache is not None:
+        ent = cache.lookup(kind, n_x=n_x, n_h=n_h, n_layers=n_layers,
+                           T=T, B=batch, mesh=mesh_signature(mesh))
+        if ent is not None and ent.in_stage in IN_STAGE_MODES:
+            return ent.in_stage
+    return 'batched'
+
+
 def _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s, mask=None):
     """Staged distributed whole-stack forward (padded in, un-padded out).
 
@@ -1011,8 +1065,19 @@ def _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s, mask=None):
     an all-ones mask are bit-identical).  Returns (hs, cs), each
     (L, T, B, n_h) — the full trajectories feed the cross-layer VJP and
     the chunked serving carry.
+
+    ``static[-1]`` selects the in-stage schedule (``IN_STAGE_MODES``):
+    ``'sequential'`` runs the stage's layer block slot by slot over the
+    chunk (``Lb * Tc`` collective rounds per macro-step); ``'batched'``
+    walks the same (slot, step) grid diagonal-major like the §8 stack
+    kernel — slot i executes step ``d - i`` at diagonal d, all live slots
+    in ONE ``(Lb, B, bk) x (Lb, bk, 4*bn)`` dot per diagonal, ``Tc + Lb -
+    1`` rounds — with identical per-element arithmetic and addition order
+    (separate own/below psums, ``pre = psum(own) + (psum(below) +
+    pre_x)``), so the two orders are bit-equal.
     """
-    mesh, stage_axis, row_axis, col_axis, chunk = static
+    mesh, stage_axis, row_axis, col_axis, chunk, in_stage = static
+    assert in_stage in IN_STAGE_MODES, in_stage
     T, B, _, n_h = pre_x.shape
     L = w_h.shape[0]
     S, mr, mc = (mesh.shape[stage_axis], mesh.shape[row_axis],
@@ -1141,9 +1206,170 @@ def _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s, mask=None):
             return ((jnp.stack(new_h), jnp.stack(new_c), below),
                     (jnp.stack(hs_slots), jnp.stack(cs_slots)))
 
+        nl = jnp.sum((live_l > 0).astype(jnp.int32))
+        # Per-stage live-slot counts are static data (``blocks``), so the
+        # batched macro dispatches each stage — via a stage-uniform switch —
+        # to a branch specialized to its own count: single-layer stages
+        # reuse the sequential chunk scan verbatim (zero dead-slot work),
+        # and cnt-layer stages walk Tc + cnt - 1 diagonals with ONE fused
+        # slot-batched dot and ONE psum per diagonal.
+        counts = sorted({len(b) for b in blocks if len(b) > 0})
+
+        def macro_batched(carry_m, m_idx):
+            # Same chunk pipeline as `macro`, but each stage's (slot, step)
+            # grid is walked diagonal-major: at diagonal d, slot i executes
+            # its step t = d - i (out-of-window diagonals are
+            # select-identity bubbles).  Slot i's below input at diagonal d
+            # is slot i-1's carried post-step h from diagonal d-1 — exactly
+            # its step-t output — so the state stack itself is the
+            # diagonal-major inter-layer buffer.
+            h_state, c_state, out_prev = carry_m
+            k = m_idx - s_idx
+            act = (k >= 0) & (k < K)
+            kc = jnp.clip(k, 0, K - 1)
+            handed = (out_prev if S == 1 else
+                      jax.lax.ppermute(out_prev, stage_axis, fwd_perm))
+            pre_chunk = jax.lax.dynamic_index_in_dim(pre_l, kc, 0,
+                                                     keepdims=False)
+            m_chunk = jax.lax.dynamic_index_in_dim(mask_l, kc, 0,
+                                                   keepdims=False) & act
+
+            def hoist_stream0(handed_c):
+                # Slot 0's below stream (the handed chunk) is fully known
+                # at macro start: hoist its W_in MAC into ONE wide matmul +
+                # psum — the very ops (and addition association) of the
+                # sequential slot loop.
+                handed_k = jax.lax.dynamic_slice(
+                    handed_c, (0, 0, col * bk), (Tc, B, bk))
+                pre_stream0 = jax.lax.psum(
+                    jnp.einsum('gnk,tbk->tbgn', w_in_l[0], handed_k),
+                    col_axis)
+                return pre_stream0 + jnp.where(s_idx == 0, pre_chunk, 0.0)
+
+            def run_single(ops):
+                # cnt == 1 stage: exactly the sequential single-slot chunk
+                # scan — Tc one-slot rounds, nothing batched, no dead-slot
+                # compute on the padding slots.
+                handed_c, h0_all, c0_all = ops
+                hs_c, cs_c, h_T0, c_T0 = layer_chunk(
+                    w_h_l[0], peep_l[0], bias_l[0],
+                    hoist_stream0(handed_c), h0_all[0], c0_all[0], m_chunk)
+                h_T = jnp.concatenate([h_T0[None], h0_all[1:]], axis=0)
+                c_T = jnp.concatenate([c_T0[None], c0_all[1:]], axis=0)
+                pad_h = jnp.zeros((Lb - 1, Tc, B, n_h_p), hs_c.dtype)
+                pad_c = jnp.zeros((Lb - 1, Tc, B, bn), cs_c.dtype)
+                return (h_T, c_T, hs_c,
+                        jnp.concatenate([hs_c[None], pad_h], axis=0),
+                        jnp.concatenate([cs_c[None], pad_c], axis=0))
+
+            def make_run(cnt):
+                def run_cnt(ops):
+                    handed_c, h0_all, c0_all = ops
+                    pre_stream0 = hoist_stream0(handed_c)
+                    D = Tc + cnt - 1
+                    # Diagonal -> (slot, step) geometry and validity masks
+                    # are index arithmetic on the schedule: precompute them
+                    # (and the slot-0 stream replay) once per macro-step and
+                    # feed the diagonal scan through its xs.
+                    t_idx = (jnp.arange(D)[:, None]
+                             - jnp.arange(cnt)[None, :])
+                    valid = (t_idx >= 0) & (t_idx < Tc)
+                    t_clip = jnp.clip(t_idx, 0, Tc - 1)
+                    pre0_d = pre_stream0[jnp.clip(jnp.arange(D), 0, Tc - 1)]
+                    keep_d = (jnp.take(m_chunk, t_clip, axis=0)
+                              & valid[..., None])
+                    # Own-h and below dots fuse into ONE slot-batched
+                    # einsum + ONE psum: the weight stack [W_h | W_in[1:]]
+                    # is loop-invariant, and a psum of concatenated
+                    # operands is elementwise — splitting the result back
+                    # recovers psum(own) and psum(below) bit for bit, so
+                    # the addition association stays psum(own) +
+                    # (psum(below) + pre_x), matching the sequential loop.
+                    w_cat = jnp.concatenate([w_h_l[:cnt], w_in_l[1:cnt]],
+                                            axis=0)
+                    peep_c, bias_c = peep_l[:cnt], bias_l[:cnt]
+
+                    def diag(carry_d, xs_d):
+                        h_all, c_all = carry_d
+                        pre0_t, keep_t = xs_d
+                        h_k = jax.lax.dynamic_slice(
+                            h_all, (0, 0, col * bk), (cnt, B, bk))
+                        # Slot i>=1 reads slot i-1's post-step h — the same
+                        # col slice just taken for the own-h dot.
+                        in_cat = jnp.concatenate([h_k, h_k[:-1]], axis=0)
+                        part = jnp.einsum('lgnk,lbk->lbgn', w_cat, in_cat)
+                        psummed = jax.lax.psum(part, col_axis)
+                        pre = psummed[:cnt] + jnp.concatenate(
+                            [pre0_t[None], psummed[cnt:]], axis=0)
+                        c = c_all
+                        i = jax.nn.sigmoid(pre[:, :, I]
+                                           + peep_c[:, PEEP_I][:, None] * c
+                                           + bias_c[:, I][:, None])
+                        f = jax.nn.sigmoid(pre[:, :, F]
+                                           + peep_c[:, PEEP_F][:, None] * c
+                                           + bias_c[:, F][:, None])
+                        g = jnp.tanh(pre[:, :, G] + bias_c[:, G][:, None])
+                        c_new = f * c + i * g
+                        o = jax.nn.sigmoid(pre[:, :, O]
+                                           + peep_c[:, PEEP_O][:, None]
+                                           * c_new
+                                           + bias_c[:, O][:, None])
+                        h_new = o * jnp.tanh(c_new)
+                        h_full_new = jax.lax.all_gather(
+                            h_new, row_axis, axis=2, tiled=True)
+                        keep = keep_t[:, :, None]
+                        h_next = jnp.where(keep, h_full_new, h_all)
+                        c_next = jnp.where(keep, c_new, c_all)
+                        return (h_next, c_next), (h_next, c_next)
+
+                    (h_Tc, c_Tc), (hs_d, cs_d) = jax.lax.scan(
+                        diag, (h0_all[:cnt], c0_all[:cnt]),
+                        (pre0_d, keep_d))
+                    # Diagonal emissions (D, cnt, ...) -> the sequential
+                    # layout (cnt, Tc, ...): slot i's step t is at d = i+t.
+                    hs_sl = jnp.stack([hs_d[i:i + Tc, i]
+                                       for i in range(cnt)])
+                    cs_sl = jnp.stack([cs_d[i:i + Tc, i]
+                                       for i in range(cnt)])
+                    out = hs_sl[cnt - 1]
+                    h_T = jnp.concatenate([h_Tc, h0_all[cnt:]], axis=0)
+                    c_T = jnp.concatenate([c_Tc, c0_all[cnt:]], axis=0)
+                    hs_sl = jnp.concatenate(
+                        [hs_sl, jnp.zeros((Lb - cnt, Tc, B, n_h_p),
+                                          hs_d.dtype)], axis=0)
+                    cs_sl = jnp.concatenate(
+                        [cs_sl, jnp.zeros((Lb - cnt, Tc, B, bn),
+                                          cs_d.dtype)], axis=0)
+                    return h_T, c_T, out, hs_sl, cs_sl
+                return run_cnt
+
+            def skip_macro(ops):
+                # Fill/drain macro-step (or empty stage): passthrough +
+                # untouched state, no compute; the zero emissions are never
+                # gathered.
+                handed_c, h0_all, c0_all = ops
+                return (h0_all, c0_all, handed_c,
+                        jnp.zeros((Lb, Tc, B, n_h_p), handed_c.dtype),
+                        jnp.zeros((Lb, Tc, B, bn), handed_c.dtype))
+
+            # The branch index depends only on s_idx/m_idx and per-stage
+            # data (nl), so every device of a stage's (row, col) collective
+            # groups takes the same branch and the collectives inside it
+            # match up within their groups.
+            branches = [skip_macro] + [
+                (run_single if c == 1 else make_run(c)) for c in counts]
+            idx = sum(((nl > c).astype(jnp.int32) for c in counts),
+                      jnp.int32(0))
+            branch = jnp.where(act & (nl > 0), 1 + idx, 0)
+            h_T, c_T, out, hs_sl, cs_sl = jax.lax.switch(
+                branch, branches, (handed, h_state, c_state))
+            return (h_T, c_T, out), (hs_sl, cs_sl)
+
+        macro_fn = (macro_batched
+                    if in_stage == 'batched' and Lb > 1 else macro)
         out0 = jnp.zeros((Tc, B, n_h_p), pre_l.dtype)
         _, (hs_all, cs_all) = jax.lax.scan(
-            macro, (h0_l[0], c0_l[0], out0), jnp.arange(M))
+            macro_fn, (h0_l[0], c0_l[0], out0), jnp.arange(M))
         return hs_all, cs_all
 
     fn = shard_map(
@@ -1187,7 +1413,9 @@ def systolic_stack_seq_fused(static, w_in, w_h, peep, b, pre_x, h0s, c0s):
     — the saved trajectories are already stage-gathered, so the backward
     is numerically identical to the single-engine fused stack's), but the
     forward runs stage-pipelined on the ``static = (mesh, stage_axis,
-    row_axis, col_axis, chunk)`` grid.
+    row_axis, col_axis, chunk, in_stage)`` grid.  The in-stage schedule
+    (``IN_STAGE_MODES``) changes only the round order, not the
+    trajectories, so gradients are bit-equal across schedules too.
     """
     hs, cs = _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s)
     return hs[-1], (hs[:, -1], cs[:, -1])
@@ -1213,6 +1441,7 @@ def systolic_lstm_stack_seq(params, mesh: Optional[Mesh], xs: jax.Array,
                             states=None, *,
                             valid_len: Optional[jax.Array] = None,
                             chunk: Optional[int] = None,
+                            in_stage: Optional[str] = None,
                             stage_axis: str = 'stage',
                             row_axis: str = 'row', col_axis: str = 'col'
                             ) -> Tuple[jax.Array, Tuple]:
@@ -1239,9 +1468,18 @@ def systolic_lstm_stack_seq(params, mesh: Optional[Mesh], xs: jax.Array,
     inference-only), and ``states`` carries the per-layer ``(h, c)`` for
     chunked serving.  A ``None`` or all-1 mesh degenerates to the
     single-engine §8 kernel (``lstm_stack_seq``) — the composition this
-    function scales out.  ``chunk`` defaults to ``ceil(T / (4*stages))``
-    (fill/drain stays under ~1/4 of macro-steps; chunk=1 is the paper's
-    frame-by-frame handover).
+    function scales out.  ``chunk`` defaults to the installed schedule
+    cache's measured winner for this (shape, mesh) when one exists
+    (``resolve_staged_chunk``), else ``ceil(T / (4*stages))`` (fill/drain
+    stays under ~1/4 of macro-steps; chunk=1 is the paper's frame-by-frame
+    handover).  ``in_stage`` picks the in-stage round order
+    (``IN_STAGE_MODES``): ``'batched'`` executes each stage's layer block
+    diagonal-major — all live slots advance in one slot-batched dot per
+    diagonal, ``Tc + Lb - 1`` rounds per macro-step instead of ``Lb * Tc``
+    — and is bit-equal to ``'sequential'`` (the PR 5 slot loop), which
+    remains as the measured baseline; ``None`` (default) takes the
+    schedule cache's measured winner for this (shape, mesh), else
+    ``'batched'`` (``resolve_staged_in_stage``).
     """
     from ..kernels.lstm_seq import lstm_stack_seq, stack_fused_compatible
     assert stack_fused_compatible(params), \
@@ -1253,6 +1491,13 @@ def systolic_lstm_stack_seq(params, mesh: Optional[Mesh], xs: jax.Array,
     layers = params.layers
     n_h = layers[0].n_h
     T, B = xs.shape[0], xs.shape[1]
+    if chunk is None:
+        chunk = resolve_staged_chunk(len(layers), T, S, n_h=n_h,
+                                     n_x=layers[0].n_x, batch=B, mesh=mesh)
+    if in_stage is None:
+        in_stage = resolve_staged_in_stage(len(layers), T, S, n_h=n_h,
+                                           n_x=layers[0].n_x, batch=B,
+                                           mesh=mesh)
     Tc = _staged_schedule(len(layers), T, S, chunk)[0]
 
     from ..kernels.lstm_seq.stack_ops import _stack_arrays
@@ -1261,7 +1506,7 @@ def systolic_lstm_stack_seq(params, mesh: Optional[Mesh], xs: jax.Array,
     pre_x = jnp.einsum('ghx,tbx->tbgh', layers[0].w_x, xs)    # hoisted
 
     h0s, c0s = stack_carry_arrays(states, len(layers), B, n_h, xs.dtype)
-    static = (mesh, stage_axis, row_axis, col_axis, Tc)
+    static = (mesh, stage_axis, row_axis, col_axis, Tc, in_stage)
     if valid_len is not None:
         from .lstm import valid_len_mask
         mask = valid_len_mask(T, valid_len, B)
@@ -1281,6 +1526,7 @@ def systolic_lstm_stack_seq_quantized(qps, mesh: Optional[Mesh],
                                       valid_len: Optional[jax.Array] = None,
                                       return_state: bool = False,
                                       chunk: Optional[int] = None,
+                                      in_stage: Optional[str] = None,
                                       stage_axis: str = 'stage',
                                       row_axis: str = 'row',
                                       col_axis: str = 'col'):
@@ -1307,7 +1553,15 @@ def systolic_lstm_stack_seq_quantized(qps, mesh: Optional[Mesh],
     ``(h_q, c_q)`` codes, each (L, B, padded_h); masked steps are pure
     selects on the carried codes), so the staged mesh, the single-engine
     fused stack and the streaming engine can hand state to each other
-    mid-sequence.  Requires ``plan.rows % mesh rows == 0`` and
+    mid-sequence.  ``in_stage`` follows ``IN_STAGE_MODES`` (``None`` =
+    the schedule cache's winner, else ``'batched'``, as in
+    ``resolve_staged_in_stage``): the ``'batched'`` order advances every
+    live slot of the stage's block per
+    in-chunk diagonal (the below/x prefix folds through a slot-vmapped
+    ``_x_prefix_fold``, the own-h hops replay in the same engine order),
+    so the integer datapath — and hence the emitted codes — is unchanged
+    from ``'sequential'`` op for op.  Requires ``plan.rows % mesh rows ==
+    0`` and
     ``plan.cols_h % mesh cols == 0``; a ``None``/all-1 mesh degenerates to
     the single-engine fused stack.
     """
@@ -1333,6 +1587,14 @@ def systolic_lstm_stack_seq_quantized(qps, mesh: Optional[Mesh],
     assert xs_q.ndim == 3, \
         'systolic_lstm_stack_seq_quantized expects (T, B, n_x)'
     T, B = xs_q.shape[0], xs_q.shape[1]
+    if chunk is None:
+        chunk = resolve_staged_chunk(L, T, S, n_h=p0.n_h, n_x=p0.n_x,
+                                     batch=B, mesh=mesh, kind='stack_int8')
+    if in_stage is None:
+        in_stage = resolve_staged_in_stage(L, T, S, n_h=p0.n_h, n_x=p0.n_x,
+                                           batch=B, mesh=mesh,
+                                           kind='stack_int8')
+    assert in_stage in IN_STAGE_MODES, in_stage
     Tc, K, T_p, M, blocks, Lb = _staged_schedule(L, T, S, chunk)
 
     # Resident weights: own-h region tiles sharded (row, col); below/x
@@ -1469,9 +1731,153 @@ def systolic_lstm_stack_seq_quantized(qps, mesh: Optional[Mesh],
             return ((jnp.stack(new_h), jnp.stack(new_c), below),
                     (jnp.stack(hs_slots), jnp.stack(cs_slots)))
 
+        nl = jnp.sum((live_l > 0).astype(jnp.int32))
+        # Static per-stage live counts drive the same stage-uniform branch
+        # specialization as the f32 body: single-layer stages replay the
+        # sequential chunk scan verbatim, cnt-layer stages walk the
+        # Tc + cnt - 1 diagonals with cnt-sliced operands.
+        counts = sorted({len(b) for b in blocks if len(b) > 0})
+
+        def macro_batched(carry_m, m_idx):
+            # Diagonal-major in-stage order, mirroring the f32 body: slot i
+            # runs step t = d - i at diagonal d, its below codes being slot
+            # i-1's carried post-step h from diagonal d-1.  Every integer
+            # op — the slot-vmapped below/x prefix fold, the engine-order
+            # own-h hop scan, the LUT tail — replays in the sequential
+            # order, so the emitted codes are bit-identical.
+            h_state, c_state, out_prev = carry_m
+            k = m_idx - s_idx
+            act = (k >= 0) & (k < K)
+            kc = jnp.clip(k, 0, K - 1)
+            handed = (out_prev if S == 1 else
+                      jax.lax.ppermute(out_prev, stage_axis, fwd_perm))
+            accx_chunk = jax.lax.dynamic_index_in_dim(accx_l, kc, 0,
+                                                      keepdims=False)
+            m_chunk = jnp.where(
+                act, jax.lax.dynamic_index_in_dim(mask_l, kc, 0,
+                                                  keepdims=False),
+                jnp.int8(0))
+
+            def fold0(handed_c):
+                # Slot 0's below/x prefix folds once per chunk from the
+                # handed codes — the identical hoisted ops of the
+                # sequential slot loop.
+                acc0 = _x_prefix_fold(below_l[0],
+                                      handed_c.reshape(Tc, B, c_h, t))
+                return acc0 + jnp.where(s_idx == 0, accx_chunk, 0)
+
+            def run_single(ops):
+                # cnt == 1 stage: exactly the sequential single-slot chunk
+                # scan, no dead-slot compute on the padding slots.
+                handed_c, h0_all, c0_all = ops
+                hs_c, cs_c, h_T0, c_T0 = layer_chunk(
+                    own_l[0], peep32[0], bias32[0], fold0(handed_c),
+                    h0_all[0], c0_all[0], m_chunk)
+                h_T = jnp.concatenate([h_T0[None], h0_all[1:]], axis=0)
+                c_T = jnp.concatenate([c_T0[None], c0_all[1:]], axis=0)
+                pad_h = jnp.zeros((Lb - 1, Tc, B, R * t), jnp.int8)
+                pad_c = jnp.zeros((Lb - 1, Tc, B, r_l * t), jnp.int8)
+                return (h_T, c_T, hs_c,
+                        jnp.concatenate([hs_c[None], pad_h], axis=0),
+                        jnp.concatenate(
+                            [cs_c.reshape(Tc, B, r_l * t)[None], pad_c],
+                            axis=0))
+
+            def make_run(cnt):
+                def run_cnt(ops):
+                    handed_c, h0_all, c0_all = ops
+                    acc0 = fold0(handed_c)
+                    D = Tc + cnt - 1
+                    # Precompute the diagonal geometry, validity masks and
+                    # the slot-0 prefix replay once per macro-step; the
+                    # diagonal scan consumes them as xs.
+                    t_idx = (jnp.arange(D)[:, None]
+                             - jnp.arange(cnt)[None, :])
+                    valid = (t_idx >= 0) & (t_idx < Tc)
+                    t_clip = jnp.clip(t_idx, 0, Tc - 1)
+                    acc0_d = acc0[jnp.clip(jnp.arange(D), 0, Tc - 1)]
+                    keep_d = ((jnp.take(m_chunk, t_clip, axis=0) > 0)
+                              & valid[..., None])
+                    own_c = own_l[:cnt]
+                    below_c = below_l[1:cnt]
+                    peep_c, bias_c = peep32[:cnt], bias32[:cnt]
+
+                    def diag(carry_d, xs_d):
+                        h_all, c_all = carry_d
+                        acc0_t, keep_t = xs_d
+                        # Per-diagonal fold only covers slots 1..cnt-1
+                        # (through the ONE shared ``_x_prefix_fold``,
+                        # vmapped over slots; per-element hop order
+                        # unchanged).
+                        acc_rest = jax.vmap(_x_prefix_fold)(
+                            below_c, h_all[:-1].reshape(cnt - 1, 1, B, c_h,
+                                                        t))[:, 0]
+                        acc_t = jnp.concatenate([acc0_t[None], acc_rest],
+                                                axis=0)
+                        h_cols = jax.lax.dynamic_slice(
+                            h_all, (0, 0, col * (c_l * t)),
+                            (cnt, B, c_l * t)).reshape(cnt, B, c_l, t)
+                        parts = _sat16(jnp.einsum('zrlgij,zblj->lzbrgi',
+                                                  own_c.astype(jnp.int32),
+                                                  h_cols.astype(jnp.int32)))
+                        parts_all = jax.lax.all_gather(parts, col_axis,
+                                                       axis=0, tiled=True)
+                        pre_acc, _ = jax.lax.scan(hop, acc_t, parts_all)
+                        h8, c8 = _quantized_state_update(
+                            pre_acc, c_all.astype(jnp.int32),
+                            peep_c[:, None], bias_c[:, None], sig_lut[0],
+                            tanh_lut[0])
+                        h_full_new = jax.lax.all_gather(
+                            h8.reshape(cnt, B, r_l * t), row_axis, axis=2,
+                            tiled=True)
+                        h_next = jnp.where(keep_t[:, :, None], h_full_new,
+                                           h_all)
+                        c_next = jnp.where(keep_t[:, :, None, None], c8,
+                                           c_all)
+                        return (h_next, c_next), (h_next, c_next)
+
+                    (h_Tc, c_Tc), (hs_d, cs_d) = jax.lax.scan(
+                        diag, (h0_all[:cnt], c0_all[:cnt]),
+                        (acc0_d, keep_d))
+                    hs_sl = jnp.stack([hs_d[i:i + Tc, i]
+                                       for i in range(cnt)])
+                    cs_sl = jnp.stack(
+                        [cs_d[i:i + Tc, i] for i in range(cnt)]
+                    ).reshape(cnt, Tc, B, r_l * t)
+                    out = hs_sl[cnt - 1]
+                    h_T = jnp.concatenate([h_Tc, h0_all[cnt:]], axis=0)
+                    c_T = jnp.concatenate([c_Tc, c0_all[cnt:]], axis=0)
+                    hs_sl = jnp.concatenate(
+                        [hs_sl, jnp.zeros((Lb - cnt, Tc, B, R * t),
+                                          jnp.int8)], axis=0)
+                    cs_sl = jnp.concatenate(
+                        [cs_sl, jnp.zeros((Lb - cnt, Tc, B, r_l * t),
+                                          jnp.int8)], axis=0)
+                    return h_T, c_T, out, hs_sl, cs_sl
+                return run_cnt
+
+            def skip_macro(ops):
+                handed_c, h0_all, c0_all = ops
+                return (h0_all, c0_all, handed_c,
+                        jnp.zeros((Lb, Tc, B, R * t), jnp.int8),
+                        jnp.zeros((Lb, Tc, B, r_l * t), jnp.int8))
+
+            # Branch index is stage-uniform (s_idx/m_idx and per-stage
+            # data), as in the sequential macro's predicates.
+            branches = [skip_macro] + [
+                (run_single if c == 1 else make_run(c)) for c in counts]
+            idx = sum(((nl > c).astype(jnp.int32) for c in counts),
+                      jnp.int32(0))
+            branch = jnp.where(act & (nl > 0), 1 + idx, 0)
+            h_T, c_T, out, hs_sl, cs_sl = jax.lax.switch(
+                branch, branches, (handed, h_state, c_state))
+            return (h_T, c_T, out), (hs_sl, cs_sl)
+
+        macro_fn = (macro_batched
+                    if in_stage == 'batched' and Lb > 1 else macro)
         out0 = jnp.zeros((Tc, B, R * t), jnp.int8)
         _, (hs_all, cs_all) = jax.lax.scan(
-            macro, (h0_l[0], c0_l[0], out0), jnp.arange(M))
+            macro_fn, (h0_l[0], c0_l[0], out0), jnp.arange(M))
         return hs_all, cs_all
 
     fn = shard_map(

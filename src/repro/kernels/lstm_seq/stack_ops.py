@@ -323,10 +323,13 @@ def lstm_stack_seq_quantized_auto(qps: Sequence[QuantizedPackedLSTM],
 
     Picks the fused wavefront (``lstm_stack_seq_quantized``) or the
     layerwise chain of ``lstm_layer_seq_quantized`` calls via
-    ``core.lstm.select_quantized_stack_backend``: the BENCH_kernels.json
-    calibration pair shows the wavefront LOSING to the chain at small hidden
-    widths (its fill/drain bubble and relayout overheads are fixed while the
-    per-layer work shrinks), so small stacks run layerwise.  Bit-identical
+    ``core.lstm.select_quantized_stack_backend`` — since the §12 autotuner
+    that decision consults the installed measured-schedule cache first
+    (``repro.tune``), with the BENCH_kernels.json-calibrated width floor as
+    the cold-cache fallback: the calibration pair shows the wavefront
+    LOSING to the chain at small hidden widths (its fill/drain bubble and
+    relayout overheads are fixed while the per-layer work shrinks), so
+    small stacks run layerwise.  Bit-identical
     either way — that is the fused kernel's contract — and BOTH paths speak
     the STACK state layout (opaque ``(h_q, c_q)``, each ``(L, B, padded_h)``
     int8), so a chunked streaming caller can carry state across chunks

@@ -134,7 +134,11 @@ class StreamServer:
         policy = None
         if deadline_slo is not None:
             from ..runtime import ChunkSizePolicy
-            policy = ChunkSizePolicy(chunk_max=chunk, slack=deadline_slo)
+            from ..serving.engine import tuned_chunk_ceiling
+            # a tuned staged chunk depth (schedule cache, repro.tune) caps
+            # how deep the policy may grow chunks; scheduling-only (§11)
+            ceiling = tuned_chunk_ceiling(cfg, chunk, num_slots)
+            policy = ChunkSizePolicy(chunk_max=ceiling, slack=deadline_slo)
         self.engine = StreamingEngine(cfg, params, max_streams=num_slots,
                                       chunk=chunk, decode_ctc=True,
                                       faults=faults,
@@ -286,6 +290,18 @@ def main(argv=None):
                          'budget = chunk * 10ms frame period * FACTOR '
                          '(the Table-2 arrival rate); chunk length adapts '
                          'to observed launch-to-commit wall times')
+    ap.add_argument('--schedule-cache', default=None, metavar='PATH',
+                    help='install a measured-schedule cache (repro.tune '
+                         'JSON): dispatch decisions — int8 fused-vs-'
+                         'layerwise, stack backend, staged Tc, the chunk-'
+                         'policy ceiling — consult its winners before any '
+                         'heuristic; dispatch-only, numerics unchanged')
+    ap.add_argument('--tune', action='store_true',
+                    help='run the offline autotuner for this serving '
+                         'config before serving (LSTM family only): '
+                         'measured int8 backend trial + predicted chunk '
+                         'ceiling, recorded to --schedule-cache when '
+                         'given; serving itself never pays tuning cost')
     args = ap.parse_args(argv)
 
     if args.systolic_topology:
@@ -294,8 +310,33 @@ def main(argv=None):
         print(f'installed systolic topology {args.systolic_topology}: '
               f'{dict(mesh.shape)}')
 
+    if args.schedule_cache:
+        import pathlib
+        from ..tune import ScheduleCache, install_schedule_cache
+        path = pathlib.Path(args.schedule_cache)
+        cache = (ScheduleCache.load(path) if path.exists()
+                 else ScheduleCache())
+        install_schedule_cache(cache)
+        print(f'installed schedule cache: {len(cache)} entries '
+              f'from {path}' if path.exists()
+              else f'installed empty schedule cache (will tune into {path})')
+
     cfg = configs.get_smoke_config(args.arch).replace(
         lstm_backend=args.lstm_backend)
+    if args.tune and cfg.family == 'lstm':
+        from ..tune import (ScheduleCache, current_schedule_cache,
+                            install_schedule_cache, tune_serving_config)
+        cache = current_schedule_cache()
+        if cache is None:
+            cache = install_schedule_cache(ScheduleCache())
+        entries = tune_serving_config(cfg, chunk=args.chunk,
+                                      slots=args.slots, cache=cache)
+        for e in entries:
+            what = e.backend or f'Tc={e.tc}'
+            print(f'tuned {e.kind}: {what} ({e.source})')
+        if args.schedule_cache:
+            cache.save(args.schedule_cache)
+            print(f'saved {len(cache)} entries -> {args.schedule_cache}')
     if cfg.family == 'lstm':
         _run_stream_serving(cfg, args)
     else:

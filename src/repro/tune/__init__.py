@@ -1,0 +1,31 @@
+"""Measured-schedule autotuning for backend dispatch (DESIGN.md §12).
+
+``schedule``: the persisted JSON cache of dispatch winners and the
+process-wide registry the dispatch layer consults.  ``shmoo``: candidate
+enumeration, admission pruning, model ranking, and the shared shmoo record
+format (also used by ``benchmarks/fig5_shmoo.py``).  ``autotune``:
+interleaved timed trials and the deterministic replay check.  ``python -m
+repro.tune`` runs the offline tuner.
+"""
+from .autotune import (measure_interleaved, replay_check,
+                       tune_quantized_backend, tune_serving_config,
+                       tune_staged_stack)
+from .schedule import (ANY_MESH, ScheduleCache, ScheduleEntry,
+                       clear_schedule_cache, current_schedule_cache,
+                       host_fingerprint, install_schedule_cache,
+                       mesh_signature, using_schedule_cache)
+from .shmoo import (ShmooRecord, StagedCandidate, TC_GRID,
+                    enumerate_staged_candidates, predict_staged_us,
+                    rank_staged_candidates, staged_shmoo_records,
+                    write_shmoo_csv)
+
+__all__ = [
+    'ANY_MESH', 'ScheduleCache', 'ScheduleEntry', 'ShmooRecord',
+    'StagedCandidate', 'TC_GRID', 'clear_schedule_cache',
+    'current_schedule_cache', 'enumerate_staged_candidates',
+    'host_fingerprint', 'install_schedule_cache', 'measure_interleaved',
+    'mesh_signature', 'predict_staged_us', 'rank_staged_candidates',
+    'replay_check', 'staged_shmoo_records', 'tune_quantized_backend',
+    'tune_serving_config', 'tune_staged_stack', 'using_schedule_cache',
+    'write_shmoo_csv',
+]

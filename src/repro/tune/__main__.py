@@ -1,0 +1,147 @@
+"""Offline schedule tuner CLI.
+
+``python -m repro.tune --out tuned_schedules.json`` shmoos the schedule
+space, records the winners, and writes the cache + the shared-format shmoo
+CSV.  Default is predicted-only (deterministic, no timing — what CI runs
+twice to assert replay stability); ``--measure`` adds interleaved timed
+trials for the single-device decisions, and ``--staged-devices N`` spawns a
+subprocess with N forced host devices to measure the staged ``(Tc,
+in_stage)`` schedule on a real mesh (the driver process must keep seeing
+one device — same pattern as benchmarks/systolic_scaleout.py).
+"""
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[3]
+
+_STAGED_TUNE_SNIPPET = r"""
+import json, sys
+import jax
+from repro.core import lstm, systolic
+from repro.tune import ScheduleCache, tune_staged_stack
+
+n_x, n_h, L, T, B = {n_x}, {n_h}, {L}, {T}, {B}
+stack = lstm.init_lstm_stack(jax.random.PRNGKey(42), n_x, n_h, L)
+xs = jax.random.normal(jax.random.PRNGKey(43), (T, B, n_x)) * 0.5
+mesh = systolic.make_systolic_mesh({rows}, {cols}, stage={stages})
+cache = ScheduleCache()
+entry, _ = tune_staged_stack(stack, mesh, xs, cache=cache, iters={iters})
+print('CACHE|' + json.dumps(cache.to_json()))
+"""
+
+
+def _measure_staged(args, cache):
+    from .schedule import ScheduleCache
+    snippet = _STAGED_TUNE_SNIPPET.format(
+        n_x=args.n_x, n_h=args.n_h, L=args.layers, T=args.T, B=args.B,
+        rows=args.rows, cols=args.cols, stages=args.stages,
+        iters=args.iters)
+    env = dict(os.environ)
+    env['XLA_FLAGS'] = ('--xla_force_host_platform_device_count='
+                        f'{args.staged_devices}')
+    env['PYTHONPATH'] = (str(REPO / 'src') + os.pathsep
+                         + env.get('PYTHONPATH', ''))
+    proc = subprocess.run([sys.executable, '-c', snippet], env=env,
+                          capture_output=True, text=True, timeout=3600)
+    if proc.returncode != 0:
+        raise RuntimeError(f'staged tune subprocess failed\nSTDOUT:\n'
+                           f'{proc.stdout}\nSTDERR:\n{proc.stderr}')
+    for line in proc.stdout.splitlines():
+        if line.startswith('CACHE|'):
+            sub = ScheduleCache.from_json(json.loads(line[6:]))
+            for e in sub.entries():
+                cache.record(e)
+    return cache
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog='python -m repro.tune')
+    ap.add_argument('--out', default='tuned_schedules.json',
+                    help='schedule-cache JSON to write')
+    ap.add_argument('--csv', default=None,
+                    help='also write the shmoo records (shared CSV format)')
+    ap.add_argument('--measure', action='store_true',
+                    help='run interleaved timed trials for the '
+                         'single-device decisions (default: predicted-only)')
+    ap.add_argument('--staged-devices', type=int, default=0,
+                    help='measure the staged schedule in a subprocess with '
+                         'this many forced host devices (0 = predicted-only '
+                         'staged shmoo)')
+    ap.add_argument('--n-x', type=int, default=48)
+    ap.add_argument('--n-h', type=int, default=96)
+    ap.add_argument('--layers', type=int, default=3)
+    ap.add_argument('--T', type=int, default=32)
+    ap.add_argument('--B', type=int, default=4)
+    ap.add_argument('--stages', type=int, default=2)
+    ap.add_argument('--rows', type=int, default=2)
+    ap.add_argument('--cols', type=int, default=2)
+    ap.add_argument('--iters', type=int, default=3)
+    ap.add_argument('--tile', type=int, default=None,
+                    help='systolic plan tile for the int8 trial (default '
+                         'min(n_h, 128))')
+    args = ap.parse_args(argv)
+
+    from .autotune import replay_check, tune_quantized_backend
+    from .schedule import ANY_MESH, ScheduleCache, ScheduleEntry
+    from .shmoo import (rank_staged_candidates, staged_shmoo_records,
+                        write_shmoo_csv)
+
+    cache = ScheduleCache()
+    out = pathlib.Path(args.out)
+    if out.exists():            # tuning refines, never forgets
+        cache = ScheduleCache.load(out)
+
+    # int8 backend decision at the requested shape
+    entry, q_records = tune_quantized_backend(
+        args.n_x, args.n_h, args.layers, args.T, args.B, cache=cache,
+        tile=args.tile, measure=args.measure, iters=args.iters)
+    print(f'q_stack_backend -> {entry.backend} ({entry.source})')
+
+    # staged schedule: predicted shmoo always; measured when devices given
+    records = staged_shmoo_records(args.n_x, args.n_h, args.layers, args.T,
+                                   args.B, stages=args.stages,
+                                   rows=args.rows, cols=args.cols)
+    if records and not args.staged_devices:
+        p = records[0].params
+        cache.record(ScheduleEntry(
+            kind='stack_f32', n_x=args.n_x, n_h=args.n_h,
+            n_layers=args.layers, T=args.T, B=args.B,
+            mesh=f'stage:{args.stages},row:{args.rows},col:{args.cols}',
+            tc=int(p['tc']), in_stage=str(p['in_stage']),
+            bn=int(p['bn']), bk=int(p['bk']), lb=int(p['lb']),
+            predicted_us=records[0].metrics['predicted_us'],
+            source='predicted'))
+        print(f"staged schedule -> Tc={p['tc']} in_stage={p['in_stage']} "
+              f"(predicted)")
+    if args.staged_devices:
+        _measure_staged(args, cache)
+        ent = cache.lookup('stack_f32', n_x=args.n_x, n_h=args.n_h,
+                           n_layers=args.layers, T=args.T, B=args.B,
+                           mesh=f'stage:{args.stages},row:{args.rows},'
+                                f'col:{args.cols}')
+        print(f'staged schedule -> Tc={ent.tc} in_stage={ent.in_stage} '
+              f'(measured, {ent.measured_us / 1e3:.1f} ms)')
+
+    n = replay_check(cache)
+    print(f'replay check: {n} staged entries stable')
+    cache.save(out)
+    print(f'wrote {len(cache)} entries -> {out}')
+    if args.csv:
+        for r in q_records:
+            r.metrics.setdefault('predicted_us', 0.0)
+        rows = records
+        if q_records:
+            write_shmoo_csv(pathlib.Path(args.csv).with_suffix('.q.csv'),
+                            q_records)
+        if rows:
+            write_shmoo_csv(args.csv, rows)
+            print(f'wrote {len(rows)} shmoo points -> {args.csv}')
+    return 0
+
+
+if __name__ == '__main__':
+    sys.exit(main())

@@ -1,0 +1,210 @@
+"""Measured-schedule cache: persisted winners for every dispatch decision.
+
+The dispatch layer (``core.lstm.select_stack_backend`` /
+``select_quantized_stack_backend`` / ``core.systolic.resolve_staged_chunk`` /
+the serving chunk-size ceiling) historically made ESTIMATED choices: VMEM
+admission rules, the hand-calibrated ``_Q_FUSED_MIN_NH`` hidden-width floor,
+the ``ceil(T / 4S)`` staged chunk default.  This module makes those choices
+MEASURED without ever re-measuring at request time: ``repro.tune.autotune``
+shmoos the schedule space offline (pruned by the same admission rules,
+ranked by ``perf_model`` predictions, decided by interleaved timed trials)
+and records the winners here; dispatch consults the installed cache first
+and falls back to the estimation rules on a miss.
+
+Contract (pinned by tests/test_tune.py):
+
+* **Dispatch-only.** A cache hit may change WHICH schedule runs (backend,
+  chunk depth ``Tc``, in-stage order) but never the numerics — every
+  schedule a cache entry can select is bit-equal f32 / bit-identical int8
+  to the fallback choice (the §7/§9 equivalence contracts).
+* **Deterministic replay.** ``save`` emits canonical JSON (sorted entries,
+  sorted keys); ``load(save(c)) == c`` byte-for-byte, and re-ranking the
+  recorded candidate space in predicted-only mode reproduces the recorded
+  predicted winners (``autotune.replay_check``).
+* **Keyed by shape AND placement.** The cache key is ``(kind, n_x, n_h,
+  n_layers, T, B, mesh-signature)``; ``T=0`` / ``B=0`` are wildcards and
+  ``mesh='any'`` matches every placement, so one tuning run can pin a
+  whole family.  Lookup precedence is exact-first (see ``lookup``), so a
+  specific measurement always beats a family-wide one.
+* **Invalidation is by key, not by time.** Entries carry the host fingerprint
+  they were measured on (``host``) for provenance; a cache measured on one
+  host is VALID dispatch anywhere (numerics are schedule-invariant) but its
+  winners are only claims about the host in the fingerprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import platform as _platform
+from contextlib import contextmanager
+from typing import Dict, Iterable, List, Optional, Tuple
+
+#: Decision families the cache can answer.  ``stack_f32`` / ``stack_int8``
+#: carry the staged scale-out schedule (``tc``, ``in_stage``);
+#: ``stack_backend`` / ``q_stack_backend`` carry a backend name.
+KINDS = ('stack_f32', 'stack_int8', 'stack_backend', 'q_stack_backend')
+
+#: Wildcard mesh signature: matches any placement (including none).
+ANY_MESH = 'any'
+
+
+def mesh_signature(mesh) -> str:
+    """Canonical placement signature for cache keys.
+
+    ``None`` -> ``'any'`` (single-engine / no scale-out); a ``jax.sharding
+    .Mesh`` -> its axis dims in name order, e.g. ``'stage:2,row:5,col:5'``.
+    A string passes through unchanged (callers may pre-compute signatures).
+    """
+    if mesh is None:
+        return ANY_MESH
+    if isinstance(mesh, str):
+        return mesh
+    return ','.join(f'{name}:{dim}' for name, dim in mesh.shape.items())
+
+
+def host_fingerprint() -> str:
+    """Provenance stamp for measured entries (NOT part of the cache key)."""
+    import jax
+    return (f'{_platform.machine()}/{jax.default_backend()}'
+            f'x{jax.device_count()}')
+
+
+@dataclasses.dataclass
+class ScheduleEntry:
+    """One measured (or predicted) dispatch winner.
+
+    Key fields: ``kind`` + the shape/placement tuple.  Decision fields —
+    only the ones meaningful for the kind are non-default: ``tc`` /
+    ``in_stage`` for the staged schedule kinds, ``backend`` for the
+    backend-choice kinds.  ``predicted_us`` / ``measured_us`` record the
+    ranking evidence; ``source`` is ``'measured'`` when a timed trial
+    decided, ``'predicted'`` when only the model ranking did.
+    """
+    kind: str
+    n_x: int = 0
+    n_h: int = 0
+    n_layers: int = 0
+    T: int = 0            # 0 = wildcard (any sequence length)
+    B: int = 0            # 0 = wildcard (any batch)
+    mesh: str = ANY_MESH
+    tc: int = 0
+    in_stage: str = ''
+    backend: str = ''
+    bn: int = 0
+    bk: int = 0
+    lb: int = 0
+    predicted_us: float = 0.0
+    measured_us: float = 0.0
+    source: str = 'predicted'
+    host: str = ''
+
+    def __post_init__(self):
+        assert self.kind in KINDS, (self.kind, KINDS)
+
+    def key(self) -> Tuple:
+        return (self.kind, int(self.n_x), int(self.n_h), int(self.n_layers),
+                int(self.T), int(self.B), self.mesh)
+
+
+class ScheduleCache:
+    """In-memory map of ``ScheduleEntry`` winners with wildcard lookup."""
+
+    def __init__(self, entries: Iterable[ScheduleEntry] = ()):
+        self._entries: Dict[Tuple, ScheduleEntry] = {}
+        for e in entries:
+            self.record(e)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def entries(self) -> List[ScheduleEntry]:
+        return [self._entries[k] for k in sorted(self._entries)]
+
+    def record(self, entry: ScheduleEntry) -> None:
+        """Insert/replace the winner for ``entry.key()``."""
+        self._entries[entry.key()] = entry
+
+    def lookup(self, kind: str, *, n_x: int, n_h: int, n_layers: int,
+               T: int, B: int, mesh: str = ANY_MESH
+               ) -> Optional[ScheduleEntry]:
+        """Most-specific matching entry, or None.
+
+        Precedence: for each placement (the query's mesh signature first,
+        then the ``'any'`` wildcard), try ``(T, B)`` exact, then ``T``
+        exact / ``B`` wildcard, then ``T`` wildcard / ``B`` exact, then
+        both wildcards.  A specific measurement therefore always shadows a
+        family-wide one.
+        """
+        meshes = (mesh, ANY_MESH) if mesh != ANY_MESH else (ANY_MESH,)
+        for m in meshes:
+            for t, b in ((T, B), (T, 0), (0, B), (0, 0)):
+                ent = self._entries.get(
+                    (kind, int(n_x), int(n_h), int(n_layers), t, b, m))
+                if ent is not None:
+                    return ent
+        return None
+
+    # ------------------------------------------------------- persistence
+    def to_json(self) -> str:
+        """Canonical JSON: entries sorted by key, keys sorted — so equal
+        caches serialise byte-identically (the replay-determinism pin)."""
+        return json.dumps(
+            {'version': 1,
+             'entries': [dataclasses.asdict(e) for e in self.entries()]},
+            indent=2, sort_keys=True) + '\n'
+
+    def save(self, path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.write_text(self.to_json())
+        return path
+
+    @classmethod
+    def from_json(cls, text: str) -> 'ScheduleCache':
+        doc = json.loads(text)
+        assert doc.get('version') == 1, doc.get('version')
+        return cls(ScheduleEntry(**e) for e in doc['entries'])
+
+    @classmethod
+    def load(cls, path) -> 'ScheduleCache':
+        return cls.from_json(pathlib.Path(path).read_text())
+
+
+# ---------------------------------------------------------------------------
+# Process-wide registry (what dispatch consults)
+# ---------------------------------------------------------------------------
+_CURRENT: Optional[ScheduleCache] = None
+
+
+def install_schedule_cache(cache) -> ScheduleCache:
+    """Install ``cache`` (a ``ScheduleCache`` or a JSON path) as the cache
+    dispatch consults.  Returns the installed object."""
+    global _CURRENT
+    if not isinstance(cache, ScheduleCache):
+        cache = ScheduleCache.load(cache)
+    _CURRENT = cache
+    return cache
+
+
+def current_schedule_cache() -> Optional[ScheduleCache]:
+    """The installed cache, or None (dispatch then uses estimation rules)."""
+    return _CURRENT
+
+
+def clear_schedule_cache() -> None:
+    """Uninstall the process-wide schedule cache: every consumer falls back
+    to its hand-derived cold-cache default on the next lookup."""
+    global _CURRENT
+    _CURRENT = None
+
+
+@contextmanager
+def using_schedule_cache(cache):
+    """Scoped install (tests): installs ``cache``, restores the previous
+    cache on exit."""
+    global _CURRENT
+    prev = _CURRENT
+    try:
+        yield install_schedule_cache(cache)
+    finally:
+        _CURRENT = prev

@@ -1,0 +1,174 @@
+"""Shmoo harness: candidate spaces, admission pruning, predicted ranking.
+
+One record format serves BOTH shmoo paths in the repo — the autotuner's
+schedule sweep here and the Fig. 5 voltage sweep in
+``benchmarks/fig5_shmoo.py`` — so the two cannot drift: a ``ShmooRecord``
+is ``(suite, params, metrics)`` and ``write_shmoo_csv`` emits one canonical
+CSV (``suite`` column, then the param columns, then the metric columns).
+
+The schedule space is pruned BEFORE anything is timed, by the same rules
+dispatch itself enforces (``core.systolic.seq_scaleout_admissible`` for
+mesh placement, ``kernels.lstm_seq.stack_vmem_bytes_estimate`` against the
+VMEM budget), then ranked by the calibrated silicon model
+(``core.perf_model.staged_wavefront_cycles`` with the candidate's in-stage
+order); only the top of the predicted ranking graduates to timed trials in
+``autotune``.  Enumeration and ranking are pure functions of their inputs —
+no clocks, no RNG — which is what makes offline replay deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core import perf_model as pm
+from ..core.systolic import IN_STAGE_MODES
+
+#: Chunk-depth grid for the staged schedule shmoo (clamped to T).
+TC_GRID = (4, 8, 16, 32, 64)
+
+
+@dataclasses.dataclass
+class ShmooRecord:
+    """One shmoo point: which sweep, where in the space, what it scored."""
+    suite: str
+    params: Dict[str, object]
+    metrics: Dict[str, float]
+
+
+def write_shmoo_csv(path, records: Sequence[ShmooRecord],
+                    param_order: Optional[Sequence[str]] = None,
+                    metric_order: Optional[Sequence[str]] = None
+                    ) -> pathlib.Path:
+    """Write the shared CSV: ``suite,<params...>,<metrics...>``.
+
+    Column order defaults to the sorted keys of the first record (explicit
+    orders let a sweep keep a stable, documented header).  Every record
+    must cover the same columns — drift between shmoo producers is a
+    ValueError here, not a silently ragged file.
+    """
+    assert records, 'empty shmoo'
+    pcols = list(param_order or sorted(records[0].params))
+    mcols = list(metric_order or sorted(records[0].metrics))
+    lines = [','.join(['suite'] + pcols + mcols)]
+    for r in records:
+        if set(r.params) != set(pcols) or set(r.metrics) != set(mcols):
+            raise ValueError(
+                f'ragged shmoo record for suite {r.suite!r}: '
+                f'{sorted(r.params)}/{sorted(r.metrics)} vs {pcols}/{mcols}')
+        vals = ([r.suite] + [_fmt(r.params[c]) for c in pcols]
+                + [_fmt(r.metrics[c]) for c in mcols])
+        lines.append(','.join(vals))
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text('\n'.join(lines) + '\n')
+    return path
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f'{v:.4f}'
+    return str(v)
+
+
+# ---------------------------------------------------------------------------
+# Staged-schedule candidate space
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, order=True)
+class StagedCandidate:
+    """One point of the staged-schedule space: chunk depth, in-stage order,
+    and the per-device block geometry the mesh implies (``bn x bk`` from the
+    row/col split, ``lb`` the bottleneck stage's layer count)."""
+    tc: int
+    in_stage: str
+    stages: int
+    rows: int
+    cols: int
+    bn: int
+    bk: int
+    lb: int
+
+
+def enumerate_staged_candidates(n_x: int, n_h: int, n_layers: int, T: int,
+                                B: int, *, stages: int, rows: int, cols: int,
+                                dtype_bytes: int = 4,
+                                vmem_budget: Optional[int] = None
+                                ) -> List[StagedCandidate]:
+    """The admissible ``(Tc, in_stage)`` grid for one mesh placement.
+
+    The stage/row/col split is fixed by the mesh (placement is the mesh
+    preset's job — ``launch/mesh.py``); what the schedule can still choose
+    is the chunk depth and the in-stage order.  Pruning mirrors dispatch:
+    the stage count must not exceed the stack (idle stages only bubble —
+    the stage-aware ``seq_scaleout_admissible`` rule, which
+    ``autotune.tune_staged_stack`` re-checks against the real mesh), and
+    the bottleneck stage's PER-DEVICE resident layer block — ``lb``
+    layers' worth of both weight families at the ``bn x bk`` block the
+    row/col split implies, plus their peephole/bias rows — must fit the
+    VMEM budget.
+    """
+    from ..core.lstm import GATES, _VMEM_BUDGET_BYTES
+    budget = _VMEM_BUDGET_BYTES if vmem_budget is None else vmem_budget
+    if stages < 1 or stages > n_layers:
+        return []
+    blk = math.lcm(rows, cols)
+    n_h_p = -(-n_h // blk) * blk            # pad so rows and cols divide
+    bn, bk = n_h_p // rows, n_h_p // cols
+    lb = -(-n_layers // stages)
+    resident = (lb * 2 * GATES * bn * bk * dtype_bytes      # W_h + W_in
+                + lb * (3 + GATES) * bn * dtype_bytes)      # peep + bias
+    if resident > budget:
+        return []
+    out = []
+    for tc in sorted({min(t, T) for t in TC_GRID if t <= T} or {T}):
+        for mode in IN_STAGE_MODES:
+            out.append(StagedCandidate(tc=tc, in_stage=mode, stages=stages,
+                                       rows=rows, cols=cols, bn=bn, bk=bk,
+                                       lb=lb))
+    return sorted(out)
+
+
+def predict_staged_us(cand: StagedCandidate, n_x: int, n_h: int,
+                      n_layers: int, T: int, v: float = pm.V_MAX) -> float:
+    """Model-predicted wall time (us) of one candidate on the calibrated
+    silicon: ``staged_wavefront_cycles`` with the candidate's in-stage
+    order, at the candidate's stage count, over the homogeneous stack."""
+    layers = [pm.LayerDims(n_x, n_h)] + [pm.LayerDims(n_h, n_h)
+                                         for _ in range(n_layers - 1)]
+    cfg = pm.TileConfig(cand.stages, cand.rows, cand.cols)
+    cyc = pm.staged_wavefront_cycles(
+        layers, cfg, T, chunk=cand.tc,
+        in_stage_batched=(cand.in_stage == 'batched'))
+    return cyc / pm.freq_hz(v) * 1e6
+
+
+def rank_staged_candidates(cands: Sequence[StagedCandidate], n_x: int,
+                           n_h: int, n_layers: int, T: int
+                           ) -> List[Tuple[StagedCandidate, float]]:
+    """Candidates with their predicted us, best first.  Ties break on the
+    candidate's own (total) order so ranking is a pure function of the
+    space — the determinism the replay check pins."""
+    scored = [(c, predict_staged_us(c, n_x, n_h, n_layers, T))
+              for c in cands]
+    return sorted(scored, key=lambda cu: (cu[1], cu[0]))
+
+
+def staged_shmoo_records(n_x: int, n_h: int, n_layers: int, T: int, B: int,
+                         *, stages: int, rows: int, cols: int,
+                         suite: str = 'staged_schedule'
+                         ) -> List[ShmooRecord]:
+    """The predicted shmoo of one placement, in the shared record format."""
+    cands = enumerate_staged_candidates(n_x, n_h, n_layers, T, B,
+                                        stages=stages, rows=rows, cols=cols)
+    recs = []
+    for cand, us in rank_staged_candidates(cands, n_x, n_h, n_layers, T):
+        recs.append(ShmooRecord(
+            suite=suite,
+            params={'n_x': n_x, 'n_h': n_h, 'n_layers': n_layers, 'T': T,
+                    'B': B, 'stages': cand.stages, 'rows': cand.rows,
+                    'cols': cand.cols, 'bn': cand.bn, 'bk': cand.bk,
+                    'lb': cand.lb, 'tc': cand.tc, 'in_stage': cand.in_stage},
+            metrics={'predicted_us': us}))
+    return recs

@@ -15,11 +15,15 @@ import repro.runtime.serving_faults as serving_faults_mod
 import repro.serving.engine as engine_mod
 import repro.serving.scheduler as scheduler_mod
 import repro.serving.session as session_mod
+import repro.tune.autotune as autotune_mod
+import repro.tune.schedule as schedule_mod
+import repro.tune.shmoo as shmoo_mod
 from repro.core import lstm as lstm_core
 from repro.models import chipmunk_net
 
 MODULES = (systolic_mod, ops_mod, stack_ops_mod, engine_mod, scheduler_mod,
-           session_mod, serving_faults_mod)
+           session_mod, serving_faults_mod, schedule_mod, shmoo_mod,
+           autotune_mod)
 
 # Entry point -> substring its docstring must contain (the numerics contract:
 # the reference the function is bit-identical / allclose to, or an explicit
@@ -73,6 +77,16 @@ CONTRACTS = {
     stack_ops_mod.lstm_stack_seq_quantized_auto: 'bit-identical',
     engine_mod.StreamingEngine.step: 'commit',
     scheduler_mod.SlotScheduler.preempt_candidate: 'priority',
+    # measured-schedule autotuner contracts (DESIGN.md §12)
+    schedule_mod.install_schedule_cache: 'dispatch',
+    schedule_mod.mesh_signature: 'cache key',
+    systolic_mod.resolve_staged_chunk: 'schedule',
+    systolic_mod.resolve_staged_in_stage: 'bit-equal',
+    autotune_mod.tune_staged_stack: 'bitwise',
+    autotune_mod.tune_quantized_backend: 'bit-identical',
+    autotune_mod.replay_check: 'deterministic',
+    shmoo_mod.write_shmoo_csv: 'shared',
+    engine_mod.tuned_chunk_ceiling: 'scheduling-only',
 }
 
 

@@ -172,3 +172,57 @@ def test_wavefront_gops_bounded_by_peak():
     seq_gops = ops / seq_secs / 1e9
     assert got > seq_gops * 2.5
     assert got < pm.peak_gops(1.24) * cfg.n_engines
+
+
+def test_staged_in_stage_batched_identities():
+    """``in_stage_batched=True``: each macro-step retires its stage's layer
+    block as one diagonal wavefront — (chunk + Lb - 1) rounds of the block
+    bottleneck instead of chunk * sum(block).  Exact identities: one layer
+    per stage coincides with the sequential form (nothing to batch); the
+    2-stage CTC placement's seq/batched ratio sits in (1, Lb]."""
+    T, chunk = 128, 16
+    cfg2 = pm.TileConfig(2, 5, 5)
+    per2 = [pm.layer_step_cycles(ld, cfg2) for ld in pm.CTC_3L_421H]
+    seq = pm.staged_wavefront_cycles(pm.CTC_3L_421H, cfg2, T, chunk=chunk)
+    bat = pm.staged_wavefront_cycles(pm.CTC_3L_421H, cfg2, T, chunk=chunk,
+                                     in_stage_batched=True)
+    # stage 0 = layers {0,1} (the bottleneck block, Lb=2), stage 1 = {2}
+    K = T // chunk
+    assert seq == pytest.approx(
+        (K + 1) * chunk * (per2[0] + per2[1]))
+    assert bat == pytest.approx(
+        (K + 1) * (chunk + 1) * max(per2[0], per2[1]))
+    assert 1.0 < seq / bat <= 2.0          # in (1, Lb], Lb = 2
+    assert seq / bat == pytest.approx(1.882, rel=0.01)   # the tuner's input
+    # one layer per stage: Lb = 1 everywhere -> the two orders coincide
+    cfg3 = pm.TileConfig(3, 5, 5)
+    assert pm.staged_wavefront_cycles(pm.CTC_3L_421H, cfg3, T, chunk=chunk,
+                                      in_stage_batched=True) == \
+        pytest.approx(pm.staged_wavefront_cycles(pm.CTC_3L_421H, cfg3, T,
+                                                 chunk=chunk))
+
+
+def test_staged_in_stage_measured_bracket():
+    """The committed BENCH row vs the model: the silicon model predicts the
+    batched diagonals win ~1.9x (concurrent block slots), but the CPU
+    emulation time-slices every "device" onto one core — FLOP-bound, so
+    the measured ratio may land BELOW 1 (the sequential order's hoisted
+    full-width below-GEMMs are FLOP-optimal).  What must ALWAYS hold: the
+    measured ratio stays inside [1/(Lb+1), predicted] — worse than the
+    full serialization floor or better than the concurrency ceiling would
+    mean the benchmark is measuring something else.  The per-host decision
+    itself belongs to repro.tune (see tuned_schedules.json)."""
+    import json
+    import pathlib
+    bench = pathlib.Path(__file__).resolve().parents[1] / 'BENCH_systolic.json'
+    rows = {r['name']: r['us_per_call']
+            for r in json.loads(bench.read_text())['results']}
+    us_seq = rows['scaleout/stack_fused_systolic']
+    us_bat = rows['scaleout/stack_fused_systolic_batched']
+    measured = us_seq / us_bat
+    cfg2 = pm.TileConfig(2, 5, 5)
+    pred = (pm.staged_wavefront_cycles(pm.CTC_3L_421H, cfg2, 128, chunk=16)
+            / pm.staged_wavefront_cycles(pm.CTC_3L_421H, cfg2, 128, chunk=16,
+                                         in_stage_batched=True))
+    Lb = 2
+    assert 1.0 / (Lb + 1) <= measured <= pred, (measured, pred)

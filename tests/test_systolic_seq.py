@@ -387,3 +387,113 @@ def test_topology_presets_geometry():
     # every stage-1 preset is admissible for the paper layer once built
     for name, (stage, rows, cols) in SYSTOLIC_TOPOLOGIES.items():
         assert stage >= 1 and rows >= 1 and cols >= 1
+
+
+# ------------------------------------------- in-stage schedule equivalence
+def test_staged_in_stage_modes_bit_equal_f32_2dev():
+    """Both in-stage round orders (diagonal-batched wavefront vs the
+    layer-sequential hoisted form) are BITWISE-equal schedules of the same
+    arithmetic: forward outputs, per-layer finals, and grads through the
+    gate-recompute VJP, at several chunk sizes including a ragged one."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, systolic
+assert systolic.IN_STAGE_MODES == ('batched', 'sequential')
+p = lstm.init_lstm_stack(jax.random.PRNGKey(0), 16, 24, 3)
+xs = jax.random.normal(jax.random.PRNGKey(1), (9, 2, 16)) * 0.5
+mesh = systolic.make_systolic_mesh(1, 1, stage=2)
+for chunk in (1, 2, 4, 9):           # 9/2 and 9/4 exercise ragged tails
+    ys_b, fin_b = systolic.systolic_lstm_stack_seq(
+        p, mesh, xs, chunk=chunk, in_stage='batched')
+    ys_s, fin_s = systolic.systolic_lstm_stack_seq(
+        p, mesh, xs, chunk=chunk, in_stage='sequential')
+    np.testing.assert_array_equal(np.asarray(ys_b), np.asarray(ys_s))
+    for l in range(3):
+        np.testing.assert_array_equal(np.asarray(fin_b[l][0]),
+                                      np.asarray(fin_s[l][0]))
+        np.testing.assert_array_equal(np.asarray(fin_b[l][1]),
+                                      np.asarray(fin_s[l][1]))
+def loss(q, mode):
+    ys, fin = systolic.systolic_lstm_stack_seq(q, mesh, xs, chunk=2,
+                                               in_stage=mode)
+    return jnp.sum(ys ** 2) + sum(jnp.sum(h * c) for h, c in fin)
+g_b = jax.grad(lambda q: loss(q, 'batched'))(p)
+g_s = jax.grad(lambda q: loss(q, 'sequential'))(p)
+for a, b in zip(jax.tree_util.tree_flatten(g_b)[0],
+                jax.tree_util.tree_flatten(g_s)[0]):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+def test_staged_in_stage_modes_bit_identical_int8_2dev():
+    """int8: both in-stage orders == the silicon reference chain bit for
+    bit, AND a >=3-ragged-chunk masked carry stream under EACH mode equals
+    the other mode's stream exactly (the serving engine may flip modes
+    between deployments without perturbing a single code)."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, quant, systolic
+n_x, n_h, tile, L = 24, 32, 16, 3
+st = lstm.init_lstm_stack(jax.random.PRNGKey(5), n_x, n_h, L)
+qps = []
+for l, lp in enumerate(st.layers):
+    plan = systolic.SystolicPlan(n_x if l == 0 else n_h, n_h, tile)
+    qps.append(systolic.quantize_packed(systolic.pack_lstm(lp, plan)))
+xs = jax.random.normal(jax.random.PRNGKey(6), (6, 2, n_x)) * 0.5
+xs_q = quant.quantize(xs, quant.STATE_FMT)
+h = xs_q
+for qp in qps:
+    h = systolic.systolic_layer_quantized(qp, h)
+ref = np.asarray(h)
+mesh = systolic.make_systolic_mesh(1, 1, stage=2)
+for mode in systolic.IN_STAGE_MODES:
+    o = systolic.systolic_lstm_stack_seq_quantized(qps, mesh, xs_q, chunk=2,
+                                                   in_stage=mode)
+    np.testing.assert_array_equal(np.asarray(o), ref)
+lens = np.array([6, 3])
+streams = {}
+for mode in systolic.IN_STAGE_MODES:
+    stt = None; outs = []
+    for lo, hi in ((0, 2), (2, 4), (4, 6)):
+        vl = jnp.asarray(np.clip(lens - lo, 0, hi - lo), jnp.int32)
+        o, stt = systolic.systolic_lstm_stack_seq_quantized(
+            qps, mesh, xs_q[lo:hi], state=stt, valid_len=vl,
+            return_state=True, chunk=1, in_stage=mode)
+        outs.append(np.asarray(o))
+    streams[mode] = (np.concatenate(outs), np.asarray(stt[0]))
+np.testing.assert_array_equal(streams['batched'][0],
+                              streams['sequential'][0])
+np.testing.assert_array_equal(streams['batched'][1],
+                              streams['sequential'][1])
+for b, Lv in enumerate(lens):
+    np.testing.assert_array_equal(streams['batched'][0][:Lv, b], ref[:Lv, b])
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+def test_staged_in_stage_modes_graves75_scaled_2dev():
+    """A scaled-down graves-75 shape (3 stages, live row+col sharding is
+    covered by the scale-out bench; here 6 devices as (3,2,1)): 5 layers
+    over 3 stages gives uneven (2,2,1) blocks — the wavefront diagonals hit
+    both a 2-layer block (real batching) and a 1-layer block (degenerate),
+    and both orders stay bit-equal."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lstm, systolic
+p = lstm.init_lstm_stack(jax.random.PRNGKey(7), 16, 24, 5)
+xs = jax.random.normal(jax.random.PRNGKey(8), (8, 2, 16)) * 0.5
+mesh = systolic.make_systolic_mesh(2, 1, stage=3)
+assert systolic.stage_layer_blocks(5, 3) == ((0, 2), (2, 4), (4, 5))
+ys_ref, _ = lstm.lstm_stack_apply(p, xs, backend='xla_scan')
+ys_b, _ = systolic.systolic_lstm_stack_seq(p, mesh, xs, chunk=2,
+                                           in_stage='batched')
+ys_s, _ = systolic.systolic_lstm_stack_seq(p, mesh, xs, chunk=2,
+                                           in_stage='sequential')
+np.testing.assert_array_equal(np.asarray(ys_b), np.asarray(ys_s))
+np.testing.assert_allclose(ys_b, ys_ref, rtol=1e-5, atol=1e-6)
+print('OK')
+""", n_devices=6)
+    assert 'OK' in out

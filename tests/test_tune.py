@@ -1,0 +1,296 @@
+"""The measured-schedule autotuner's contracts (DESIGN.md §12).
+
+Three pins: (1) the cache replays deterministically — canonical JSON round-
+trips byte-for-byte and predicted winners are re-derivable from a fresh
+enumeration; (2) a cache hit is dispatch-only — it can flip WHICH schedule
+runs (the previously hand-calibrated ``_Q_FUSED_MIN_NH`` decision, the
+staged ``Tc`` / in-stage order) but never the numerics; (3) admission stays
+authoritative — a cache can never force an inadmissible launch.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import lstm
+from repro.core import perf_model as pm
+from repro.tune import (ANY_MESH, ScheduleCache, ScheduleEntry, ShmooRecord,
+                        clear_schedule_cache, current_schedule_cache,
+                        enumerate_staged_candidates, install_schedule_cache,
+                        mesh_signature, rank_staged_candidates, replay_check,
+                        staged_shmoo_records, tune_quantized_backend,
+                        using_schedule_cache, write_shmoo_csv)
+
+from _subproc import run_with_devices
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _cache(*entries):
+    return ScheduleCache(entries)
+
+
+# ------------------------------------------------------------ cache basics
+def test_cache_roundtrip_is_byte_identical():
+    c = _cache(
+        ScheduleEntry(kind='q_stack_backend', n_x=96, n_h=96, n_layers=3,
+                      backend='fused', source='measured', measured_us=1.5),
+        ScheduleEntry(kind='stack_f32', n_x=123, n_h=421, n_layers=3, T=128,
+                      B=8, mesh='stage:2,row:5,col:5', tc=16,
+                      in_stage='sequential', source='measured'))
+    j1 = c.to_json()
+    c2 = ScheduleCache.from_json(j1)
+    assert c2.to_json() == j1
+    # canonical: entries sorted by key, keys sorted inside each entry
+    doc = json.loads(j1)
+    assert doc['version'] == 1 and len(doc['entries']) == 2
+    assert j1 == ScheduleCache(reversed(c.entries())).to_json()
+
+
+def test_lookup_precedence_exact_beats_wildcards():
+    sig = 'stage:2,row:5,col:5'
+    c = _cache(
+        ScheduleEntry(kind='stack_f32', n_x=1, n_h=2, n_layers=3, T=0, B=0,
+                      mesh=ANY_MESH, tc=4),
+        ScheduleEntry(kind='stack_f32', n_x=1, n_h=2, n_layers=3, T=0, B=0,
+                      mesh=sig, tc=8),
+        ScheduleEntry(kind='stack_f32', n_x=1, n_h=2, n_layers=3, T=128,
+                      B=0, mesh=sig, tc=16),
+        ScheduleEntry(kind='stack_f32', n_x=1, n_h=2, n_layers=3, T=128,
+                      B=8, mesh=sig, tc=32))
+    q = dict(n_x=1, n_h=2, n_layers=3)
+    assert c.lookup('stack_f32', T=128, B=8, mesh=sig, **q).tc == 32
+    assert c.lookup('stack_f32', T=128, B=9, mesh=sig, **q).tc == 16
+    assert c.lookup('stack_f32', T=64, B=8, mesh=sig, **q).tc == 8
+    assert c.lookup('stack_f32', T=64, B=8, mesh='other', **q).tc == 4
+    assert c.lookup('stack_f32', T=64, B=8, **q).tc == 4
+    assert c.lookup('stack_int8', T=128, B=8, mesh=sig, **q) is None
+
+
+def test_mesh_signature_forms():
+    assert mesh_signature(None) == ANY_MESH
+    assert mesh_signature('stage:2,row:5,col:5') == 'stage:2,row:5,col:5'
+
+
+def test_registry_install_current_clear_and_scoped():
+    clear_schedule_cache()
+    assert current_schedule_cache() is None
+    c = _cache()
+    with using_schedule_cache(c) as got:
+        assert got is c and current_schedule_cache() is c
+    assert current_schedule_cache() is None
+
+
+# ----------------------------------------- dispatch is cache-first (pinned)
+def test_q_fused_min_nh_decision_is_cache_driven():
+    """The previously hand-calibrated ``_Q_FUSED_MIN_NH=256`` decision: at
+    96 hidden the constant says layerwise; a measured cache entry flips it
+    to fused — and removing the cache restores the constant fallback."""
+    assert lstm.select_quantized_stack_backend(96, 3, 32, 4) == 'layerwise'
+    c = _cache(ScheduleEntry(kind='q_stack_backend', n_x=96, n_h=96,
+                             n_layers=3, backend='fused', source='measured'))
+    with using_schedule_cache(c):
+        assert lstm.select_quantized_stack_backend(96, 3, 32, 4) == 'fused'
+        # the constant is still the fallback on a key miss
+        assert lstm.select_quantized_stack_backend(512, 3, 32, 4) == 'fused'
+        assert (lstm.select_quantized_stack_backend(128, 3, 32, 4)
+                == 'layerwise')
+    assert lstm.select_quantized_stack_backend(96, 3, 32, 4) == 'layerwise'
+
+
+def test_q_structural_guards_not_overridable():
+    """Layer/sequence floors are correctness-of-purpose gates (nothing to
+    pipeline / amortise), not preferences — a cache cannot bypass them."""
+    c = _cache(ScheduleEntry(kind='q_stack_backend', n_x=96, n_h=96,
+                             n_layers=1, backend='fused'),
+               ScheduleEntry(kind='q_stack_backend', n_x=96, n_h=96,
+                             n_layers=3, T=2, backend='fused'))
+    with using_schedule_cache(c):
+        assert lstm.select_quantized_stack_backend(96, 1, 32, 4) == 'layerwise'
+        assert lstm.select_quantized_stack_backend(96, 3, 2, 4) == 'layerwise'
+
+
+def test_stack_backend_cache_respects_admission():
+    """A cached stack backend wins only where it is still admissible: a
+    Pallas kernel entry cannot be forced onto a non-TPU platform, but
+    ``xla_scan`` (admissible everywhere) is honoured."""
+    args = dict(n_x=123, n_h=421, n_layers=3, T=128, batch=8)
+    base = lstm.select_stack_backend(platform='cpu', **args)
+    c = _cache(ScheduleEntry(kind='stack_backend', n_x=123, n_h=421,
+                             n_layers=3, backend='pallas_seq_fused'))
+    with using_schedule_cache(c):
+        assert lstm.select_stack_backend(platform='cpu', **args) == base
+        assert lstm.select_stack_backend(platform='tpu', **args) \
+            == 'pallas_seq_fused'
+    c2 = _cache(ScheduleEntry(kind='stack_backend', n_x=123, n_h=421,
+                              n_layers=3, backend='xla_scan'))
+    with using_schedule_cache(c2):
+        assert lstm.select_stack_backend(platform='tpu', **args) == 'xla_scan'
+
+
+def test_staged_tc_resolution_is_cache_driven():
+    """``resolve_staged_chunk`` (what ``chunk=None`` uses): the hand-derived
+    ``ceil(T / 4S)`` default on a miss, the cached winner on a hit —
+    clamped to T, ignored when ``tc=0``."""
+    from repro.core import systolic
+    kw = dict(n_h=421, n_x=123, batch=8, mesh=None)
+    default = systolic.resolve_staged_chunk(3, 128, 2, **kw)
+    assert default == 16          # ceil(128 / (4*2))
+    c = _cache(ScheduleEntry(kind='stack_f32', n_x=123, n_h=421,
+                             n_layers=3, tc=4, in_stage='sequential',
+                             source='measured'))
+    with using_schedule_cache(c):
+        assert systolic.resolve_staged_chunk(3, 128, 2, **kw) == 4
+        assert systolic.resolve_staged_chunk(3, 2, 2, **kw) == 2  # clamp T
+        assert systolic.resolve_staged_in_stage(3, 128, 2, **kw) \
+            == 'sequential'
+    assert systolic.resolve_staged_chunk(3, 128, 2, **kw) == default
+    assert systolic.resolve_staged_in_stage(3, 128, 2, **kw) == 'batched'
+
+
+def test_serving_chunk_ceiling_is_cache_driven():
+    """The §11 chunk-size policy's ceiling consults the cache: a tuned
+    staged ``Tc`` clamps how deep chunks may grow; a miss leaves the
+    engine's packing width untouched (scheduling-only either way)."""
+    import types
+
+    from repro.serving.engine import tuned_chunk_ceiling
+    cfg = types.SimpleNamespace(lstm_inputs=123, lstm_hidden=421, n_layers=3)
+    clear_schedule_cache()
+    assert tuned_chunk_ceiling(cfg, 16, 4) == 16
+    c = _cache(ScheduleEntry(kind='stack_f32', n_x=123, n_h=421,
+                             n_layers=3, tc=4, source='measured'))
+    with using_schedule_cache(c):
+        assert tuned_chunk_ceiling(cfg, 16, 4) == 4
+        assert tuned_chunk_ceiling(cfg, 2, 4) == 2      # never grows chunk
+    assert tuned_chunk_ceiling(cfg, 16, 4) == 16
+
+
+# ------------------------------------------------- numerics are unchanged
+def test_cache_hit_changes_no_numerics_2dev():
+    """The acceptance pin: the SAME staged call with a cache forcing a
+    different (Tc, in_stage) schedule produces bitwise-identical outputs —
+    a hit moves chunk boundaries and round order, never arithmetic."""
+    out = run_with_devices("""
+import jax, numpy as np
+from repro.core import lstm, systolic
+from repro.tune import ScheduleCache, ScheduleEntry, using_schedule_cache
+p = lstm.init_lstm_stack(jax.random.PRNGKey(0), 16, 24, 3)
+xs = jax.random.normal(jax.random.PRNGKey(1), (9, 2, 16)) * 0.5
+mesh = systolic.make_systolic_mesh(1, 1, stage=2)
+base, _ = systolic.systolic_lstm_stack_seq(p, mesh, xs)   # cold-cache path
+sig = systolic.resolve_staged_chunk(3, 9, 2, n_h=24, n_x=16, batch=2,
+                                    mesh=mesh)
+c = ScheduleCache([ScheduleEntry(kind='stack_f32', n_x=16, n_h=24,
+                                 n_layers=3, tc=2, in_stage='sequential',
+                                 mesh='stage:2,row:1,col:1',
+                                 source='measured')])
+with using_schedule_cache(c):
+    tuned, _ = systolic.systolic_lstm_stack_seq(p, mesh, xs)
+np.testing.assert_array_equal(np.asarray(base), np.asarray(tuned))
+print('OK')
+""", n_devices=2)
+    assert 'OK' in out
+
+
+# ------------------------------------------------- deterministic replay
+def test_predicted_tuning_is_deterministic():
+    e1, _ = tune_quantized_backend(48, 96, 3, 32, 4, measure=False)
+    e2, _ = tune_quantized_backend(48, 96, 3, 32, 4, measure=False)
+    assert e1 == e2
+    r1 = staged_shmoo_records(48, 96, 3, 32, 4, stages=2, rows=2, cols=2)
+    r2 = staged_shmoo_records(48, 96, 3, 32, 4, stages=2, rows=2, cols=2)
+    assert r1 == r2 and r1, 'predicted shmoo must be reproducible'
+
+
+def test_replay_check_accepts_committed_cache_and_catches_drift():
+    cache = ScheduleCache.load(REPO / 'tuned_schedules.json')
+    assert len(cache) >= 2
+    assert replay_check(cache) >= 1
+    # an out-of-space winner must be caught
+    bad = ScheduleCache([ScheduleEntry(
+        kind='stack_f32', n_x=48, n_h=96, n_layers=3, T=32, B=4,
+        mesh='stage:2,row:2,col:2', tc=999, in_stage='batched')])
+    with pytest.raises(AssertionError):
+        replay_check(bad)
+
+
+def test_committed_cache_drives_flagship_dispatch():
+    """The committed cache's Table-2 entry (measured on the 2x(5x5) mesh)
+    actually lands: resolve_staged_chunk/in_stage return its winner for
+    the matching (shape, mesh signature)."""
+    from repro.core import systolic
+    cache = ScheduleCache.load(REPO / 'tuned_schedules.json')
+    ent = cache.lookup('stack_f32', n_x=123, n_h=421, n_layers=3, T=128,
+                       B=8, mesh='stage:2,row:5,col:5')
+    assert ent is not None and ent.source == 'measured' and ent.tc >= 1
+    assert ent.in_stage in systolic.IN_STAGE_MODES
+    with using_schedule_cache(cache):
+        tc = systolic.resolve_staged_chunk(
+            3, 128, 2, n_h=421, n_x=123, batch=8,
+            mesh='stage:2,row:5,col:5')
+        mode = systolic.resolve_staged_in_stage(
+            3, 128, 2, n_h=421, n_x=123, batch=8,
+            mesh='stage:2,row:5,col:5')
+    assert (tc, mode) == (ent.tc, ent.in_stage)
+
+
+# ------------------------------------------------- shmoo space + records
+def test_enumeration_prunes_and_ranks():
+    cands = enumerate_staged_candidates(123, 421, 3, 128, 8, stages=2,
+                                        rows=5, cols=5)
+    assert cands and all(c.bn == 85 and c.bk == 85 and c.lb == 2
+                         for c in cands)
+    assert not enumerate_staged_candidates(123, 421, 3, 128, 8, stages=4,
+                                           rows=5, cols=5)  # stages > L
+    assert not enumerate_staged_candidates(    # per-device block > budget
+        123, 4096, 3, 128, 8, stages=2, rows=1, cols=1, vmem_budget=1 << 20)
+    ranked = rank_staged_candidates(cands, 123, 421, 3, 128)
+    us = [u for _, u in ranked]
+    assert us == sorted(us)
+    # the model prefers the batched order on (genuinely parallel) silicon
+    best_bat = min(u for c, u in ranked if c.in_stage == 'batched')
+    best_seq = min(u for c, u in ranked if c.in_stage == 'sequential')
+    assert best_bat < best_seq
+
+
+def test_shmoo_csv_shared_format_and_ragged_rejection(tmp_path):
+    recs = [ShmooRecord(suite='s', params={'a': 1}, metrics={'m': 2.0}),
+            ShmooRecord(suite='s', params={'a': 2}, metrics={'m': 3.0})]
+    p = write_shmoo_csv(tmp_path / 'x.csv', recs)
+    lines = p.read_text().splitlines()
+    assert lines[0] == 'suite,a,m' and lines[1] == 's,1,2.0000'
+    with pytest.raises(ValueError):
+        write_shmoo_csv(tmp_path / 'y.csv', recs + [
+            ShmooRecord(suite='s', params={'b': 1}, metrics={'m': 1.0})])
+
+
+def test_fig5_sweep_uses_shared_records(tmp_path):
+    """The Fig. 5 voltage shmoo emits the SAME record type through the SAME
+    writer as the schedule tuner — the two shmoo paths cannot drift."""
+    import sys
+    sys.path.insert(0, str(REPO))
+    try:
+        from benchmarks.fig5_shmoo import sweep
+    finally:
+        sys.path.pop(0)
+    recs = sweep(points=5)
+    assert all(isinstance(r, ShmooRecord) for r in recs)
+    p = write_shmoo_csv(tmp_path / 'fig5.csv', recs,
+                        param_order=['voltage_v'],
+                        metric_order=['freq_mhz', 'power_mw', 'gops',
+                                      'gops_per_mw'])
+    head = p.read_text().splitlines()[0]
+    assert head == 'suite,voltage_v,freq_mhz,power_mw,gops,gops_per_mw'
+
+
+# ------------------------------------------------- measured trial smoke
+def test_measured_quantized_trial_smoke():
+    """A real (tiny) interleaved trial: records both candidates, asserts
+    them bit-identical before timing, and the winner is one of them."""
+    ent, recs = tune_quantized_backend(8, 16, 2, 8, 2, tile=8,
+                                      measure=True, iters=1, warmup=0)
+    assert ent.backend in ('fused', 'layerwise')
+    assert ent.source == 'measured' and ent.measured_us > 0
+    assert {r.params['backend'] for r in recs} == {'fused', 'layerwise'}
