@@ -358,7 +358,8 @@ def _stack_backend_admissible(backend: str, n_x: int, n_h: int,
         from .systolic import seq_scaleout_admissible
         layers = n_layers if backend == 'pallas_seq_fused_systolic' else None
         return (mesh is not None and T >= _SEQ_MIN_T
-                and seq_scaleout_admissible(n_h, mesh, n_layers=layers))
+                and seq_scaleout_admissible(n_h, mesh, n_layers=layers,
+                                            n_x=n_x, T=T, batch=batch))
     return (platform or jax.default_backend()) == 'tpu'
 
 
@@ -401,7 +402,8 @@ def select_stack_backend(n_x: int, n_h: int, n_layers: int, T: int,
         return tuned
     if mesh is not None and T >= _SEQ_MIN_T:
         from .systolic import seq_scaleout_admissible
-        if seq_scaleout_admissible(n_h, mesh, n_layers=n_layers):
+        if seq_scaleout_admissible(n_h, mesh, n_layers=n_layers,
+                                   n_x=n_x, T=T, batch=batch):
             return 'pallas_seq_fused_systolic'
     per_layer = select_lstm_backend(n_x, n_h, T, batch,
                                     platform=platform, mesh=mesh)

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 # --- measured corners (paper Sec. 4.1) -------------------------------------
 V_MIN, F_MIN_HZ, P_MIN_W = 0.75, 20e6, 1.24e-3
@@ -257,7 +257,8 @@ def wavefront_gops(layers: Sequence[LayerDims], cfg: TileConfig, v: float,
 def staged_wavefront_cycles(layers: Sequence[LayerDims], cfg: TileConfig,
                             T: int, chunk: int = 1, tile: int = N_LSTM,
                             beta: float = BETA,
-                            in_stage_batched: bool = False) -> float:
+                            in_stage_batched: bool = False,
+                            blocks: Optional[Sequence[int]] = None) -> float:
     """Cycles for a T-step utterance under the staged pipeline schedule.
 
     ``(K + S - 1) * max(macro cycles)`` with ``K = ceil(T/chunk)``: every
@@ -289,14 +290,27 @@ def staged_wavefront_cycles(layers: Sequence[LayerDims], cfg: TileConfig,
     efficiency), so the measured single-host ratio falls BELOW 1 while
     this model predicts above — tests/test_perf_model.py pins that
     bracket against BENCH_systolic.json.
+
+    ``blocks`` overrides the balanced split with explicit per-stage layer
+    counts (the geometry tuner's uneven-split candidates): ``len(blocks)
+    == S`` and ``sum(blocks) == len(layers)``, zeros allowed (an empty
+    stage is a pure passthrough delay — it still charges its macro-step
+    slot to the pipeline depth but contributes 0 compute cycles).
     """
     S = cfg.arrays
     if S <= 1:
         return sequential_cycles(layers, cfg, T, tile, beta)
-    base, rem = divmod(len(layers), S)
+    if blocks is not None:
+        sizes = [int(b) for b in blocks]
+        if len(sizes) != S or sum(sizes) != len(layers) or min(sizes) < 0:
+            raise ValueError(f'blocks {sizes!r} is not a {S}-stage split '
+                             f'of {len(layers)} layers')
+    else:
+        base, rem = divmod(len(layers), S)
+        sizes = [base + (1 if s < rem else 0) for s in range(S)]
     per_macro, lo = [], 0
     for s in range(S):
-        size = base + (1 if s < rem else 0)
+        size = sizes[s]
         blk = layers[lo:lo + size]
         lo += size
         steps = [layer_step_cycles(ld, cfg, tile, beta) for ld in blk]

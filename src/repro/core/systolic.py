@@ -58,7 +58,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,6 +109,7 @@ def clear_mesh() -> None:
 
 def seq_scaleout_admissible(n_h: int, mesh: Optional[Mesh], *,
                             n_layers: Optional[int] = None,
+                            n_x: int = 0, T: int = 0, batch: int = 0,
                             row_axis: str = 'row', col_axis: str = 'col',
                             stage_axis: str = 'stage',
                             vmem_budget: Optional[int] = None) -> bool:
@@ -134,6 +135,14 @@ def seq_scaleout_admissible(n_h: int, mesh: Optional[Mesh], *,
     families (``W_h`` and ``W_in`` blocks) plus their peephole/bias rows —
     fits the VMEM budget.  Admission never changes numerics, only whether
     ``auto`` dispatch picks a scale-out backend.
+
+    When shape context (``n_x``/``T``/``batch``) is supplied, the staged
+    check sizes the bottleneck stage from a tuned uneven split
+    (``resolve_staged_blocks``) instead of the balanced ceiling — the
+    tuned ``max(counts)`` is >= the balanced ``ceil(L/S)``, so a tuned
+    split can only make admission stricter, never admit a config the
+    balanced default would reject on a colder cache.  The guard stays
+    authoritative either way.
     """
     if mesh is None:
         return False
@@ -154,6 +163,10 @@ def seq_scaleout_admissible(n_h: int, mesh: Optional[Mesh], *,
         n_h_p = _round_up(n_h, math.lcm(mr, mc))
         bn, bk = n_h_p // mr, n_h_p // mc
         lb = -(-n_layers // stages)
+        tuned = resolve_staged_blocks(n_layers, T, stages, n_h=n_h,
+                                      n_x=n_x, batch=batch, mesh=mesh)
+        if tuned is not None:
+            lb = max(max(tuned), lb)
         per_layer = 2 * GATES * bn * bk * 4 + (3 + GATES) * bn * 4
         return lb * per_layer <= vmem_budget
     try:
@@ -915,19 +928,51 @@ def systolic_lstm_seq_quantized(qp: QuantizedPackedLSTM, mesh: Optional[Mesh],
 # 3x(5x5) Table-2 topology as ONE dispatch path.
 # ---------------------------------------------------------------------------
 
-def stage_layer_blocks(n_layers: int, n_stages: int
+def stage_layer_blocks(n_layers: int, n_stages: int,
+                       blocks: Optional[Sequence[int]] = None
                        ) -> Tuple[Tuple[int, int], ...]:
-    """Contiguous balanced layer placement on the stage axis: stage ``s``
-    owns layers ``[lo, hi)``; block sizes differ by at most one (the
-    ceil-sized blocks come first, so 3 layers on 2 stages place layers
-    {0, 1} on stage 0 and {2} on stage 1), and stages beyond the stack
-    (``n_stages > n_layers``) get empty blocks — they pass activations
-    through unchanged, adding pipeline delay but no arithmetic.  Pure
-    geometry; no numerics of its own."""
-    base, rem = divmod(n_layers, n_stages)
+    """Contiguous layer placement on the stage axis: stage ``s`` owns
+    layers ``[lo, hi)``.
+
+    Default (``blocks=None``) is the balanced split: block sizes differ by
+    at most one, ceil-sized blocks first — 3 layers on 2 stages place
+    layers {0, 1} on stage 0 and {2} on stage 1.  With ``n_stages >
+    n_layers`` the TRAILING stages get empty blocks (the ceil-first order
+    puts every layer before them); this is the passthrough-delay contract:
+    an empty stage hands its input chunk through unchanged and carries no
+    state — it adds one macro-step of pipeline delay per empty stage but
+    no arithmetic, so trajectories are unchanged (pure schedule).
+
+    ``blocks`` overrides the balanced split with explicit per-stage layer
+    COUNTS (the uneven-split geometry the tuner shmoos): it must have
+    exactly ``n_stages`` non-negative entries summing to ``n_layers``.
+    Any valid split is schedule-only — same per-layer dataflow, same
+    chunk handoffs — so uneven splits are bit-equal to the balanced
+    default on a fixed (rows, cols) grid.
+
+    Raises ``ValueError`` on non-positive ``n_layers``/``n_stages`` or an
+    inconsistent override (silently accepting them used to produce
+    nonsense geometry downstream).  Pure geometry; no numerics of its own.
+    """
+    if n_layers < 1 or n_stages < 1:
+        raise ValueError(
+            f'stage_layer_blocks needs n_layers >= 1 and n_stages >= 1, '
+            f'got n_layers={n_layers}, n_stages={n_stages}')
+    if blocks is None:
+        base, rem = divmod(n_layers, n_stages)
+        sizes = [base + (1 if s_i < rem else 0) for s_i in range(n_stages)]
+    else:
+        sizes = [int(s) for s in blocks]
+        if len(sizes) != n_stages:
+            raise ValueError(f'blocks override has {len(sizes)} entries '
+                             f'for {n_stages} stages')
+        if any(s < 0 for s in sizes):
+            raise ValueError(f'blocks override has negative entries: {sizes}')
+        if sum(sizes) != n_layers:
+            raise ValueError(f'blocks override {sizes} places {sum(sizes)} '
+                             f'layers, stack has {n_layers}')
     out, lo = [], 0
-    for s_i in range(n_stages):
-        size = base + (1 if s_i < rem else 0)
+    for size in sizes:
         out.append((lo, lo + size))
         lo += size
     return tuple(out)
@@ -977,19 +1022,21 @@ def _stage_of(blocks, layer: int) -> Tuple[int, int]:
 
 
 def _staged_schedule(n_layers: int, T: int, n_stages: int,
-                     chunk: Optional[int]):
+                     chunk: Optional[int],
+                     blocks: Optional[Sequence[int]] = None):
     """The one source of the staged pipeline geometry, shared by the f32
     and int8 wrappers so their schedules (and hence the cross-engine state
     handoff) cannot desynchronize: chunk default ``ceil(T / (4*stages))``
     (fill/drain stays under ~1/4 of macro-steps; chunk=1 is the paper's
     frame-by-frame handover), ``K`` chunks padding T to ``T_p``, ``M = K +
-    S - 1`` macro-steps, the contiguous layer blocks and the slot count.
-    Returns (Tc, K, T_p, M, blocks, Lb)."""
+    S - 1`` macro-steps, the contiguous layer blocks (balanced, or the
+    explicit per-stage counts of an uneven split — schedule-only either
+    way) and the slot count.  Returns (Tc, K, T_p, M, blocks, Lb)."""
     if chunk is None:
         chunk = max(1, -(-T // (4 * n_stages)))
     Tc = min(int(chunk), T)
     K = -(-T // Tc)
-    blocks = stage_layer_blocks(n_layers, n_stages)
+    blocks = stage_layer_blocks(n_layers, n_stages, blocks)
     Lb = max(1, max(hi - lo for lo, hi in blocks))
     return Tc, K, K * Tc, K + n_stages - 1, blocks, Lb
 
@@ -1048,6 +1095,39 @@ def resolve_staged_in_stage(n_layers: int, T: int, n_stages: int, *,
     return 'batched'
 
 
+def resolve_staged_blocks(n_layers: int, T: int, n_stages: int, *,
+                          n_h: int = 0, n_x: int = 0, batch: int = 0,
+                          mesh: Optional[Mesh] = None,
+                          kind: str = 'stack_f32'
+                          ) -> Optional[Tuple[int, ...]]:
+    """Per-stage layer COUNTS the staged wrappers use when the caller
+    passes ``blocks=None``: the tuned uneven split from the installed
+    schedule cache for this ``(shape, mesh)`` when one exists (the
+    geometry tuner's ``blocks='2,1'``-style field), else None (the
+    balanced ``stage_layer_blocks`` default).  Selection only — any valid
+    split runs the same per-layer dataflow on the same (rows, cols) grid,
+    so splits are bit-equal schedules (tests/test_geometry_tune.py).
+    A cached split that does not fit THIS call (wrong stage count, wrong
+    layer total, negative entries) is ignored, never trusted: the
+    structural guards stay authoritative over the cache."""
+    from ..tune.schedule import current_schedule_cache, mesh_signature
+    cache = current_schedule_cache()
+    if cache is None:
+        return None
+    ent = cache.lookup(kind, n_x=n_x, n_h=n_h, n_layers=n_layers,
+                       T=T, B=batch, mesh=mesh_signature(mesh))
+    if ent is None or not getattr(ent, 'blocks', ''):
+        return None
+    try:
+        counts = tuple(int(p) for p in str(ent.blocks).split(','))
+    except ValueError:
+        return None
+    if (len(counts) != n_stages or any(c < 0 for c in counts)
+            or sum(counts) != n_layers):
+        return None
+    return counts
+
+
 def _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s, mask=None):
     """Staged distributed whole-stack forward (padded in, un-padded out).
 
@@ -1066,7 +1146,7 @@ def _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s, mask=None):
     (L, T, B, n_h) — the full trajectories feed the cross-layer VJP and
     the chunked serving carry.
 
-    ``static[-1]`` selects the in-stage schedule (``IN_STAGE_MODES``):
+    ``static[5]`` selects the in-stage schedule (``IN_STAGE_MODES``):
     ``'sequential'`` runs the stage's layer block slot by slot over the
     chunk (``Lb * Tc`` collective rounds per macro-step); ``'batched'``
     walks the same (slot, step) grid diagonal-major like the §8 stack
@@ -1075,8 +1155,13 @@ def _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s, mask=None):
     1`` rounds — with identical per-element arithmetic and addition order
     (separate own/below psums, ``pre = psum(own) + (psum(below) +
     pre_x)``), so the two orders are bit-equal.
+
+    ``static[6]`` (optional, ``None`` = balanced) carries the per-stage
+    layer counts of an uneven stage split (``stage_layer_blocks``'
+    ``blocks`` override) — schedule-only like the in-stage order.
     """
-    mesh, stage_axis, row_axis, col_axis, chunk, in_stage = static
+    mesh, stage_axis, row_axis, col_axis, chunk, in_stage = static[:6]
+    split = static[6] if len(static) > 6 else None
     assert in_stage in IN_STAGE_MODES, in_stage
     T, B, _, n_h = pre_x.shape
     L = w_h.shape[0]
@@ -1084,7 +1169,7 @@ def _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s, mask=None):
                  mesh.shape[col_axis])
     n_h_p, bn, bk = _scaleout_blocks(n_h, mr, mc)
     pad = n_h_p - n_h
-    Tc, K, T_p, M, blocks, Lb = _staged_schedule(L, T, S, chunk)
+    Tc, K, T_p, M, blocks, Lb = _staged_schedule(L, T, S, chunk, split)
 
     if mask is None:
         mask = jnp.ones((T, B), jnp.bool_)
@@ -1213,7 +1298,7 @@ def _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s, mask=None):
         # reuse the sequential chunk scan verbatim (zero dead-slot work),
         # and cnt-layer stages walk Tc + cnt - 1 diagonals with ONE fused
         # slot-batched dot and ONE psum per diagonal.
-        counts = sorted({len(b) for b in blocks if len(b) > 0})
+        counts = sorted({hi - lo for lo, hi in blocks if hi > lo})
 
         def macro_batched(carry_m, m_idx):
             # Same chunk pipeline as `macro`, but each stage's (slot, step)
@@ -1413,9 +1498,10 @@ def systolic_stack_seq_fused(static, w_in, w_h, peep, b, pre_x, h0s, c0s):
     — the saved trajectories are already stage-gathered, so the backward
     is numerically identical to the single-engine fused stack's), but the
     forward runs stage-pipelined on the ``static = (mesh, stage_axis,
-    row_axis, col_axis, chunk, in_stage)`` grid.  The in-stage schedule
-    (``IN_STAGE_MODES``) changes only the round order, not the
-    trajectories, so gradients are bit-equal across schedules too.
+    row_axis, col_axis, chunk, in_stage[, blocks])`` grid.  The in-stage
+    schedule (``IN_STAGE_MODES``) and the optional uneven stage split
+    change only the round order / layer placement, not the trajectories,
+    so gradients are bit-equal across schedules too.
     """
     hs, cs = _staged_forward(static, w_in, w_h, peep, b, pre_x, h0s, c0s)
     return hs[-1], (hs[:, -1], cs[:, -1])
@@ -1442,6 +1528,7 @@ def systolic_lstm_stack_seq(params, mesh: Optional[Mesh], xs: jax.Array,
                             valid_len: Optional[jax.Array] = None,
                             chunk: Optional[int] = None,
                             in_stage: Optional[str] = None,
+                            blocks: Optional[Sequence[int]] = None,
                             stage_axis: str = 'stage',
                             row_axis: str = 'row', col_axis: str = 'col'
                             ) -> Tuple[jax.Array, Tuple]:
@@ -1479,7 +1566,12 @@ def systolic_lstm_stack_seq(params, mesh: Optional[Mesh], xs: jax.Array,
     — and is bit-equal to ``'sequential'`` (the PR 5 slot loop), which
     remains as the measured baseline; ``None`` (default) takes the
     schedule cache's measured winner for this (shape, mesh), else
-    ``'batched'`` (``resolve_staged_in_stage``).
+    ``'batched'`` (``resolve_staged_in_stage``).  ``blocks`` (per-stage
+    layer counts) overrides ``stage_layer_blocks``' balanced split with a
+    tuned uneven one; ``None`` takes the schedule cache's winner for this
+    (shape, mesh) when one exists (``resolve_staged_blocks``), else the
+    balanced default — any valid split is a bit-equal schedule on a fixed
+    (rows, cols) grid.
     """
     from ..kernels.lstm_seq import lstm_stack_seq, stack_fused_compatible
     assert stack_fused_compatible(params), \
@@ -1498,7 +1590,12 @@ def systolic_lstm_stack_seq(params, mesh: Optional[Mesh], xs: jax.Array,
         in_stage = resolve_staged_in_stage(len(layers), T, S, n_h=n_h,
                                            n_x=layers[0].n_x, batch=B,
                                            mesh=mesh)
-    Tc = _staged_schedule(len(layers), T, S, chunk)[0]
+    if blocks is None:
+        blocks = resolve_staged_blocks(len(layers), T, S, n_h=n_h,
+                                       n_x=layers[0].n_x, batch=B,
+                                       mesh=mesh)
+    split = tuple(int(s) for s in blocks) if blocks is not None else None
+    Tc = _staged_schedule(len(layers), T, S, chunk, split)[0]
 
     from ..kernels.lstm_seq.stack_ops import _stack_arrays
     from .lstm import stack_carry_arrays
@@ -1506,7 +1603,7 @@ def systolic_lstm_stack_seq(params, mesh: Optional[Mesh], xs: jax.Array,
     pre_x = jnp.einsum('ghx,tbx->tbgh', layers[0].w_x, xs)    # hoisted
 
     h0s, c0s = stack_carry_arrays(states, len(layers), B, n_h, xs.dtype)
-    static = (mesh, stage_axis, row_axis, col_axis, Tc, in_stage)
+    static = (mesh, stage_axis, row_axis, col_axis, Tc, in_stage, split)
     if valid_len is not None:
         from .lstm import valid_len_mask
         mask = valid_len_mask(T, valid_len, B)
@@ -1527,6 +1624,7 @@ def systolic_lstm_stack_seq_quantized(qps, mesh: Optional[Mesh],
                                       return_state: bool = False,
                                       chunk: Optional[int] = None,
                                       in_stage: Optional[str] = None,
+                                      blocks: Optional[Sequence[int]] = None,
                                       stage_axis: str = 'stage',
                                       row_axis: str = 'row',
                                       col_axis: str = 'col'):
@@ -1595,7 +1693,11 @@ def systolic_lstm_stack_seq_quantized(qps, mesh: Optional[Mesh],
                                            batch=B, mesh=mesh,
                                            kind='stack_int8')
     assert in_stage in IN_STAGE_MODES, in_stage
-    Tc, K, T_p, M, blocks, Lb = _staged_schedule(L, T, S, chunk)
+    if blocks is None:
+        blocks = resolve_staged_blocks(L, T, S, n_h=p0.n_h, n_x=p0.n_x,
+                                       batch=B, mesh=mesh,
+                                       kind='stack_int8')
+    Tc, K, T_p, M, blocks, Lb = _staged_schedule(L, T, S, chunk, blocks)
 
     # Resident weights: own-h region tiles sharded (row, col); below/x
     # region tiles row-sharded (each row device folds its own prefix).
@@ -1736,7 +1838,7 @@ def systolic_lstm_stack_seq_quantized(qps, mesh: Optional[Mesh],
         # specialization as the f32 body: single-layer stages replay the
         # sequential chunk scan verbatim, cnt-layer stages walk the
         # Tc + cnt - 1 diagonals with cnt-sliced operands.
-        counts = sorted({len(b) for b in blocks if len(b) > 0})
+        counts = sorted({hi - lo for lo, hi in blocks if hi > lo})
 
         def macro_batched(carry_m, m_idx):
             # Diagonal-major in-stage order, mirroring the f32 body: slot i

@@ -353,3 +353,97 @@ def top_contributors(text: str, k: int = 12):
 
     walk(m.entry, 1)
     return coll.most_common(k), mem.most_common(k), flops.most_common(k)
+
+
+# ---------------------------------------------------------------------------
+# Backend ranking oracle (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+# ``core.perf_model`` is a CYCLE model of the paper's silicon: it prices the
+# staged/systolic schedules precisely but knows nothing about what XLA
+# actually emits for the non-staged backends (scan overheads, fusion
+# boundaries, interpret-mode expansion).  This oracle is the complement: it
+# LOWERS each backend's real ``lstm_stack_apply`` launch, walks the
+# optimized HLO with the trip-count-weighted cost model above, and converts
+# the three roofline terms to a time estimate — so ``xla_scan`` /
+# ``pallas_seq`` / ``pallas_seq_fused`` (and, given a mesh,
+# ``pallas_seq_systolic``) rank against each other without a device trial.
+# Lowering is deterministic for a fixed host + jax version, which keeps
+# predicted-only tuner runs byte-for-byte replayable in CI.
+
+#: Stack backends the oracle ranks by default: every backend whose launch
+#: can lower WITHOUT a multi-device mesh.
+NON_STAGED_STACK_BACKENDS = ('xla_scan', 'pallas_seq', 'pallas_seq_fused')
+
+
+def lower_stack_hlo(backend: str, n_x: int, n_h: int, n_layers: int,
+                    T: int, B: int, mesh=None) -> str:
+    """Optimized HLO text of one ``lstm_stack_apply`` launch on ``backend``.
+
+    Deterministic parameters (fixed PRNG key — only SHAPES matter to the
+    cost walk), lowered/compiled but never executed.  ``mesh`` is installed
+    for the lowering when given (the systolic backends read the process
+    mesh); raises whatever the backend's admission/lowering raises — the
+    ranking wrapper below treats that as "not rankable here".
+    """
+    import jax
+    import jax.numpy as jnp
+    from .core.lstm import init_lstm_stack, lstm_stack_apply
+    from .core.systolic import clear_mesh, current_mesh, install_mesh
+
+    params = init_lstm_stack(jax.random.PRNGKey(0), n_x, n_h, n_layers)
+    xs = jnp.zeros((T, B, n_x), jnp.float32)
+
+    def fn(p, x):
+        return lstm_stack_apply(p, x, backend=backend)[0]
+
+    prev = current_mesh()
+    try:
+        if mesh is not None:
+            install_mesh(mesh)
+        return jax.jit(fn).lower(params, xs).compile().as_text()
+    finally:
+        if mesh is not None:
+            install_mesh(prev) if prev is not None else clear_mesh()
+
+
+def estimate_backend_us(backend: str, n_x: int, n_h: int, n_layers: int,
+                        T: int, B: int, mesh=None) -> float:
+    """HLO-derived time estimate (us) for one backend's stack launch.
+
+    The no-overlap roofline sum ``compute + memory + collective`` over the
+    trip-count-weighted entry cost, against the ``launch.mesh`` peak
+    constants.  An ESTIMATE for ranking, not a bound: the true time sits
+    between ``roofline``'s ``step_time_lower_bound_s`` (perfect overlap,
+    the max term) and this sum — the S3 consistency suite pins exactly
+    that bracket.
+    """
+    from .launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+    cost = HloCostModel(
+        lower_stack_hlo(backend, n_x, n_h, n_layers, T, B,
+                        mesh=mesh)).entry_cost()
+    coll = float(sum(cost.coll.values()))
+    return (cost.flops / PEAK_FLOPS_BF16 + cost.bytes / HBM_BW
+            + coll / ICI_BW) * 1e6
+
+
+def rank_stack_backends(n_x: int, n_h: int, n_layers: int, T: int, B: int,
+                        backends: Optional[Tuple[str, ...]] = None,
+                        mesh=None) -> List[Tuple[str, float]]:
+    """Backends with their HLO-cost estimates, best first.
+
+    A backend that fails to lower here (no mesh for a systolic backend, an
+    admission error, a missing platform) is SKIPPED, not scored — the
+    oracle ranks what can actually launch.  Ties break on the backend name
+    so the ranking is a pure function of what lowered (the determinism the
+    CI smoke diffs).
+    """
+    if backends is None:
+        backends = NON_STAGED_STACK_BACKENDS
+    scored = []
+    for b in backends:
+        try:
+            scored.append((b, estimate_backend_us(b, n_x, n_h, n_layers,
+                                                  T, B, mesh=mesh)))
+        except Exception:
+            continue
+    return sorted(scored, key=lambda su: (su[1], su[0]))

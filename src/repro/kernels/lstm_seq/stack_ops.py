@@ -158,6 +158,24 @@ def _stack_arrays(params: LSTMStackParams):
     return w_in, w_h, peep, b
 
 
+def _tuned_lb(n_x: int, n_h: int, n_layers: int, T: int,
+              B: int) -> Optional[int]:
+    """Tuned §8 layer-block streaming factor from the installed schedule
+    cache (kind ``'stack_lb'``), or None on a miss.  Grid-only by contract
+    (every legal ``lb`` is bit-equal), but the divisibility the grid needs
+    is re-validated here — a stale entry can never break a launch."""
+    from ...tune.schedule import current_schedule_cache
+    cache = current_schedule_cache()
+    if cache is None:
+        return None
+    ent = cache.lookup('stack_lb', n_x=n_x, n_h=n_h, n_layers=n_layers,
+                       T=T, B=B)
+    if ent is None or not ent.lb:
+        return None
+    lb = int(ent.lb)
+    return lb if 1 <= lb <= n_layers and n_layers % lb == 0 else None
+
+
 def lstm_stack_seq(params: LSTMStackParams, xs: jax.Array,
                    states: Optional[Sequence] = None, *,
                    valid_len: Optional[jax.Array] = None,
@@ -179,8 +197,10 @@ def lstm_stack_seq(params: LSTMStackParams, xs: jax.Array,
     on each layer's carried state; inference-only, like the layerwise
     masked paths).  ``bb``/``lb`` select the batch-block and layer-block
     grid dimensions (defaults: one block each — all serving slots share one
-    weight DMA, the whole stack stays resident).  Returns (hs_top
-    (T, B, N_h), per-layer ((h_T, c_T), ...)).
+    weight DMA, the whole stack stays resident; with a schedule cache
+    installed, a tuned ``'stack_lb'`` winner fills ``lb=None`` first —
+    grid-only by the §8 contract, bit-equal across every legal ``lb``).
+    Returns (hs_top (T, B, N_h), per-layer ((h_T, c_T), ...)).
     """
     assert stack_fused_compatible(params), \
         'fused stack kernel needs homogeneous hidden widths'
@@ -202,6 +222,8 @@ def lstm_stack_seq(params: LSTMStackParams, xs: jax.Array,
     pre_x = jnp.einsum('ghx,tbx->tbgh', layers[0].w_x, xs)    # hoisted
 
     h0s, c0s = stack_carry_arrays(states, len(layers), B, n_h, xs.dtype)
+    if lb is None:
+        lb = _tuned_lb(layers[0].n_x, n_h, len(layers), T, B)
     assert lb is None or len(layers) % lb == 0, (len(layers), lb)
     cfg = (bn, bk, bb, lb, bool(interpret))
 

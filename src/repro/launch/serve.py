@@ -299,9 +299,12 @@ def main(argv=None):
     ap.add_argument('--tune', action='store_true',
                     help='run the offline autotuner for this serving '
                          'config before serving (LSTM family only): '
-                         'measured int8 backend trial + predicted chunk '
-                         'ceiling, recorded to --schedule-cache when '
-                         'given; serving itself never pays tuning cost')
+                         'measured int8 backend trial + the measured '
+                         'end-to-end serving-loop chunk ceiling (the real '
+                         'engine step, outputs bit-equal across depths by '
+                         'the §7 contract) with the kernel-level predicted '
+                         'ceiling as fallback, recorded to --schedule-cache '
+                         'when given; serving itself never pays tuning cost')
     args = ap.parse_args(argv)
 
     if args.systolic_topology:

@@ -76,22 +76,30 @@ def tuned_chunk_ceiling(cfg, chunk: int, max_streams: int) -> int:
     The ``ChunkSizePolicy`` adapts chunk length at runtime but needs a
     CEILING to grow back toward; historically that was just the engine's
     packing width.  With a schedule cache installed (``repro.tune``), a
-    tuned staged chunk depth (``kind='stack_f32'`` keyed on the serving
-    stack's shape — exact ``(T, B)`` first, wildcards after) clamps it:
-    chunks deeper than the measured-best ``Tc`` only add latency without
-    throughput.  Scheduling-only by the §11 contract — outputs are
-    bit-invariant to where chunk boundaries fall.  Returns ``chunk``
-    unchanged on a cache miss (or ``tc=0`` entry).
+    tuned chunk depth clamps it: chunks deeper than the measured-best
+    ``Tc`` only add latency without throughput.  Two entry kinds, most
+    trustworthy first: ``'serving_chunk'`` — the END-TO-END serving-loop
+    measurement ``tune_serving_config`` records (the engine step with
+    packing/masking/admission, exactly what this ceiling governs) — then
+    the kernel-level ``'stack_f32'`` prediction as the fallback (exact
+    ``(T, B)`` keys first, wildcards after).  Scheduling-only by the §11
+    contract — outputs are bit-invariant to where chunk boundaries fall.
+    Returns ``chunk`` unchanged on a cache miss (or ``tc=0`` entry).
     """
     from ..core.systolic import current_mesh
     from ..tune.schedule import current_schedule_cache, mesh_signature
     cache = current_schedule_cache()
     if cache is None:
         return chunk
-    ent = cache.lookup('stack_f32', n_x=cfg.lstm_inputs,
+    ent = cache.lookup('serving_chunk', n_x=cfg.lstm_inputs,
                        n_h=cfg.lstm_hidden, n_layers=cfg.n_layers,
                        T=chunk, B=max_streams,
                        mesh=mesh_signature(current_mesh()))
+    if ent is None or not ent.tc:
+        ent = cache.lookup('stack_f32', n_x=cfg.lstm_inputs,
+                           n_h=cfg.lstm_hidden, n_layers=cfg.n_layers,
+                           T=chunk, B=max_streams,
+                           mesh=mesh_signature(current_mesh()))
     if ent is not None and ent.tc:
         return max(1, min(chunk, int(ent.tc)))
     return chunk

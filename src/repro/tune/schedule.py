@@ -41,9 +41,25 @@ from contextlib import contextmanager
 from typing import Dict, Iterable, List, Optional, Tuple
 
 #: Decision families the cache can answer.  ``stack_f32`` / ``stack_int8``
-#: carry the staged scale-out schedule (``tc``, ``in_stage``);
-#: ``stack_backend`` / ``q_stack_backend`` carry a backend name.
-KINDS = ('stack_f32', 'stack_int8', 'stack_backend', 'q_stack_backend')
+#: carry the staged scale-out schedule (``tc``, ``in_stage``, and — since
+#: the geometry tuner — an optional uneven per-stage ``blocks`` split);
+#: ``stack_backend`` / ``q_stack_backend`` carry a backend name;
+#: ``geometry`` carries a full mesh geometry winner (``stages`` x ``rows``
+#: x ``cols`` + ``blocks``) keyed by the DEVICE BUDGET signature
+#: ``'devices:N'`` rather than a concrete mesh (the decision is "which
+#: mesh to build", so it cannot be keyed by the mesh it produces);
+#: ``serving_chunk`` carries the measured end-to-end serving-loop chunk
+#: ceiling (``tc``); ``stack_lb`` carries the §8 single-engine
+#: layer-block streaming factor (``lb``).
+KINDS = ('stack_f32', 'stack_int8', 'stack_backend', 'q_stack_backend',
+         'geometry', 'serving_chunk', 'stack_lb')
+
+
+def devices_signature(n_devices: int) -> str:
+    """Cache-key signature for a DEVICE-BUDGET-keyed decision (kind
+    ``'geometry'``): the tuner answers "best mesh for N devices", so the
+    key carries the budget, not any one mesh built from it."""
+    return f'devices:{int(n_devices)}'
 
 #: Wildcard mesh signature: matches any placement (including none).
 ANY_MESH = 'any'
@@ -76,8 +92,10 @@ class ScheduleEntry:
 
     Key fields: ``kind`` + the shape/placement tuple.  Decision fields —
     only the ones meaningful for the kind are non-default: ``tc`` /
-    ``in_stage`` for the staged schedule kinds, ``backend`` for the
-    backend-choice kinds.  ``predicted_us`` / ``measured_us`` record the
+    ``in_stage`` / ``blocks`` for the staged schedule kinds, ``backend``
+    for the backend-choice kinds, ``stages``/``rows``/``cols``/``blocks``
+    for ``geometry``, ``lb`` for ``stack_lb``, ``tc`` for
+    ``serving_chunk``.  ``predicted_us`` / ``measured_us`` record the
     ranking evidence; ``source`` is ``'measured'`` when a timed trial
     decided, ``'predicted'`` when only the model ranking did.
     """
@@ -94,6 +112,10 @@ class ScheduleEntry:
     bn: int = 0
     bk: int = 0
     lb: int = 0
+    stages: int = 0       # geometry winner: live stage count (0 = n/a)
+    rows: int = 0         # geometry winner: engine-grid rows (0 = n/a)
+    cols: int = 0         # geometry winner: engine-grid cols (0 = n/a)
+    blocks: str = ''      # per-stage layer counts, e.g. '2,1' ('' = balanced)
     predicted_us: float = 0.0
     measured_us: float = 0.0
     source: str = 'predicted'

@@ -172,3 +172,203 @@ def staged_shmoo_records(n_x: int, n_h: int, n_layers: int, T: int, B: int,
                     'lb': cand.lb, 'tc': cand.tc, 'in_stage': cand.in_stage},
             metrics={'predicted_us': us}))
     return recs
+
+
+# ---------------------------------------------------------------------------
+# Geometry candidate space (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+# The staged space above fixes the mesh and shmoos the schedule; the geometry
+# space inverts that: given only a DEVICE BUDGET, it shmoos the mesh itself —
+# the stage count, the (rows, cols) engine-grid factorization, the per-stage
+# layer split (uneven compositions beyond stage_layer_blocks' balanced
+# default) — jointly with the (tc, in_stage) schedule, because the best
+# schedule depends on the geometry it runs on.
+
+@dataclasses.dataclass(frozen=True, order=True)
+class GeometryCandidate:
+    """One point of the geometry space: a full mesh + split + schedule.
+
+    ``blocks`` is the per-stage layer-count composition (every entry >= 1 —
+    an empty stage only deepens the pipeline without shedding any compute,
+    so the enumerator never proposes one); ``lb`` is the bottleneck stage's
+    count ``max(blocks)``; ``n_h_p``/``bn``/``bk`` are the padded hidden
+    width and per-device block the (rows, cols) split implies.
+    """
+    stages: int
+    rows: int
+    cols: int
+    blocks: Tuple[int, ...]
+    tc: int
+    in_stage: str
+    bn: int
+    bk: int
+    n_h_p: int
+
+    @property
+    def lb(self) -> int:
+        return max(self.blocks)
+
+    @property
+    def devices(self) -> int:
+        return self.stages * self.rows * self.cols
+
+    @property
+    def arith_signature(self) -> Tuple[int, int]:
+        """The bit-equality class of this geometry (DESIGN.md §13).
+
+        Staged outputs are bit-exact across stage counts, stage splits,
+        ROW splits, tc, and in-stage order — those only reorder schedule,
+        not arithmetic.  The COLUMN split changes the contraction: the
+        hidden axis is padded to ``n_h_p = roundup(n_h, lcm(rows, cols))``
+        and summed in ``cols`` partials of width ``bk = n_h_p / cols``, so
+        two geometries reduce in the same association order (and are
+        bit-equal) iff they share ``(n_h_p, bk)``.  Candidates in
+        different classes are only allclose (float re-association).
+        """
+        return (self.n_h_p, self.bk)
+
+    def blocks_str(self) -> str:
+        return ','.join(str(b) for b in self.blocks)
+
+
+def _stage_splits(n_layers: int, n_stages: int) -> List[Tuple[int, ...]]:
+    """All positive compositions of ``n_layers`` into ``n_stages`` parts,
+    lexicographic — the uneven-split space around ``stage_layer_blocks``'
+    balanced default (which is always a member)."""
+    if n_stages == 1:
+        return [(n_layers,)]
+    out = []
+    for first in range(1, n_layers - n_stages + 2):
+        for rest in _stage_splits(n_layers - first, n_stages - 1):
+            out.append((first,) + rest)
+    return out
+
+
+def enumerate_geometry_candidates(n_x: int, n_h: int, n_layers: int, T: int,
+                                  B: int, *, devices: int,
+                                  dtype_bytes: int = 4,
+                                  vmem_budget: Optional[int] = None
+                                  ) -> List[GeometryCandidate]:
+    """The admissible geometry space for a device budget.
+
+    Enumerates every ``stages x (rows x cols)`` mesh with ``stages in
+    [2, n_layers]`` and ``stages * rows * cols <= devices``, every positive
+    per-stage split, and the full ``(tc, in_stage)`` schedule grid; prunes
+    by the same VMEM rule dispatch enforces, sized by the BOTTLENECK
+    stage's ``max(blocks)`` layers (an uneven split concentrates residency
+    on its largest stage).  Pure function of its arguments — no clocks, no
+    RNG — so predicted-only geometry runs replay byte-for-byte.
+    """
+    from ..core.lstm import GATES, _VMEM_BUDGET_BYTES
+    budget = _VMEM_BUDGET_BYTES if vmem_budget is None else vmem_budget
+    out = []
+    for stages in range(2, min(n_layers, devices) + 1):
+        grid_budget = devices // stages
+        if grid_budget < 1:
+            break
+        splits = _stage_splits(n_layers, stages)
+        for rows in range(1, grid_budget + 1):
+            for cols in range(1, grid_budget // rows + 1):
+                blk = math.lcm(rows, cols)
+                n_h_p = -(-n_h // blk) * blk
+                bn, bk = n_h_p // rows, n_h_p // cols
+                for split in splits:
+                    lb = max(split)
+                    resident = (lb * 2 * GATES * bn * bk * dtype_bytes
+                                + lb * (3 + GATES) * bn * dtype_bytes)
+                    if resident > budget:
+                        continue
+                    for tc in sorted({min(t, T) for t in TC_GRID
+                                      if t <= T} or {T}):
+                        for mode in IN_STAGE_MODES:
+                            out.append(GeometryCandidate(
+                                stages=stages, rows=rows, cols=cols,
+                                blocks=split, tc=tc, in_stage=mode,
+                                bn=bn, bk=bk, n_h_p=n_h_p))
+    return sorted(out)
+
+
+def predict_geometry_us(cand: GeometryCandidate, n_x: int, n_h: int,
+                        n_layers: int, T: int,
+                        v: float = pm.V_MAX) -> float:
+    """Model-predicted wall time (us) of one geometry candidate:
+    ``staged_wavefront_cycles`` at the candidate's stage count with its
+    (possibly uneven) per-stage split."""
+    layers = [pm.LayerDims(n_x, n_h)] + [pm.LayerDims(n_h, n_h)
+                                         for _ in range(n_layers - 1)]
+    cfg = pm.TileConfig(cand.stages, cand.rows, cand.cols)
+    cyc = pm.staged_wavefront_cycles(
+        layers, cfg, T, chunk=cand.tc,
+        in_stage_batched=(cand.in_stage == 'batched'),
+        blocks=cand.blocks)
+    return cyc / pm.freq_hz(v) * 1e6
+
+
+def rank_geometry_candidates(cands: Sequence[GeometryCandidate], n_x: int,
+                             n_h: int, n_layers: int, T: int
+                             ) -> List[Tuple[GeometryCandidate, float]]:
+    """Geometry candidates with predicted us, best first; ties break on the
+    candidate's total order (the replay-determinism contract)."""
+    scored = [(c, predict_geometry_us(c, n_x, n_h, n_layers, T))
+              for c in cands]
+    return sorted(scored, key=lambda cu: (cu[1], cu[0]))
+
+
+def geometry_shmoo_records(n_x: int, n_h: int, n_layers: int, T: int, B: int,
+                           *, devices: int, suite: str = 'geometry'
+                           ) -> List[ShmooRecord]:
+    """The predicted geometry shmoo for one device budget, in the shared
+    record format (one row per candidate, ranked best first)."""
+    cands = enumerate_geometry_candidates(n_x, n_h, n_layers, T, B,
+                                          devices=devices)
+    recs = []
+    for cand, us in rank_geometry_candidates(cands, n_x, n_h, n_layers, T):
+        recs.append(ShmooRecord(
+            suite=suite,
+            params={'n_x': n_x, 'n_h': n_h, 'n_layers': n_layers, 'T': T,
+                    'B': B, 'devices': devices, 'stages': cand.stages,
+                    'rows': cand.rows, 'cols': cand.cols,
+                    'blocks': cand.blocks_str().replace(',', '+'),
+                    'bn': cand.bn, 'bk': cand.bk, 'lb': cand.lb,
+                    'tc': cand.tc, 'in_stage': cand.in_stage},
+            metrics={'predicted_us': us}))
+    return recs
+
+
+# ---------------------------------------------------------------------------
+# Single-engine lb streaming-factor space (§8)
+# ---------------------------------------------------------------------------
+
+def enumerate_lb_candidates(n_x: int, n_h: int, n_layers: int, batch: int,
+                            vmem_budget: Optional[int] = None) -> List[int]:
+    """Admissible §8 single-engine layer-block streaming factors.
+
+    ``lstm_stack_seq`` streams the stack through VMEM ``lb`` layers at a
+    time, so ``lb`` must divide ``n_layers`` and the ``lb``-layer slice
+    must fit the budget (``stack_vmem_bytes_estimate``).  Ascending order;
+    ``1`` (stream layer by layer) is always structurally legal but still
+    budget-checked — an over-budget single layer has no admissible lb at
+    all and the caller must not pick this backend.
+    """
+    from ..core.lstm import _VMEM_BUDGET_BYTES
+    from ..kernels.lstm_seq import stack_vmem_bytes_estimate
+    budget = _VMEM_BUDGET_BYTES if vmem_budget is None else vmem_budget
+    out = []
+    for lb in range(1, n_layers + 1):
+        if n_layers % lb:
+            continue
+        if stack_vmem_bytes_estimate(n_x, n_h, lb, batch) <= budget:
+            out.append(lb)
+    return out
+
+
+def rank_lb_candidates(cands: Sequence[int], n_layers: int
+                       ) -> List[Tuple[int, float]]:
+    """lb candidates scored by WEIGHT-STREAMING PASSES (``n_layers / lb``
+    — each pass re-streams one layer group through VMEM), best first; ties
+    (impossible among divisors, but kept for the contract) break on the
+    larger lb.  The predicted preference is therefore the LARGEST
+    admissible lb — fewest re-streams — which the measured trial in
+    ``autotune.tune_stack_lb`` confirms or overturns per host."""
+    scored = [(lb, n_layers / lb) for lb in cands]
+    return sorted(scored, key=lambda cu: (cu[1], -cu[0]))

@@ -1,0 +1,129 @@
+"""Cross-checking the two ranking oracles (S3, DESIGN.md §13).
+
+The dispatcher has two ways to rank a stack launch without a device
+trial: the paper-calibrated CYCLE model (`core/perf_model.py`, silicon
+semantics — Chipmunk arrays, weight reloads) and the HLO-derived COST
+oracle (`repro/hlo_cost.py`, what XLA actually emitted on this host).
+These answer different questions, so this suite deliberately does NOT
+assert that they agree on cross-backend ordering: on the emulation host
+the fused pallas path pays interpreter overheads the silicon model does
+not charge, and PR8's dispatch work already documented the inversion
+(measured host ordering != silicon-model ordering).  What CAN be pinned
+honestly, and is pinned here:
+
+  * both oracles are pure functions of the shape (byte-identical
+    replays — the determinism the CI autotune smoke diffs);
+  * within ONE backend, both agree on shape monotonicity (more layers /
+    longer sequences never get cheaper);
+  * the hlo_cost estimate (no-overlap SUM of roofline terms) brackets
+    `roofline.analyze`'s `step_time_lower_bound_s` (perfect-overlap MAX
+    term) from above, on the same compiled executable — wiring the two
+    HLO walks together over a real lowering;
+  * a measured wall-clock launch is never faster than the roofline
+    lower bound scaled to claim plausibility (sanity only: the host is
+    not the modeled chip, so only the *bound direction* is asserted).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import hlo_cost, roofline
+from repro.core import perf_model as pm
+from repro.core.lstm import init_lstm_stack, lstm_stack_apply
+
+SMALL = (24, 48, 2, 16, 2)    # n_x, n_h, n_layers, T, B
+
+
+def _cycle_cost(n_x, n_h, n_layers, T):
+    """Cycle-model cost of the same stack, single engine (arrays=1)."""
+    layers = [pm.LayerDims(n_x, n_h)] + \
+        [pm.LayerDims(n_h, n_h)] * (n_layers - 1)
+    return pm.sequential_cycles(layers, pm.TileConfig(1, 1, 1), T)
+
+
+def test_rankings_deterministic():
+    a = hlo_cost.rank_stack_backends(*SMALL)
+    b = hlo_cost.rank_stack_backends(*SMALL)
+    assert a and a == b
+    names = [n for n, _ in a]
+    assert names == sorted(names, key=dict(a).get)     # best first
+    for _, us in a:
+        assert us > 0 and np.isfinite(us)
+
+
+@pytest.mark.parametrize('backend', hlo_cost.NON_STAGED_STACK_BACKENDS)
+def test_shape_monotonicity_agreement(backend):
+    """Per fixed backend, both oracles agree growth never gets cheaper."""
+    n_x, n_h, n_layers, T, B = SMALL
+    base = hlo_cost.estimate_backend_us(backend, n_x, n_h, n_layers, T, B)
+    deeper = hlo_cost.estimate_backend_us(backend, n_x, n_h,
+                                          n_layers + 2, T, B)
+    longer = hlo_cost.estimate_backend_us(backend, n_x, n_h,
+                                          n_layers, 2 * T, B)
+    assert deeper >= base and longer >= base
+    assert _cycle_cost(n_x, n_h, n_layers + 2, T) >= \
+        _cycle_cost(n_x, n_h, n_layers, T)
+    assert _cycle_cost(n_x, n_h, n_layers, 2 * T) >= \
+        _cycle_cost(n_x, n_h, n_layers, T)
+
+
+def test_estimate_brackets_roofline_lower_bound():
+    n_x, n_h, n_layers, T, B = SMALL
+    for backend in hlo_cost.NON_STAGED_STACK_BACKENDS:
+        params = init_lstm_stack(jax.random.PRNGKey(0), n_x, n_h, n_layers)
+        xs = jnp.zeros((T, B, n_x), jnp.float32)
+        compiled = jax.jit(
+            lambda p, x: lstm_stack_apply(p, x, backend=backend)[0]
+        ).lower(params, xs).compile()
+        terms = roofline.analyze(compiled)
+        assert terms.bottleneck in ('compute', 'memory', 'collective')
+        lower_us = terms.step_time_lower_bound_s * 1e6
+        est_us = hlo_cost.estimate_backend_us(backend, n_x, n_h,
+                                              n_layers, T, B)
+        # MAX of the three terms can never exceed their SUM; both walks
+        # must charge the same HLO, so the bracket is exact by math —
+        # a divergence means the two modules walked different graphs.
+        assert lower_us <= est_us * (1 + 1e-9), backend
+        # and the sum is at most 3x the max (three nonnegative terms)
+        assert est_us <= 3 * lower_us * (1 + 1e-9) or lower_us == 0
+
+
+def test_measured_respects_lower_bound():
+    """One real launch is no faster than the perfect-overlap bound."""
+    n_x, n_h, n_layers, T, B = SMALL
+    params = init_lstm_stack(jax.random.PRNGKey(0), n_x, n_h, n_layers)
+    xs = jnp.zeros((T, B, n_x), jnp.float32)
+    fn = jax.jit(lambda p, x: lstm_stack_apply(p, x,
+                                               backend='xla_scan')[0])
+    compiled = fn.lower(params, xs).compile()
+    lower_us = roofline.analyze(compiled).step_time_lower_bound_s * 1e6
+    fn(params, xs).block_until_ready()          # warm
+    import time
+    t0 = time.perf_counter()
+    fn(params, xs).block_until_ready()
+    measured_us = (time.perf_counter() - t0) * 1e6
+    # the bound models the target accelerator; a host CPU is far slower,
+    # so only the direction is meaningful — never a tight comparison
+    assert measured_us > lower_us
+
+
+def test_failed_lowerings_are_skipped_not_fatal():
+    ranked = hlo_cost.rank_stack_backends(
+        *SMALL, backends=('xla_scan', 'definitely_not_a_backend'))
+    assert [n for n, _ in ranked] == ['xla_scan']
+
+
+def test_cross_backend_ordering_is_not_pinned():
+    """Document WHY: the host inverts the silicon ordering (PR8).
+
+    The cycle model at a single engine ties the sequential and fused
+    schedules (same MACs, same reloads), while hlo_cost sees genuinely
+    different emitted graphs per backend.  Asserting agreement would pin
+    host emulation artifacts as if they were silicon truth — so this
+    test only checks both oracles yield a total order at all.
+    """
+    n_x, n_h, n_layers, T, _ = SMALL
+    ranked = hlo_cost.rank_stack_backends(*SMALL)
+    assert len(ranked) == len(hlo_cost.NON_STAGED_STACK_BACKENDS)
+    assert _cycle_cost(n_x, n_h, n_layers, T) > 0

@@ -1,0 +1,282 @@
+"""Geometry-aware autotuning (DESIGN.md §13).
+
+Pins the geometry tuner's contracts: the candidate space is budget- and
+VMEM-pruned and replays deterministically; `stage_layer_blocks` validates
+its inputs and honours the explicit `blocks=` override; uneven stage
+splits are BIT-EQUAL to the balanced default on a fixed (rows, cols) grid
+— in BOTH in-stage orders, which also pins the macro-step dispatch fix
+(per-stage layer COUNTS, not tuple arity, pick the batched branch);
+`resolve_staged_blocks` consults the cache with the admission guards
+staying authoritative; and the CLI fails fast with an actionable message
+when the requested mesh exceeds the device budget (S2).
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from _subproc import REPO, SRC, run_with_devices
+
+
+# ---------------------------------------------------------------------------
+# stage_layer_blocks: validation + override (S1)
+# ---------------------------------------------------------------------------
+
+def test_stage_layer_blocks_validates_and_overrides():
+    from repro.core.systolic import stage_layer_blocks
+    # balanced default: ceil-sized blocks first
+    assert stage_layer_blocks(3, 2) == ((0, 2), (2, 3))
+    # n_stages > n_layers: TRAILING empty blocks (passthrough delay)
+    assert stage_layer_blocks(3, 5) == (
+        (0, 1), (1, 2), (2, 3), (3, 3), (3, 3))
+    # explicit override
+    assert stage_layer_blocks(3, 2, blocks=(1, 2)) == ((0, 1), (1, 3))
+    assert stage_layer_blocks(4, 3, blocks=(1, 2, 1)) == (
+        (0, 1), (1, 3), (3, 4))
+    with pytest.raises(ValueError):
+        stage_layer_blocks(0, 2)
+    with pytest.raises(ValueError):
+        stage_layer_blocks(3, 0)
+    with pytest.raises(ValueError):
+        stage_layer_blocks(3, 2, blocks=(1, 1))       # sum != n_layers
+    with pytest.raises(ValueError):
+        stage_layer_blocks(3, 2, blocks=(1, 1, 1))    # len != n_stages
+    with pytest.raises(ValueError):
+        stage_layer_blocks(3, 2, blocks=(4, -1))      # negative entry
+
+
+def test_perf_model_blocks_override():
+    from repro.core import perf_model as pm
+    layers = [pm.LayerDims(48, 96)] + [pm.LayerDims(96, 96)] * 3
+    cfg = pm.TileConfig(2, 2, 2)
+    bal = pm.staged_wavefront_cycles(layers, cfg, 32, chunk=8)
+    # balanced (2, 2) passed explicitly is the same schedule
+    assert pm.staged_wavefront_cycles(layers, cfg, 32, chunk=8,
+                                      blocks=(2, 2)) == bal
+    # (1, 3) grows the bottleneck stage: strictly slower in the model
+    uneven = pm.staged_wavefront_cycles(layers, cfg, 32, chunk=8,
+                                        blocks=(1, 3))
+    assert uneven > bal
+    with pytest.raises(ValueError):
+        pm.staged_wavefront_cycles(layers, cfg, 32, chunk=8, blocks=(3, 2))
+
+
+# ---------------------------------------------------------------------------
+# Candidate space: pruning + determinism
+# ---------------------------------------------------------------------------
+
+def test_geometry_enumeration_prunes_and_replays():
+    from repro.tune.shmoo import (_stage_splits,
+                                  enumerate_geometry_candidates,
+                                  rank_geometry_candidates)
+    assert _stage_splits(3, 2) == [(1, 2), (2, 1)]
+    assert _stage_splits(3, 3) == [(1, 1, 1)]
+    assert _stage_splits(4, 2) == [(1, 3), (2, 2), (3, 1)]
+    cands = enumerate_geometry_candidates(123, 421, 3, 128, 8, devices=50)
+    assert cands
+    for c in cands:
+        assert 2 <= c.stages <= 3                      # [2, n_layers]
+        assert c.stages * c.rows * c.cols <= 50        # device budget
+        assert sum(c.blocks) == 3 and min(c.blocks) >= 1
+        assert c.lb == max(c.blocks)
+    # the flagship balanced 2x(5x5) default is a member
+    assert any(c.stages == 2 and c.rows == 5 and c.cols == 5
+               and c.blocks == (2, 1) for c in cands)
+    # pure functions: identical space + ranking on a second call
+    again = enumerate_geometry_candidates(123, 421, 3, 128, 8, devices=50)
+    assert again == cands
+    assert (rank_geometry_candidates(cands, 123, 421, 3, 128)
+            == rank_geometry_candidates(again, 123, 421, 3, 128))
+    # a 1-device budget admits no multi-stage geometry at all
+    assert enumerate_geometry_candidates(123, 421, 3, 128, 8,
+                                         devices=1) == []
+
+
+def test_arith_signature_partitions_column_splits():
+    from repro.tune.shmoo import enumerate_geometry_candidates
+    cands = enumerate_geometry_candidates(123, 421, 3, 128, 8, devices=50)
+    by_cols = {}
+    for c in cands:
+        by_cols.setdefault((c.cols, c.rows), set()).add(c.arith_signature)
+    # one signature per (cols, rows) pad class; rows-only changes with the
+    # same lcm keep the signature (e.g. 5x5 and 1x5 both pad 421 -> 425,
+    # bk=85 — the bit-equal class the measured trial stays inside)
+    sig_5x5 = next(iter(by_cols[(5, 5)]))
+    sig_1x5 = next(iter(by_cols[(5, 1)]))
+    assert sig_5x5 == sig_1x5 == (425, 85)
+    assert next(iter(by_cols[(5, 2)])) == (430, 86)   # different class
+
+
+def test_lb_candidates_and_ranking():
+    from repro.tune.shmoo import enumerate_lb_candidates, rank_lb_candidates
+    cands = enumerate_lb_candidates(48, 96, 4, 4)
+    assert cands == [1, 2, 4]                 # divisors, all VMEM-admissible
+    ranked = rank_lb_candidates(cands, 4)
+    assert ranked[0][0] == 4                  # fewest re-stream passes
+    # the flagship 421-hidden stack: only lb=1 fits the budget
+    assert enumerate_lb_candidates(123, 421, 3, 8) == [1]
+
+
+# ---------------------------------------------------------------------------
+# Numerics: uneven splits bit-equal (incl. the batched-order counts fix)
+# ---------------------------------------------------------------------------
+
+_UNEVEN_SNIPPET = r"""
+import jax, numpy as np
+from repro.core import lstm, systolic
+from repro.tune.schedule import ScheduleCache, ScheduleEntry, \
+    using_schedule_cache
+
+stack = lstm.init_lstm_stack(jax.random.PRNGKey(0), 24, 48, 3)
+xs = jax.random.normal(jax.random.PRNGKey(1), (32, 4, 24)) * 0.5
+mesh = systolic.make_systolic_mesh(1, 1, stage=2)
+
+def run(**kw):
+    return np.asarray(systolic.systolic_lstm_stack_seq(
+        stack, mesh, xs, **kw)[0])
+
+ref = run(in_stage='sequential')                       # balanced (2, 1)
+for blocks in ((2, 1), (1, 2)):
+    for mode in ('sequential', 'batched'):
+        out = run(blocks=blocks, in_stage=mode)
+        np.testing.assert_array_equal(out, ref)
+
+# cache-driven split: a stack_f32 entry carrying blocks='1,2' must be
+# consumed by resolve_staged_blocks and leave the numerics bit-identical
+ent = ScheduleEntry(kind='stack_f32', n_x=24, n_h=48, n_layers=3, T=32,
+                    B=4, mesh='stage:2,row:1,col:1', tc=8,
+                    in_stage='sequential', blocks='1,2')
+with using_schedule_cache(ScheduleCache([ent])):
+    got = systolic.resolve_staged_blocks(3, 32, 2, n_h=48, n_x=24,
+                                         batch=4, mesh=mesh)
+    assert got == (1, 2), got
+    np.testing.assert_array_equal(run(), ref)
+print('UNEVEN-OK')
+"""
+
+
+def test_uneven_split_bit_equal_2dev():
+    out = run_with_devices(_UNEVEN_SNIPPET, 2, timeout=900)
+    assert 'UNEVEN-OK' in out
+
+
+# ---------------------------------------------------------------------------
+# Cache consumption: guards stay authoritative
+# ---------------------------------------------------------------------------
+
+def test_resolve_staged_blocks_guards():
+    from repro.core.systolic import resolve_staged_blocks
+    from repro.tune.schedule import (ScheduleCache, ScheduleEntry,
+                                    using_schedule_cache)
+
+    def entry(blocks):
+        return ScheduleEntry(kind='stack_f32', n_x=24, n_h=48, n_layers=3,
+                             T=32, B=4, mesh='any', tc=8, blocks=blocks)
+
+    # no cache -> no tuned split
+    assert resolve_staged_blocks(3, 32, 2, n_h=48, n_x=24, batch=4) is None
+    with using_schedule_cache(ScheduleCache([entry('1,2')])):
+        assert resolve_staged_blocks(3, 32, 2, n_h=48, n_x=24,
+                                     batch=4) == (1, 2)
+    # malformed / inconsistent entries are ignored, never propagated
+    for bad in ('', '1,1', '1,1,1', '4,-1', 'x,y'):
+        with using_schedule_cache(ScheduleCache([entry(bad)])):
+            assert resolve_staged_blocks(3, 32, 2, n_h=48, n_x=24,
+                                         batch=4) is None, bad
+
+
+def test_admission_stricter_with_tuned_bottleneck_2dev():
+    # a tuned split that concentrates layers can only make VMEM admission
+    # stricter: balanced lb=ceil(4/2)=2 fits at n_h=400, the tuned '3,1'
+    # bottleneck (3 layers resident) does not
+    snippet = r"""
+from repro.core import systolic
+from repro.tune.schedule import ScheduleCache, ScheduleEntry, \
+    using_schedule_cache
+mesh = systolic.make_systolic_mesh(1, 1, stage=2)
+assert systolic.seq_scaleout_admissible(400, mesh, n_layers=4,
+                                        n_x=48, T=32, batch=4)
+ent = ScheduleEntry(kind='stack_f32', n_x=48, n_h=400, n_layers=4, T=32,
+                    B=4, mesh='stage:2,row:1,col:1', tc=8, blocks='3,1')
+with using_schedule_cache(ScheduleCache([ent])):
+    assert not systolic.seq_scaleout_admissible(400, mesh, n_layers=4,
+                                                n_x=48, T=32, batch=4)
+print('ADMISSION-OK')
+"""
+    out = run_with_devices(snippet, 2, timeout=900)
+    assert 'ADMISSION-OK' in out
+
+
+# ---------------------------------------------------------------------------
+# Measured geometry trial + replay (small forced-device run)
+# ---------------------------------------------------------------------------
+
+_MEASURED_SNIPPET = r"""
+import jax, numpy as np
+from repro.core import lstm
+from repro.tune import ScheduleCache
+from repro.tune.autotune import replay_check, tune_geometry
+
+stack = lstm.init_lstm_stack(jax.random.PRNGKey(0), 24, 48, 3)
+xs = jax.random.normal(jax.random.PRNGKey(1), (32, 4, 24)) * 0.5
+cache = ScheduleCache()
+entry, records, base = tune_geometry(stack, xs, devices=4, ref=(2, 1, 2),
+                                     cache=cache, iters=2, warmup=1)
+assert entry.source == 'measured' and entry.measured_us > 0
+assert entry.mesh == 'devices:4'
+assert base > 0
+kinds = sorted(e.kind for e in cache.entries())
+assert kinds == ['geometry', 'stack_f32'], kinds
+assert replay_check(cache) >= 1
+roundtrip = ScheduleCache.from_json(cache.to_json())
+assert roundtrip.to_json() == cache.to_json()
+print('GEOTUNE-OK')
+"""
+
+
+def test_tune_geometry_measured_4dev():
+    out = run_with_devices(_MEASURED_SNIPPET, 4, timeout=900)
+    assert 'GEOTUNE-OK' in out
+
+
+# ---------------------------------------------------------------------------
+# CLI: actionable device-budget errors (S2)
+# ---------------------------------------------------------------------------
+
+def _run_cli(*argv):
+    env = dict(os.environ)
+    env['PYTHONPATH'] = SRC + os.pathsep + env.get('PYTHONPATH', '')
+    return subprocess.run([sys.executable, '-m', 'repro.tune', *argv],
+                          env=env, capture_output=True, text=True,
+                          timeout=900)
+
+
+def test_cli_over_budget_fails_fast(tmp_path):
+    proc = _run_cli('--staged-devices', '2', '--stages', '2', '--rows',
+                    '5', '--cols', '5', '--out', str(tmp_path / 'c.json'))
+    assert proc.returncode != 0
+    msg = proc.stderr + proc.stdout
+    assert 'needs 50 devices' in msg and '--staged-devices' in msg
+    # fail-fast: no tuning ran, nothing was written
+    assert not (tmp_path / 'c.json').exists()
+    # raw shard_map internals must not leak
+    assert 'shard_map' not in msg
+
+
+def test_cli_geometry_predicted_deterministic(tmp_path):
+    a, b = tmp_path / 'a.json', tmp_path / 'b.json'
+    for out in (a, b):
+        proc = _run_cli('--geometry', '--devices', '4', '--out', str(out),
+                        '--csv', str(out.with_suffix('.csv')))
+        assert proc.returncode == 0, proc.stderr
+        assert 'geometry ->' in proc.stdout
+    assert a.read_bytes() == b.read_bytes()
+    assert (a.with_suffix('.csv').read_bytes()
+            == b.with_suffix('.csv').read_bytes())
+    doc = json.loads(a.read_text())
+    geo = [e for e in doc['entries'] if e['kind'] == 'geometry']
+    assert len(geo) == 1 and geo[0]['mesh'] == 'devices:4'
+    assert geo[0]['source'] == 'predicted'

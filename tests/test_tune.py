@@ -165,6 +165,23 @@ def test_serving_chunk_ceiling_is_cache_driven():
         assert tuned_chunk_ceiling(cfg, 16, 4) == 4
         assert tuned_chunk_ceiling(cfg, 2, 4) == 2      # never grows chunk
     assert tuned_chunk_ceiling(cfg, 16, 4) == 16
+    # the end-to-end serving-loop measurement outranks the kernel-level
+    # prediction: with both kinds present, 'serving_chunk' wins
+    both = _cache(
+        ScheduleEntry(kind='stack_f32', n_x=123, n_h=421, n_layers=3,
+                      tc=4, source='measured'),
+        ScheduleEntry(kind='serving_chunk', n_x=123, n_h=421, n_layers=3,
+                      T=16, B=4, tc=8, source='measured'))
+    with using_schedule_cache(both):
+        assert tuned_chunk_ceiling(cfg, 16, 4) == 8
+    # a tc=0 serving entry is a recorded miss: falls back to stack_f32
+    degenerate = _cache(
+        ScheduleEntry(kind='stack_f32', n_x=123, n_h=421, n_layers=3,
+                      tc=4, source='measured'),
+        ScheduleEntry(kind='serving_chunk', n_x=123, n_h=421, n_layers=3,
+                      T=16, B=4, tc=0, source='measured'))
+    with using_schedule_cache(degenerate):
+        assert tuned_chunk_ceiling(cfg, 16, 4) == 4
 
 
 # ------------------------------------------------- numerics are unchanged
