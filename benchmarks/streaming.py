@@ -194,6 +194,106 @@ def run_async_overlap():
          f'vs sync arrival-chunk (>=1.2x required), deadline_misses=0')
 
 
+def run_promotion_overhead():
+    """DESIGN.md §14 acceptance rows: what the elastic recovery runtime
+    costs.  Two pairs on the full 123->421x3 topology:
+
+      * steady state — a recovery-armed engine (fault config attached:
+        health tracker, rung ladder, promotion poll every step) vs the bare
+        engine, interleaved full drains on persistent (warm) engines; the
+        armed engine must stay within 5% (at the home rung the poll is a
+        dict probe and the canary capture is OFF, so the §14 machinery is
+        near-free until a fault actually lands).
+      * promote cycle — a full fail -> degrade -> heal -> climb-back drain
+        with the canary ON vs OFF, fresh engines (the cycle re-jits the
+        demoted and promoted rungs either way, so the on/off delta isolates
+        the shadow replay + host compare the canary adds).  Both variants
+        must end back on the home rung with a ``promote`` event."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import get_bundle
+    from repro.runtime import ServingFaultConfig
+    from repro.serving import StreamingEngine
+
+    cfg = get_config('chipmunk-ctc')
+    params, _ = get_bundle(cfg).init(jax.random.PRNGKey(0))
+    S = 4
+    rng = np.random.RandomState(0)
+    utts = [rng.randn(T, N_X).astype(np.float32) * 0.5 for _ in range(S)]
+
+    # -- steady state: persistent engines, no injected faults ------------
+    eng_off = StreamingEngine(cfg, params, max_streams=S, chunk=CHUNK)
+    eng_armed = StreamingEngine(
+        cfg, params, max_streams=S, chunk=CHUNK,
+        faults=ServingFaultConfig(recover_at={}, promote_hysteresis=4))
+
+    def drain(eng):
+        for u in utts:
+            eng.submit(u)
+        t0 = time.perf_counter()
+        eng.run()
+        return time.perf_counter() - t0
+
+    drain(eng_off); drain(eng_armed)       # warm both jit caches
+    t_off, t_armed = [], []
+    for _ in range(5):                     # interleaved timing
+        t_off.append(drain(eng_off))
+        t_armed.append(drain(eng_armed))
+    us_off = sorted(t_off)[len(t_off) // 2] * 1e6
+    us_armed = sorted(t_armed)[len(t_armed) // 2] * 1e6
+    pct = (us_armed / us_off - 1.0) * 100.0
+    emit(f'streaming/recovery_off_S{S}', us_off,
+         f'S={S} T={T} chunk={CHUNK} 123->421x3: full drain, no fault '
+         f'config (no tracker, no rung ladder, no promotion poll)')
+    emit(f'streaming/recovery_armed_S{S}', us_armed,
+         f'S={S} T={T} chunk={CHUNK} 123->421x3: recovery-armed drain '
+         f'(tracker + rungs + per-step promotion poll, zero faults); '
+         f'overhead {pct:+.1f}% vs recovery_off (<5% required)')
+
+    # -- promote cycle: fail -> heal -> climb back, canary on vs off -----
+    # pallas_seq <-> xla_scan is a cross-arithmetic-class pair at the full
+    # 421-wide hidden size (summation order differs), so the canary runs
+    # under the explicit allclose opt-in rather than the bitwise default.
+    cyc_cfg = dataclasses.replace(cfg, lstm_backend='pallas_seq')
+
+    def cycle(canary):
+        eng = StreamingEngine(
+            cyc_cfg, params, max_streams=S, chunk=CHUNK,
+            faults=ServingFaultConfig(fail_at={1: 1}, recover_at={2: 1},
+                                      promote_hysteresis=1, canary=canary,
+                                      canary_rtol=1e-3, backoff_s=0.0))
+        home = eng.backend
+        for u in utts:
+            eng.submit(u)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        counts = eng.stats()['event_counts']
+        assert counts.get('promote', 0) == 1, counts
+        assert counts.get('promote_canary', 0) == (1 if canary else 0)
+        assert eng.backend == home, (eng.backend, home)
+        return dt
+
+    cycle(True); cycle(False)              # warm the per-variant jit work
+    t_on, t_off2 = [], []
+    for _ in range(3):                     # interleaved timing
+        t_on.append(cycle(True))
+        t_off2.append(cycle(False))
+    us_on = sorted(t_on)[len(t_on) // 2] * 1e6
+    us_off2 = sorted(t_off2)[len(t_off2) // 2] * 1e6
+    pct2 = (us_on / us_off2 - 1.0) * 100.0
+    emit(f'streaming/promote_cycle_canary_off_S{S}', us_off2,
+         f'S={S} T={T} chunk={CHUNK} 123->421x3: fail@1 heal@2 climb-back '
+         f'drain, promotion on capacity+hysteresis alone (rung re-jits '
+         f'included)')
+    emit(f'streaming/promote_cycle_canary_on_S{S}', us_on,
+         f'S={S} T={T} chunk={CHUNK} 123->421x3: same cycle with the '
+         f'shadow-replay canary validating the healed rung (allclose '
+         f'rtol=1e-3, cross-class pair); {pct2:+.1f}% vs canary_off (one '
+         f'committed-chunk replay + host compare per promotion)')
+
+
 def run():
     from repro.configs import get_config
     from repro.models import chipmunk_net, get_bundle
@@ -262,6 +362,7 @@ def run():
 
     run_guard_overhead()
     run_async_overlap()
+    run_promotion_overhead()
 
 
 if __name__ == '__main__':
@@ -271,10 +372,14 @@ if __name__ == '__main__':
                     help='run only the §10 guard-overhead pair')
     ap.add_argument('--overlap', action='store_true',
                     help='run only the §11 async overlap/policy rows')
+    ap.add_argument('--promotion', action='store_true',
+                    help='run only the §14 recovery/promotion-overhead rows')
     a = ap.parse_args()
     if a.faults:
         run_guard_overhead()
     elif a.overlap:
         run_async_overlap()
+    elif a.promotion:
+        run_promotion_overhead()
     else:
         run()

@@ -300,6 +300,20 @@ def next_backend_down(backend: str) -> Optional[str]:
         return None
     return DEGRADATION_LADDER[rank + 1]
 
+
+def next_backend_up(backend: str) -> Optional[str]:
+    """The next backend UP the serving ``DEGRADATION_LADDER``, or None at
+    the top (the staged systolic rung has nothing above it) — the promotion
+    inverse of ``next_backend_down``, consulted by the recovery runtime
+    (``runtime/recovery.py``) when the mesh health tracker reports capacity
+    for a higher rung.  Pure dispatch — promotion is canary-validated by
+    the engine before it takes effect, and never changes the chunking /
+    masking contract, only which engine executes it."""
+    rank = _LADDER_RANK.get(backend)
+    if rank is None or rank == 0:
+        return None
+    return DEGRADATION_LADDER[rank - 1]
+
 # The sequence kernel keeps W_h + state resident in VMEM; leave headroom for
 # Mosaic's double-buffered streams out of the ~16 MB budget.
 _VMEM_BUDGET_BYTES = 12 * 1024 * 1024

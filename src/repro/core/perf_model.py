@@ -322,6 +322,97 @@ def staged_wavefront_cycles(layers: Sequence[LayerDims], cfg: TileConfig,
     return (K + S - 1) * max(per_macro)
 
 
+# ---------------------------------------------------------------------------
+# Two-level die hierarchy (§14, after "Vau da Muntanialas")
+# ---------------------------------------------------------------------------
+# The follow-up paper scales Chipmunk's array across DIES over a serial
+# chip-to-chip link: intra-die stage handoffs ride the on-die interconnect
+# (already inside the macro-step model above), but a chunk handoff that
+# CROSSES a die boundary streams the boundary h chunk over the link.  The
+# link is modelled as a cycles-per-byte cost, deliberately slower than the
+# on-die weight-load path (LOAD_CPB) — chip-to-chip serial beats neither
+# on-die wires nor the L2 port.
+INTER_DIE_HOP_CPB = 2.0   # cycles per activation byte over the die link
+
+
+def die_staged_wavefront_cycles(layers: Sequence[LayerDims],
+                                cfg: TileConfig, T: int, *, dies: int,
+                                chunk: int = 1, tile: int = N_LSTM,
+                                beta: float = BETA,
+                                hop_cpb: float = INTER_DIE_HOP_CPB,
+                                blocks: Optional[Sequence[int]] = None
+                                ) -> float:
+    """Staged-pipeline cycles on a two-level die fleet (§14).
+
+    ``cfg.arrays`` is the TOTAL pipeline depth across the healthy dies
+    (the flattened ``DieMesh.submesh`` execution form: ``S = dies *
+    stage_per_die``), with stages assigned to dies contiguously.  The
+    schedule is ``staged_wavefront_cycles`` plus an inter-die hop charge:
+    the last stage of every die but the final one streams its chunk's
+    boundary h block (``chunk * n_h * 4`` bytes) over the chip-to-chip
+    link at ``hop_cpb`` cycles/byte, added to THAT stage's macro-step
+    before the bottleneck max — so a hop only costs wall-clock when the
+    boundary stage is (or becomes) the pipeline bottleneck.  ``dies <= 1``
+    reduces exactly to the single-die staged model, which is what makes
+    the 75 → 50 → 25 ladder rungs comparable on one scale."""
+    S = cfg.arrays
+    if S <= 1:
+        return sequential_cycles(layers, cfg, T, tile, beta)
+    if dies <= 1:
+        return staged_wavefront_cycles(layers, cfg, T, chunk, tile, beta,
+                                       blocks=blocks)
+    if S % dies:
+        raise ValueError(f'{S} stages do not split over {dies} dies')
+    if blocks is not None:
+        sizes = [int(b) for b in blocks]
+        if len(sizes) != S or sum(sizes) != len(layers) or min(sizes) < 0:
+            raise ValueError(f'blocks {sizes!r} is not a {S}-stage split '
+                             f'of {len(layers)} layers')
+    else:
+        base, rem = divmod(len(layers), S)
+        sizes = [base + (1 if s < rem else 0) for s in range(S)]
+    per_die = S // dies
+    per_macro, lo = [], 0
+    for s in range(S):
+        blk = layers[lo:lo + sizes[s]]
+        lo += sizes[s]
+        macro = chunk * sum(layer_step_cycles(ld, cfg, tile, beta)
+                            for ld in blk)
+        die_boundary = ((s + 1) % per_die == 0) and s != S - 1
+        if die_boundary:
+            n_h = blk[-1].n_h if blk else (layers[lo - 1].n_h if lo else 0)
+            macro += hop_cpb * chunk * n_h * 4
+        per_macro.append(macro)
+    K = math.ceil(T / chunk)
+    return (K + S - 1) * max(per_macro)
+
+
+def die_rung_frame_s(layers: Sequence[LayerDims] = CTC_3L_421H,
+                     topology: Tuple[int, int, int, int] = (3, 1, 5, 5),
+                     healthy_dies: Optional[int] = None,
+                     v: float = V_MAX, T: int = 100, chunk: int = 1,
+                     hop_cpb: float = INTER_DIE_HOP_CPB) -> float:
+    """Modelled per-frame execution time of ONE degradation-ladder rung on
+    a ``(dies, stage_per_die, rows, cols)`` die fleet with only
+    ``healthy_dies`` dies alive (default: all) — the §14 generalisation of
+    ``staged_realtime_frame_s`` that gives the ladder real intermediate
+    estimates (graves-3x25: 75 -> 50 -> 25 engines) instead of one cliff.
+    Each rung runs the flattened healthy submesh (pipeline depth =
+    ``healthy * stage_per_die`` at the same per-stage grid), so rungs sit
+    on one comparable scale; a rung whose depth exceeds the layer count is
+    clamped to ``len(layers)`` stages (idle stages add bubbles, never
+    compute)."""
+    dies, stage_per_die, rows, cols = topology
+    healthy = dies if healthy_dies is None else healthy_dies
+    assert 1 <= healthy <= dies, (healthy, dies)
+    depth = min(healthy * stage_per_die, len(layers))
+    cyc = die_staged_wavefront_cycles(
+        layers, TileConfig(depth, rows, cols), T,
+        dies=max(1, depth // max(1, stage_per_die)), chunk=chunk,
+        hop_cpb=hop_cpb)
+    return cyc / T / freq_hz(v)
+
+
 def staged_fill_drain_overhead(n_stages: int, T: int,
                                chunk: int = 1) -> float:
     """Fraction of staged macro-steps that are pipeline fill/drain:

@@ -112,6 +112,7 @@ def seq_scaleout_admissible(n_h: int, mesh: Optional[Mesh], *,
                             n_x: int = 0, T: int = 0, batch: int = 0,
                             row_axis: str = 'row', col_axis: str = 'col',
                             stage_axis: str = 'stage',
+                            die_axis: str = 'die',
                             vmem_budget: Optional[int] = None) -> bool:
     """Tile-admission rule for the systolic scale-outs (DESIGN.md §6, §9).
 
@@ -143,6 +144,13 @@ def seq_scaleout_admissible(n_h: int, mesh: Optional[Mesh], *,
     split can only make admission stricter, never admit a config the
     balanced default would reject on a colder cache.  The guard stays
     authoritative either way.
+
+    Die-aware form (§14): a 4-axis ("die","stage","row","col") fleet mesh
+    (``launch.mesh.DieMesh.full_mesh``) is admitted by the staged rule with
+    the die axis FOLDED into the pipeline depth — execution always runs on
+    the flattened healthy-dies submesh where ``stages = dies * stage``, so
+    admission models exactly what dispatch will run.  The single-layer rule
+    still rejects any live die axis (a fleet belongs to the staged path).
     """
     if mesh is None:
         return False
@@ -154,9 +162,11 @@ def seq_scaleout_admissible(n_h: int, mesh: Optional[Mesh], *,
                 or stage_axis not in names):
             return False
         if any(mesh.shape[a] > 1 for a in names
-               if a not in (row_axis, col_axis, stage_axis)):
+               if a not in (row_axis, col_axis, stage_axis, die_axis)):
             return False
         stages = mesh.shape[stage_axis]
+        if die_axis in names:
+            stages *= mesh.shape[die_axis]
         if stages < 2 or stages > n_layers:
             return False
         mr, mc = mesh.shape[row_axis], mesh.shape[col_axis]

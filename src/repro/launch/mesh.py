@@ -6,12 +6,14 @@ crosses DCI; sharding anything over it proves the config scales past one pod.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
-from ..compat import AxisType, make_mesh
+from ..compat import AxisType, make_mesh, mesh_with_axis_types
 
 # TPU v5e constants used for the roofline analysis (per assignment).
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
@@ -20,6 +22,9 @@ ICI_BW = 50e9                 # B/s per link
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The (data, model) training mesh shape the launch scripts assume —
+    one 16x16 pod slice, or two pods under an extra leading 'pod' axis.
+    Topology construction only; no placement or arithmetic happens here."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ('pod', 'data', 'model') if multi_pod else ('data', 'model')
     return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
@@ -74,6 +79,143 @@ def install_systolic_topology(name: str, devices=None) -> Mesh:
     """
     from ..core import systolic
     return systolic.install_mesh(make_systolic_topology(name, devices))
+
+
+# ---------------------------------------------------------------------------
+# Two-level die/tile fault-domain hierarchy (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+# The Chipmunk follow-up ("Vau da Muntanialas", PAPERS.md) scales the same
+# systolic idea across DIES with an explicit interconnect hierarchy: intra-die
+# collectives are cheap, inter-die hops are chunk-granular.  ``DieMesh`` models
+# that hierarchy as a ("die", "stage", "row", "col") fleet: each die owns
+# ``stage`` pipeline stages of (rows x cols) engine grids, and the die axis is
+# the FAULT-DOMAIN axis — a die failure kills exactly its sub-mesh, and the
+# systolic array re-forms on the survivors.  Execution flattens the healthy
+# dies onto the existing ("stage", "row", "col") staged dispatch path (the
+# die and stage axes compose into one pipeline axis: total stages =
+# healthy_dies * stage), so every degraded rung keeps the per-stage
+# (rows x cols) grid geometry — the same arithmetic class (n_h_p, bk), which
+# is what makes die-level degrade AND canary-validated promote bit-preserving
+# (tests/test_recovery.py).
+
+
+@dataclasses.dataclass(frozen=True)
+class DieMesh:
+    """Two-level ("die", "stage", "row", "col") fleet model.
+
+    ``dies`` fault domains, each holding ``stage`` pipeline stages of
+    (``rows`` x ``cols``) engine grids; ``devices`` is the row-major flat
+    device tuple (die-major, so one die's devices are contiguous — a die
+    failure maps to a contiguous device range).  Pure topology bookkeeping:
+    no arithmetic of its own — execution goes through ``submesh``'s
+    flattened projection onto the staged scale-out path.
+    """
+
+    dies: int
+    stage: int
+    rows: int
+    cols: int
+    devices: Tuple = ()
+
+    @property
+    def engines_per_die(self) -> int:
+        """Engines one die contributes (= engines lost when it fails)."""
+        return self.stage * self.rows * self.cols
+
+    @property
+    def n_engines(self) -> int:
+        """Total fleet engines across all dies."""
+        return self.dies * self.engines_per_die
+
+    def die_devices(self, die: int) -> Tuple:
+        """The contiguous device slice owned by fault domain ``die``."""
+        k = self.engines_per_die
+        return tuple(self.devices[die * k:(die + 1) * k])
+
+    def submesh(self, healthy: Sequence[int]) -> Mesh:
+        """Flatten the healthy dies onto one ('stage','row','col') execution
+        mesh: total stage depth = ``len(healthy) * stage``, per-stage grid
+        geometry unchanged.  Pure placement — the flattened mesh drives the
+        SAME staged dispatch path as a hand-built ``make_systolic_mesh``,
+        and because every rung keeps the (rows, cols) grid, re-forming on
+        fewer (or re-admitted) dies stays within one arithmetic class:
+        chunk outputs are bit-equal across die counts."""
+        healthy = sorted(healthy)
+        assert healthy and all(0 <= d < self.dies for d in healthy), healthy
+        devs = [d for die in healthy for d in self.die_devices(die)]
+        from ..core.systolic import make_systolic_mesh
+        return make_systolic_mesh(self.rows, self.cols,
+                                  stage=len(healthy) * self.stage,
+                                  devices=devs)
+
+    def full_mesh(self) -> Mesh:
+        """The explicit 4-axis ('die','stage','row','col') mesh — the model
+        the die-aware admission rule (``core.systolic.
+        seq_scaleout_admissible``) and perf model reason over.  Execution
+        uses ``submesh`` (die and stage fold into one pipeline axis); this
+        form keeps the fault-domain boundary explicit."""
+        arr = np.array(list(self.devices)).reshape(
+            self.dies, self.stage, self.rows, self.cols)
+        return mesh_with_axis_types(arr, ('die', 'stage', 'row', 'col'),
+                                    axis_types=(AxisType.Auto,) * 4)
+
+
+# name -> (dies, stage-per-die, rows, cols).  'graves-3x25' is the paper's
+# 75-engine Table-2 topology refactored as THREE 25-engine dies: the
+# degradation ladder then has real intermediate rungs (75 -> 50 -> 25
+# engines) instead of jumping straight to single-host.  The small presets
+# run on host devices (XLA_FLAGS=--xla_force_host_platform_device_count=N).
+DIE_TOPOLOGIES = {
+    'die-2x1x1': (2, 1, 1, 1),   # 2 dies of one engine each (2 devices)
+    'die-3x1x1': (3, 1, 1, 1),   # 3 dies of one engine each (3 devices)
+    'die-2x1x2': (2, 1, 1, 2),   # 2 dies of a 1x2 grid (4 devices)
+    'graves-3x25': (3, 1, 5, 5),  # 3 dies of 5x5 = the Table-2 75 engines
+}
+
+_INSTALLED_DIE_MESH: Optional[DieMesh] = None
+
+
+def make_die_topology(name: str, devices=None) -> DieMesh:
+    """Build the named ``DIE_TOPOLOGIES`` preset as a ``DieMesh`` over the
+    first ``dies * stage * rows * cols`` devices.  Pure topology
+    construction — no placement happens until ``submesh`` is installed."""
+    dies, stage, rows, cols = DIE_TOPOLOGIES[name]
+    devices = list(jax.devices()) if devices is None else list(devices)
+    need = dies * stage * rows * cols
+    if len(devices) < need:
+        raise ValueError(f'die topology {name!r} needs {need} devices, '
+                         f'have {len(devices)}')
+    return DieMesh(dies=dies, stage=stage, rows=rows, cols=cols,
+                   devices=tuple(devices[:need]))
+
+
+def install_die_topology(name: str, devices=None) -> DieMesh:
+    """Build the named preset, register it as the process die-mesh model,
+    and install its all-dies-healthy flattened submesh as the systolic
+    execution mesh.  After installation the serving engine's recovery
+    runtime (``runtime/recovery.py``) sees the die-level fault domains: an
+    ``EngineFailure`` carrying a die id re-forms the mesh on the surviving
+    dies (one ladder rung down) instead of abandoning the mesh, and a
+    healed die is re-admitted by the canary-validated promotion path.
+    Dispatch/placement only — numerics are unchanged on every rung."""
+    global _INSTALLED_DIE_MESH
+    dm = make_die_topology(name, devices)
+    _INSTALLED_DIE_MESH = dm
+    from ..core import systolic
+    systolic.install_mesh(dm.submesh(range(dm.dies)))
+    return dm
+
+
+def current_die_mesh() -> Optional[DieMesh]:
+    """The registered die-mesh model, or None (flat/no-mesh serving)."""
+    return _INSTALLED_DIE_MESH
+
+
+def clear_die_mesh() -> None:
+    """Unregister the die-mesh model (the execution mesh is cleared
+    separately via ``core.systolic.clear_mesh``)."""
+    global _INSTALLED_DIE_MESH
+    _INSTALLED_DIE_MESH = None
 
 
 def resolve_rules(rules: Dict[str, object], mesh: Mesh) -> Dict[str, object]:

@@ -191,10 +191,14 @@ def _build_fault_config(args):
     if args.fail_at_step is not None and args.fail_at_step not in fail_at:
         fail_at[args.fail_at_step] = 1
     poison_at = dict(_parse_at_spec(s) for s in (args.poison_slot or []))
-    if not (fail_at or poison_at or args.stream_ckpt_dir
+    recover_at = dict(_parse_at_spec(s) for s in (args.recover_at or []))
+    if not (fail_at or poison_at or recover_at or args.stream_ckpt_dir
             or args.deadline_factor is not None):
         return None
     return ServingFaultConfig(fail_at=fail_at, poison_at=poison_at,
+                              recover_at=recover_at,
+                              promote_hysteresis=args.promote_hysteresis,
+                              canary=args.canary,
                               backoff_s=0.0,
                               deadline_factor=args.deadline_factor,
                               checkpoint_dir=args.stream_ckpt_dir)
@@ -231,15 +235,32 @@ def _run_stream_serving(cfg, args):
               f'phonemes {s.decoder.symbols[:8]}')
     if faults is not None:
         counts = stats['event_counts']
-        degr = [e for e in stats['events'] if e['kind'] == 'degrade']
         print(f'fault summary: backend={stats["backend"]} '
+              f'rung={stats["rung"]} '
               f'degrade={counts.get("degrade", 0)} '
+              f'promote={counts.get("promote", 0)} '
               f'quarantine={counts.get("quarantine", 0)} '
               f'deadline_misses={stats["deadline_misses"]} '
-              f'checkpoints={counts.get("checkpoint", 0)}')
-        for e in degr:
-            print(f'  degrade @step {e["step"]}: {e["from_backend"]} -> '
-                  f'{e["to_backend"]} ({e["n_dead"]} engine(s) dead)')
+              f'checkpoints={counts.get("checkpoint", 0)} '
+              f'events_dropped={stats["events_dropped"]}')
+        for e in stats['events']:
+            if e['kind'] == 'degrade':
+                print(f'  degrade @step {e["step"]}: {e["from_backend"]} -> '
+                      f'{e["to_backend"]} ({e["n_dead"]} engine(s) dead, '
+                      f'domain {e["domain"]})')
+            elif e['kind'] == 'heal':
+                print(f'  heal @step {e["step"]}: domains {e["domains"]} '
+                      f'healed')
+            elif e['kind'] == 'promote_canary':
+                print(f'  promote_canary @step {e["step"]}: replaying '
+                      f'committed chunk on {e["to_backend"]}')
+            elif e['kind'] == 'promote':
+                print(f'  promote @step {e["step"]}: {e["from_backend"]} -> '
+                      f'{e["to_backend"]} (healthy domains {e["healthy"]})')
+            elif e['kind'] == 'promote_rejected':
+                print(f'  promote_rejected @step {e["step"]}: '
+                      f'{e["to_backend"]} canary mismatch '
+                      f'(backoff -> {e["backoff"]})')
 
 
 def main(argv=None):
@@ -262,6 +283,15 @@ def main(argv=None):
                          'pallas_seq_systolic, stage>1 presets the staged '
                          'pallas_seq_fused_systolic; multi-device presets '
                          'need that many JAX devices)')
+    from .mesh import DIE_TOPOLOGIES
+    ap.add_argument('--die-topology', default=None,
+                    choices=sorted(DIE_TOPOLOGIES),
+                    help='install a two-level die-mesh preset (§14): dies '
+                         'are fault domains; an engine failure re-forms '
+                         'the systolic mesh on the surviving dies (an '
+                         'intermediate ladder rung) and a healed die is '
+                         'canary-validated back in; needs dies*stage*rows*'
+                         'cols JAX devices')
     ap.add_argument('--fail-at-step', type=int, default=None,
                     help='declare one mesh engine dead at this engine step '
                          '(LSTM streaming; exercises the degradation ladder)')
@@ -272,6 +302,19 @@ def main(argv=None):
                     metavar='SLOT@STEP',
                     help='poison slot SLOT with NaN state before STEP '
                          '(repeatable; exercises quarantine)')
+    ap.add_argument('--recover-at-step', dest='recover_at', action='append',
+                    default=None, metavar='N@STEP',
+                    help='heal N failed fault domains at engine step STEP '
+                         '(repeatable; exercises the §14 canary-validated '
+                         'climb back up the ladder)')
+    ap.add_argument('--promote-hysteresis', type=int, default=4,
+                    help='engine steps a promotion must wait after a '
+                         'failure/promotion/rejection; flaps and rejected '
+                         'canaries double it (exponential backoff)')
+    ap.add_argument('--no-canary', dest='canary', action='store_false',
+                    default=True,
+                    help='promote on capacity + hysteresis alone, without '
+                         'the shadow-replay canary validation')
     ap.add_argument('--stream-ckpt-dir', default=None,
                     help='directory for per-stream (h, c) + cursor '
                          'checkpoints (enables preempt/resume across runs)')
@@ -312,6 +355,12 @@ def main(argv=None):
         mesh = install_systolic_topology(args.systolic_topology)
         print(f'installed systolic topology {args.systolic_topology}: '
               f'{dict(mesh.shape)}')
+    if args.die_topology:
+        from .mesh import install_die_topology
+        dm = install_die_topology(args.die_topology)
+        print(f'installed die topology {args.die_topology}: {dm.dies} dies '
+              f'x {dm.engines_per_die} engines '
+              f'({dm.dies}x{dm.stage}x{dm.rows}x{dm.cols})')
 
     if args.schedule_cache:
         import pathlib

@@ -1,4 +1,5 @@
-from .fault import FaultConfig, FaultTolerantRunner, StepTimer
+from .fault import FaultConfig, FaultTolerantRunner, RingLog, StepTimer
+from .recovery import MeshHealthTracker, Rung, build_rungs
 from .serving_faults import (ChunkSizePolicy, EngineFailure,
                              ServingFaultConfig, StreamStateCheckpointer,
                              chunk_deadline_s, elastic_replace, finite_slots)

@@ -34,6 +34,7 @@ injection/retry/deadline/heartbeat machinery.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 import pathlib
@@ -51,6 +52,72 @@ class FaultConfig:
     # optional per-step deadline (seconds); overruns are recorded as
     # ``deadline_miss`` events, never raised (see module docstring)
     deadline_s: Optional[float] = None
+    # permanent (non-transient) faults get their own budget: they must not
+    # burn the transient retry budget before the fault hook fires, but an
+    # unbounded degrade loop is still a bug — cap it well above any ladder
+    max_permanent: int = 8
+    # bound the event log (None = unbounded); see RingLog
+    event_log_cap: Optional[int] = None
+
+
+class RingLog:
+    """Bounded append-only event log for long-lived serving processes.
+
+    A fixed-capacity ring over structured event dicts: appends past the cap
+    silently evict the OLDEST entries and bump ``dropped`` (the operator's
+    truncation signal, surfaced by ``StreamingEngine.stats()`` as
+    ``events_dropped``).  ``cap=None`` is unbounded (the historical list
+    behaviour).  List-compatible where the test/stats surface needs it:
+    iteration, ``len``, indexing, ``==`` against lists, and ``+``
+    concatenation all behave like the equivalent list of retained events.
+    """
+
+    def __init__(self, cap: Optional[int] = None):
+        self.cap = None if cap is None else int(cap)
+        if self.cap is not None and self.cap < 1:
+            raise ValueError(f'event log cap must be >= 1, got {self.cap}')
+        self._d: collections.deque = collections.deque(maxlen=self.cap)
+        self.dropped = 0
+
+    def append(self, item) -> None:
+        """Append one event, evicting the oldest (and counting the drop)
+        when the ring is full."""
+        if self.cap is not None and len(self._d) == self.cap:
+            self.dropped += 1
+        self._d.append(item)
+
+    def extend(self, items) -> None:
+        """Append every event of ``items`` in order (ring semantics each)."""
+        for item in items:
+            self.append(item)
+
+    def clear(self) -> None:
+        """Drop all retained events (does not reset ``dropped``)."""
+        self._d.clear()
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __iter__(self):
+        return iter(self._d)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return list(self._d)[i]
+        return self._d[i]
+
+    def __add__(self, other):
+        return list(self._d) + list(other)
+
+    def __radd__(self, other):
+        return list(other) + list(self._d)
+
+    def __eq__(self, other):
+        return list(self._d) == list(other)
+
+    def __repr__(self) -> str:
+        return (f'RingLog(cap={self.cap}, n={len(self._d)}, '
+                f'dropped={self.dropped})')
 
 
 class StepTimer:
@@ -107,14 +174,16 @@ class FaultTolerantRunner:
         self.fail_schedule = fail_schedule
         self.on_fault = on_fault
         self.timer = StepTimer(self.cfg.ewma_alpha, self.cfg.straggler_factor)
-        self.events: List[Dict] = []
+        self.events = RingLog(self.cfg.event_log_cap)
         self.deadline_misses = 0
         self.last_heartbeat: Optional[Dict] = None
+        self.last_fault_domain: Optional[int] = None
 
     def _heartbeat(self, step: int):
         payload = {'step': step, 'time': time.time(),
                    'ewma_step_s': self.timer.ewma,
-                   'deadline_misses': self.deadline_misses}
+                   'deadline_misses': self.deadline_misses,
+                   'fault_domain': self.last_fault_domain}
         self.last_heartbeat = payload
         if self.cfg.heartbeat_path:
             pathlib.Path(self.cfg.heartbeat_path).write_text(
@@ -155,20 +224,32 @@ class FaultTolerantRunner:
         synchronous recompute (timed from their own start).  ``deadline_s``
         overrides ``cfg.deadline_s`` per call — the serving engine derives
         it per chunk when the chunk length varies under a size policy.
+
+        Fault taxonomy (§14): an exception whose ``transient`` attribute is
+        ``False`` (a permanent ``EngineFailure``) does NOT burn the
+        transient retry budget — the fault hook fires on its first attempt
+        and the loop keeps retrying under the separate ``max_permanent``
+        cap (a safety backstop, not a policy knob: the hook's degradation
+        ladder bottoms out long before it).  Exceptions without the
+        attribute default to transient — the historical retry behaviour.
+        Fault events carry ``transient`` and ``domain``; the heartbeat
+        carries the last-seen ``fault_domain``.
         """
         on_fault = on_fault if on_fault is not None else self.on_fault
         deadline = deadline_s if deadline_s is not None else self.cfg.deadline_s
-        attempts = 0
+        attempts = 0       # transient faults charged to the retry budget
+        permanent = 0      # permanent faults (degrade path, separate cap)
         while True:
+            total = attempts + permanent
             try:
-                if attempts == 0:
+                if total == 0:
                     injected = self._injected(step)
                     if injected is not None:
                         raise injected
                 t0 = time.time()
-                if attempts == 0 and launched_at is not None:
+                if total == 0 and launched_at is not None:
                     t0 = launched_at
-                out = fn() if (attempts == 0 or retry_fn is None) \
+                out = fn() if (total == 0 or retry_fn is None) \
                     else retry_fn()
                 dt = time.time() - t0
                 if self.timer.observe(step, dt):
@@ -182,14 +263,26 @@ class FaultTolerantRunner:
                 self._heartbeat(step)
                 return out
             except Exception as e:           # noqa: BLE001 — retry any fault
-                attempts += 1
+                transient = bool(getattr(e, 'transient', True))
+                domain = getattr(e, 'domain', None)
+                if transient:
+                    attempts += 1
+                else:
+                    permanent += 1
+                if domain is not None:
+                    self.last_fault_domain = domain
                 self.events.append({'kind': 'fault', 'step': step,
-                                    'attempt': attempts, 'error': repr(e)})
-                if attempts > self.cfg.max_retries:
+                                    'attempt': attempts + permanent,
+                                    'error': repr(e),
+                                    'transient': transient,
+                                    'domain': domain})
+                if attempts > self.cfg.max_retries \
+                        or permanent > self.cfg.max_permanent:
                     raise
-                time.sleep(self.cfg.backoff_s * attempts)
+                if transient:
+                    time.sleep(self.cfg.backoff_s * attempts)
                 if on_fault is not None:
-                    on_fault(e, attempts)
+                    on_fault(e, attempts + permanent)
 
     def run_step(self, step: int, state, batch):
         """Training-loop contract: ``(state, batch) -> (state, metrics)``

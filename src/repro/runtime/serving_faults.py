@@ -49,14 +49,32 @@ class EngineFailure(RuntimeError):
     Raised by the deterministic fault schedule (``ServingFaultConfig.fail_at``
     via ``FaultTolerantRunner``'s injection hook) — or, on real hardware, by
     the dispatch layer when a device stops answering.  Handlers react by
-    type: the serving engine degrades its backend down the ladder and
-    re-places its packed state cache before retrying the chunk.
+    type AND taxonomy (§14):
+
+      * ``transient=False`` (default) — a PERMANENT loss: the serving engine
+        degrades its backend down the ladder (or drops a die from the mesh)
+        and re-places its packed state cache before retrying the chunk.
+        Permanent failures do not burn the runner's transient retry budget —
+        the fault hook fires on the first attempt.
+      * ``transient=True`` — a recoverable glitch (link hiccup, watchdog
+        blip): the runner retries in place under the ordinary backoff
+        budget; no degradation happens.
+
+    ``domain`` carries the fault-domain id (the DIE index on a two-level
+    ``launch.mesh.DieMesh``); None means "unattributed", which the engine
+    maps to the highest-numbered healthy domain (LIFO — matching the
+    tracker's heal order, so fail/heal schedules compose deterministically).
     """
 
     def __init__(self, n_dead: int = 1,
-                 message: Optional[str] = None):
+                 message: Optional[str] = None, *,
+                 transient: bool = False,
+                 domain: Optional[int] = None):
         self.n_dead = int(n_dead)
-        super().__init__(message or f'{n_dead} mesh engine(s) declared dead')
+        self.transient = bool(transient)
+        self.domain = None if domain is None else int(domain)
+        kind = 'transient fault on' if transient else 'declared dead'
+        super().__init__(message or f'{n_dead} mesh engine(s) {kind}')
 
 
 @dataclasses.dataclass
@@ -74,10 +92,22 @@ class ServingFaultConfig:
     from the paper's real-time model (``chunk_deadline_s``).
     ``checkpoint_dir`` enables stream-state checkpoint/resume through
     ``StreamStateCheckpointer``.
+
+    Recovery-side knobs (§14): ``fail_at`` values may also be dict specs
+    ``{'n_dead': int, 'transient': bool, 'domain': int}`` to inject the
+    taxonomy; ``recover_at`` maps engine step -> number of fault domains
+    healed at that step (fed to the ``MeshHealthTracker``, which then arms
+    the canary-validated promotion path); ``promote_hysteresis`` is the
+    tracker's base backoff window in engine steps; ``canary`` gates
+    promotion on a bit-equality shadow-chunk replay (``canary_rtol`` relaxes
+    the comparison to allclose for cross-arithmetic-class rungs);
+    ``event_log_cap`` bounds the engine + runner event logs with a ring
+    buffer (``runtime.fault.RingLog``).
     """
 
-    fail_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    fail_at: Dict[int, object] = dataclasses.field(default_factory=dict)
     poison_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    recover_at: Dict[int, int] = dataclasses.field(default_factory=dict)
     guard_nonfinite: bool = True
     max_retries: int = 3
     backoff_s: float = 0.05
@@ -85,6 +115,10 @@ class ServingFaultConfig:
     deadline_factor: Optional[float] = None
     checkpoint_dir: Optional[str] = None
     heartbeat_path: Optional[str] = None
+    promote_hysteresis: int = 4
+    canary: bool = True
+    canary_rtol: Optional[float] = None
+    event_log_cap: int = 1024
 
     def resolve_deadline_s(self, chunk: int) -> Optional[float]:
         """The per-chunk deadline this config implies: the explicit
@@ -99,14 +133,22 @@ class ServingFaultConfig:
 
     def make_fail_schedule(self):
         """The ``FaultTolerantRunner`` injection hook for this config:
-        ``step -> EngineFailure(n_dead)`` on scheduled steps, else None.
-        Deterministic by construction — tests and CI replay it exactly."""
+        ``step -> EngineFailure`` on scheduled steps, else None.  A plain
+        int value is ``n_dead`` (a permanent unattributed loss, the PR 6
+        form); a dict value ``{'n_dead', 'transient', 'domain'}`` injects
+        the full §14 taxonomy.  Deterministic by construction — tests and
+        CI replay it exactly."""
         fail_at = dict(self.fail_at)
 
         def schedule(step: int):
-            if step in fail_at:
-                return EngineFailure(fail_at[step])
-            return None
+            if step not in fail_at:
+                return None
+            spec = fail_at[step]
+            if isinstance(spec, dict):
+                return EngineFailure(spec.get('n_dead', 1),
+                                     transient=spec.get('transient', False),
+                                     domain=spec.get('domain'))
+            return EngineFailure(spec)
 
         return schedule
 
@@ -205,14 +247,27 @@ def finite_slots(states) -> jax.Array:
     return finite
 
 
-def elastic_replace(tree):
-    """Re-place every leaf of ``tree`` on the (possibly changed) default
-    topology via an exact host round-trip — the in-memory form of
-    ``CheckpointManager.restore``'s elastic re-placement, used when a mesh
-    engine dies and the packed state cache must move to the surviving
-    devices.  Values are bit-preserved (numpy round-trip, no arithmetic)."""
+def elastic_replace(tree, sharding=None):
+    """Re-place every leaf of ``tree`` on the (possibly changed) topology
+    via an exact host round-trip — the in-memory form of
+    ``CheckpointManager.restore``'s elastic re-placement.  Both elasticity
+    directions run through here: DOWNWARD, when a mesh engine dies and the
+    packed state cache must move to the surviving devices (PR 6), and
+    UPWARD (§14), when a healed die is re-admitted and the cache re-shards
+    from the small degraded mesh onto the larger promoted one mid-stream —
+    the caller re-installs the mesh first, then re-places, then rebuilds
+    its jitted fwd so the next chunk consumes the new placement.  Values
+    are bit-preserved (numpy round-trip, no arithmetic) in either
+    direction.  ``sharding`` optionally pins an explicit target
+    ``jax.sharding.Sharding`` (or a per-leaf callable ``leaf -> Sharding``)
+    instead of the default device."""
+    if sharding is None:
+        return jax.tree.map(
+            lambda a: jax.device_put(np.asarray(jax.device_get(a))), tree)
+    place = sharding if callable(sharding) else (lambda a: sharding)
     return jax.tree.map(
-        lambda a: jax.device_put(np.asarray(jax.device_get(a))), tree)
+        lambda a: jax.device_put(np.asarray(jax.device_get(a)), place(a)),
+        tree)
 
 
 class StreamStateCheckpointer:

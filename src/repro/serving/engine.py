@@ -61,7 +61,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import chipmunk_net
-from ..runtime.fault import FaultConfig, FaultTolerantRunner
+from ..runtime.fault import FaultConfig, FaultTolerantRunner, RingLog
+from ..runtime.recovery import MeshHealthTracker, build_rungs
 from ..runtime.serving_faults import (ChunkSizePolicy, EngineFailure,
                                       ServingFaultConfig,
                                       StreamStateCheckpointer,
@@ -123,6 +124,7 @@ class _InFlight:
     finite: jax.Array
     t_launch: float
     chunk_len: int
+    states_in: tuple = ()                # inputs as fed (incl. poison edit)
 
 
 class StreamingEngine:
@@ -190,7 +192,8 @@ class StreamingEngine:
         self._pending: Optional[_InFlight] = None
         self._poison_recorded: set = set()
         self.chunk_walls: List[float] = []   # per-step wall times (latency)
-        self.events: List[dict] = []
+        self.events = RingLog(faults.event_log_cap
+                              if faults is not None else None)
 
         self.faults = faults
         if faults is not None:
@@ -201,23 +204,46 @@ class StreamingEngine:
                 cfg=FaultConfig(max_retries=faults.max_retries,
                                 backoff_s=faults.backoff_s,
                                 deadline_s=faults.resolve_deadline_s(chunk),
-                                heartbeat_path=faults.heartbeat_path),
+                                heartbeat_path=faults.heartbeat_path,
+                                event_log_cap=faults.event_log_cap),
                 fail_schedule=faults.make_fail_schedule())
+            # §14 recovery runtime: materialise the rung ladder for this
+            # deployment (die-mesh rungs when a two-level mesh is installed)
+            # and track fault-domain health against it
+            from ..launch.mesh import current_die_mesh
+            self._rungs = build_rungs(
+                self.backend, n_layers=cfg.n_layers, n_h=cfg.lstm_hidden,
+                die_mesh=current_die_mesh(), n_x=cfg.lstm_inputs,
+                T=chunk, batch=max_streams)
+            if self._rungs[0].backend != self.backend:
+                self._rungs = build_rungs(
+                    self.backend, n_layers=cfg.n_layers,
+                    n_h=cfg.lstm_hidden, n_x=cfg.lstm_inputs,
+                    T=chunk, batch=max_streams)
+            self._tracker: Optional[MeshHealthTracker] = MeshHealthTracker(
+                n_domains=self._rungs[0].need,
+                hysteresis=faults.promote_hysteresis)
         else:
             self._guard = False
             self._ckpt = None
             self._runner = None
+            self._rungs = ()
+            self._tracker = None
+        self._rung_idx = 0
+        self._healed_steps: set = set()
+        self._last_commit: Optional[dict] = None   # canary replay material
+        from ..core.systolic import current_mesh
+        self._home_mesh = current_mesh()   # re-installed on mesh promotions
         self._build_fwd()
 
-    def _build_fwd(self):
-        """(Re)build the jitted packed chunk call for the CURRENT backend.
-
-        Called at construction and after every ladder degradation.  The
-        non-finite guard is fused into the same jit (one reduction over the
-        new states, no extra dispatch); with the guard off an all-ones
-        constant is returned, so the clean path's arithmetic is unchanged.
-        """
-        cfg, guard = self.cfg, self._guard
+    def _make_fwd(self, cfg):
+        """Jitted packed chunk call for ``cfg``'s backend.  The non-finite
+        guard is fused into the same jit (one reduction over the new
+        states, no extra dispatch); with the guard off an all-ones constant
+        is returned, so the clean path's arithmetic is unchanged.  Also the
+        factory the promotion canary uses to build the CANDIDATE backend's
+        call without touching the incumbent's."""
+        guard = self._guard
 
         def fwd(params, states, frames, valid):
             lp, new_states = chipmunk_net.stream_forward(
@@ -228,7 +254,13 @@ class StreamingEngine:
                 finite = jnp.ones((frames.shape[0],), bool)
             return lp, new_states, finite
 
-        self._fwd = jax.jit(fwd)
+        return jax.jit(fwd)
+
+    def _build_fwd(self):
+        """(Re)build the jitted packed chunk call for the CURRENT backend.
+        Called at construction and after every rung change (degradation or
+        promotion)."""
+        self._fwd = self._make_fwd(self.cfg)
 
     # ------------------------------------------------------------ admission
     def submit(self, frames: np.ndarray, sid: Optional[int] = None,
@@ -358,32 +390,57 @@ class StreamingEngine:
     def _record(self, kind: str, **info) -> None:
         self.events.append({'kind': kind, 'step': self._step_idx, **info})
 
+    def _install_rung_mesh(self, rung) -> None:
+        """Point the process mesh registry at ``rung``'s topology: the
+        healthy dies' flattened submesh for a die rung, the construction-
+        time home mesh for a meshless systolic rung, no mesh for a flat
+        rung.  Placement only — the §7 contract keeps outputs bit-equal."""
+        from ..core import systolic
+        if rung.n_dies is not None:
+            from ..launch.mesh import current_die_mesh
+            dm = current_die_mesh()
+            use = self._tracker.healthy[:rung.n_dies]
+            systolic.install_mesh(dm.submesh(use))
+        elif rung.backend.endswith('_systolic'):
+            systolic.install_mesh(self._home_mesh)
+        else:
+            systolic.clear_mesh()
+
     def _on_engine_fault(self, exc: BaseException, attempt: int) -> None:
         """Between a failed chunk attempt and its retry: transient faults
-        just retry; an ``EngineFailure`` degrades the backend one rung down
-        ``core.lstm.DEGRADATION_LADDER``, uninstalls a broken mesh, and
-        elastically re-places the packed state cache on the surviving
+        (including ``EngineFailure(transient=True)``) just retry; a
+        permanent ``EngineFailure`` marks its fault domain dead in the
+        health tracker and degrades to the highest rung the surviving
+        capacity supports (at least one rung down) — re-forming the die
+        mesh on the healthy dies, or uninstalling a broken flat mesh —
+        and elastically re-places the packed state cache on the surviving
         topology (bit-preserving host round-trip) before the retry
-        recomputes the SAME chunk — no stream loses state or frames."""
-        if not isinstance(exc, EngineFailure):
+        recomputes the SAME chunk.  No stream loses state or frames."""
+        if not isinstance(exc, EngineFailure) or exc.transient:
             return                          # transient: plain retry
-        from ..core.lstm import next_backend_down
-        if self.backend.endswith('_systolic'):
-            # dead engine invalidates the installed topology; dispatch must
-            # not re-pick a mesh backend on the retry
-            from ..core import systolic
-            systolic.clear_mesh()
-        nxt = next_backend_down(self.backend)
-        if nxt is None:
+        killed = self._tracker.fail(self._step_idx, domain=exc.domain,
+                                    n_dead=exc.n_dead)
+        domain = killed[0] if killed else exc.domain
+        n = self._tracker.n_healthy
+        supported = next(
+            (i for i, r in enumerate(self._rungs) if r.need <= n),
+            len(self._rungs) - 1)
+        target = max(self._rung_idx + 1, supported)
+        if target >= len(self._rungs):
             self._record('degrade_exhausted', backend=self.backend,
                          n_dead=exc.n_dead)
             return                          # bottom of the ladder: retry as-is
-        prev, self.backend = self.backend, nxt
-        self.cfg = self.cfg.replace(lstm_backend=nxt)
+        prev = self.backend
+        rung = self._rungs[target]
+        self._install_rung_mesh(rung)
+        self.backend = rung.backend
+        self.cfg = self.cfg.replace(lstm_backend=rung.backend)
         self.states = elastic_replace(self.states)
         self._build_fwd()
-        self._record('degrade', from_backend=prev, to_backend=nxt,
-                     n_dead=exc.n_dead)
+        self._rung_idx = target
+        self._last_commit = None            # stale incumbent evidence
+        self._record('degrade', from_backend=prev, to_backend=rung.backend,
+                     n_dead=exc.n_dead, domain=domain)
 
     def _quarantine(self, active, finite, new_states) -> tuple:
         """Quarantine every active slot whose new carried state went
@@ -459,7 +516,8 @@ class StreamingEngine:
                          active=[(i, s) for i, s, _ in plan],
                          valid=valid, frames_j=frames_j, valid_j=valid_j,
                          poison_slot=poison, lp=lp, new_states=st,
-                         finite=fin, t_launch=t0, chunk_len=chunk_len)
+                         finite=fin, t_launch=t0, chunk_len=chunk_len,
+                         states_in=states_in)
 
     def _commit(self, rec: _InFlight) -> bool:
         """Resolve one in-flight chunk and commit it: block on the device
@@ -523,7 +581,19 @@ class StreamingEngine:
                 sess.t_done = time.time()
                 self.sched.finish(i)
         self._step_idx += 1
-        return not (quarantined or faulted)
+        clean = not (quarantined or faulted)
+        if clean and self._tracker is not None and self._rung_idx > 0:
+            # canary replay material: host copies of exactly what this
+            # commit consumed and produced (captured only while degraded —
+            # the home rung pays nothing)
+            self._last_commit = {
+                'states_in': jax.tree.map(np.asarray, rec.states_in),
+                'frames': np.asarray(rec.frames_j),
+                'valid': np.asarray(rec.valid_j),
+                'lp': host,
+                'new_states': jax.tree.map(np.asarray, new_states),
+            }
+        return clean
 
     def _sync(self) -> None:
         """Async control-plane barrier: commit the in-flight chunk, if any.
@@ -533,6 +603,118 @@ class StreamingEngine:
         if self._pending is not None:
             rec, self._pending = self._pending, None
             self._commit(rec)
+
+    # ------------------------------------------------- recovery / promotion
+    def _poll_recovery(self) -> None:
+        """Top-of-step recovery poll (§14): apply any scheduled heals
+        (``faults.recover_at``, each engine step at most once) to the
+        health tracker, then attempt a canary-validated promotion when
+        capacity and the hysteresis window allow.  Keyed on the COMMITTED
+        step index in both dispatch modes, so sync and async replay the
+        same recovery trail."""
+        if self._tracker is None:
+            return
+        heal_n = self.faults.recover_at.get(self._step_idx)
+        if heal_n and self._step_idx not in self._healed_steps:
+            self._healed_steps.add(self._step_idx)
+            revived = self._tracker.heal(self._step_idx, heal_n)
+            self._record('heal', domains=list(revived),
+                         n_healed=int(heal_n))
+        if self._rung_idx > 0:
+            self._maybe_promote()
+
+    def _canary_equal(self, a, b) -> bool:
+        """Canary comparison: bitwise by default (``np.array_equal`` on host
+        copies — the §6/§9 rungs of one arithmetic class really are
+        bit-equal), or allclose under an explicit ``canary_rtol`` opt-in
+        for cross-class promotions."""
+        rtol = self.faults.canary_rtol
+        if rtol is None:
+            return bool(np.array_equal(np.asarray(a), np.asarray(b)))
+        return bool(np.allclose(np.asarray(a), np.asarray(b), rtol=rtol,
+                                atol=0.0))
+
+    def _maybe_promote(self) -> None:
+        """Attempt one climb-back step up the rung ladder (§14).
+
+        Preconditions: the candidate rung (one above current) is within the
+        tracker's healthy capacity, the hysteresis window is open, and —
+        when the canary is armed — a committed chunk exists to validate
+        against.  The pipeline is drained first (``_sync``), so a promotion
+        NEVER lands mid-flight; the drain may itself fault or move rungs,
+        so every precondition is re-checked after it.
+
+        Canary protocol: install the candidate topology, build the
+        candidate backend's jitted call, replay the last committed chunk as
+        a SHADOW against a copy of the committed input state, and compare
+        the replayed log-probs AND new states against the incumbent's
+        committed results on the host.  Equal -> promote: re-shard the
+        packed session cache onto the (larger) candidate topology
+        (``elastic_replace`` — the upward inverse of the degrade path's
+        shrink), adopt the candidate call, and re-arm the hysteresis
+        window.  Unequal -> reject: restore the incumbent topology
+        untouched, emit ``promote_rejected``, and double the backoff.
+        Commit-on-success end to end: no engine-visible state changes
+        unless the canary passes."""
+        step = self._step_idx
+        if (self._tracker.n_healthy < self._rungs[self._rung_idx - 1].need
+                or not self._tracker.can_promote(step)):
+            return
+        if self.faults.canary and self._last_commit is None:
+            return                  # nothing committed to validate against
+        self._sync()                # promotion never lands mid-flight
+        if self._rung_idx == 0:
+            return
+        cand_idx = self._rung_idx - 1
+        cand = self._rungs[cand_idx]
+        if (self._tracker.n_healthy < cand.need
+                or not self._tracker.can_promote(self._step_idx)):
+            return
+        lc = self._last_commit
+        if self.faults.canary and lc is None:
+            return
+        from ..core import systolic
+        prev_mesh = systolic.current_mesh()
+        self._install_rung_mesh(cand)
+        cand_cfg = self.cfg.replace(lstm_backend=cand.backend)
+        cand_fwd = self._make_fwd(cand_cfg)
+        if self.faults.canary:
+            self._record('promote_canary', from_backend=self.backend,
+                         to_backend=cand.backend, chunk=lc['lp'].shape[-2]
+                         if lc['lp'].ndim >= 2 else 0)
+            states_in = jax.tree.map(jnp.asarray, lc['states_in'])
+            lp, st, _ = cand_fwd(self.params, states_in,
+                                 jnp.asarray(lc['frames']),
+                                 jnp.asarray(lc['valid']))
+            ok = self._canary_equal(jax.block_until_ready(lp), lc['lp'])
+            ref_leaves = jax.tree.leaves(lc['new_states'])
+            got_leaves = jax.tree.leaves(st)
+            ok = ok and len(ref_leaves) == len(got_leaves) and all(
+                self._canary_equal(g, r)
+                for g, r in zip(got_leaves, ref_leaves))
+            if not ok:
+                # squash: restore the incumbent topology, nothing committed
+                if prev_mesh is not None:
+                    systolic.install_mesh(prev_mesh)
+                else:
+                    systolic.clear_mesh()
+                self._tracker.note_reject(self._step_idx)
+                self._record('promote_rejected', from_backend=self.backend,
+                             to_backend=cand.backend,
+                             backoff=self._tracker.backoff)
+                return
+        prev = self.backend
+        self.backend = cand.backend
+        self.cfg = cand_cfg
+        self.states = elastic_replace(self.states)
+        self._fwd = cand_fwd
+        self._rung_idx = cand_idx
+        if cand_idx == 0:
+            self._last_commit = None    # home rung: stop paying capture
+        self._tracker.note_promote(self._step_idx)
+        self._record('promote', from_backend=prev, to_backend=cand.backend,
+                     n_dies=cand.n_dies,
+                     healthy=list(self._tracker.healthy))
 
     def _maybe_priority_preempt(self) -> None:
         """§11 priority admission: when every slot is busy and a strictly
@@ -644,6 +826,7 @@ class StreamingEngine:
         chunk is recomputed from unchanged state.  Returns False when there
         was nothing to do (the drain-loop exit condition).
         """
+        self._poll_recovery()
         if self.async_dispatch:
             return self._step_async()
         self._maybe_priority_preempt()
@@ -688,6 +871,9 @@ class StreamingEngine:
             misses = self._policy.misses
         else:
             misses = 0
+        dropped = self.events.dropped
+        if self._runner is not None:
+            dropped += self._runner.events.dropped
         return {
             'streams': len(done),
             'frames': frames,
@@ -700,7 +886,12 @@ class StreamingEngine:
             'chunk_len': self._next_chunk_len(),
             'events': events,
             'event_counts': counts,
+            'events_dropped': dropped,
             'deadline_misses': misses,
+            'rung': (self._rungs[self._rung_idx].label()
+                     if self._rungs else self.backend),
+            'healthy_domains': (list(self._tracker.healthy)
+                                if self._tracker else None),
             'heartbeat': (self._runner.last_heartbeat
                           if self._runner else None),
         }

@@ -114,6 +114,45 @@ def _normalize_fault_schedule(raw):
     }
 
 
+def recovery_schedules():
+    """Strategy for fail -> recover -> fail schedules (§14): permanent
+    engine failures followed by scheduled heals, with the promotion
+    hysteresis drawn too, so replays exercise degrade / heal /
+    promote_canary / promote / promote_rejected / flap paths.  Utterances
+    are long enough that the committed step counter reaches every drawn
+    recovery step (heals are polled at the top of ``step``, keyed on
+    committed steps — a drained engine never heals)."""
+    raw = st.tuples(
+        st.lists(st.integers(48, 96), min_size=2, max_size=3),   # lens
+        st.integers(1, 3),                                       # first fail
+        st.integers(1, 3),                                       # heal gap
+        st.integers(0, 1),                                       # re-fail?
+        st.integers(2, 4),                                       # re-fail gap
+        st.integers(1, 3),                                       # hysteresis
+    )
+    return _mapped(raw, _normalize_recovery_schedule)
+
+
+def _normalize_recovery_schedule(raw):
+    lens, fail1, heal_gap, refail, refail_gap, hysteresis = raw
+    fail_at = {fail1: 1}
+    recover_at = {fail1 + heal_gap: 1}
+    if refail:
+        f2 = fail1 + heal_gap + refail_gap
+        fail_at[f2] = 1
+        recover_at[f2 + heal_gap] = 1
+    return {
+        'lens': list(lens),
+        'priorities': [0] * len(lens),
+        'submit_at': [0] * len(lens),
+        'ops': [],
+        'fail_at': fail_at,
+        'poison_at': {},
+        'recover_at': recover_at,
+        'promote_hysteresis': hysteresis,
+    }
+
+
 def run_schedule(eng, utts, sched, max_steps: int = 400):
     """Replay one schedule to completion; returns ``{sid: (log_probs,
     errored)}``.  Submissions and ops trigger when the engine's committed

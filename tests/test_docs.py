@@ -11,6 +11,8 @@ import pytest
 import repro.core.systolic as systolic_mod
 import repro.kernels.lstm_seq.ops as ops_mod
 import repro.kernels.lstm_seq.stack_ops as stack_ops_mod
+import repro.launch.mesh as launch_mesh_mod
+import repro.runtime.recovery as recovery_mod
 import repro.runtime.serving_faults as serving_faults_mod
 import repro.serving.engine as engine_mod
 import repro.serving.scheduler as scheduler_mod
@@ -23,7 +25,7 @@ from repro.models import chipmunk_net
 
 MODULES = (systolic_mod, ops_mod, stack_ops_mod, engine_mod, scheduler_mod,
            session_mod, serving_faults_mod, schedule_mod, shmoo_mod,
-           autotune_mod)
+           autotune_mod, recovery_mod, launch_mesh_mod)
 
 # Entry point -> substring its docstring must contain (the numerics contract:
 # the reference the function is bit-identical / allclose to, or an explicit
@@ -87,6 +89,13 @@ CONTRACTS = {
     autotune_mod.replay_check: 'deterministic',
     shmoo_mod.write_shmoo_csv: 'shared',
     engine_mod.tuned_chunk_ceiling: 'scheduling-only',
+    # elastic recovery runtime contracts (DESIGN.md §14)
+    lstm_core.next_backend_up: 'dispatch',
+    recovery_mod.build_rungs: 'selection',
+    recovery_mod.MeshHealthTracker: 'control-plane',
+    launch_mesh_mod.DieMesh.submesh: 'bit-equal',
+    launch_mesh_mod.install_die_topology: 'numerics are unchanged',
+    engine_mod.StreamingEngine.stats: 'snapshot',
 }
 
 

@@ -226,3 +226,38 @@ def test_staged_in_stage_measured_bracket():
                                          in_stage_batched=True))
     Lb = 2
     assert 1.0 / (Lb + 1) <= measured <= pred, (measured, pred)
+
+
+# ---------------------------------------------- die-aware ladder rungs (§14)
+def test_die_staged_reduces_to_staged_without_die_boundary():
+    """``dies<=1`` (or a zero hop charge) is exactly the single-die staged
+    model — the die generalisation adds ONLY the boundary hop term."""
+    T = 128
+    cfg3 = pm.TileConfig(3, 5, 5)
+    base = pm.staged_wavefront_cycles(pm.CTC_3L_421H, cfg3, T, chunk=16)
+    assert pm.die_staged_wavefront_cycles(pm.CTC_3L_421H, cfg3, T, dies=1,
+                                          chunk=16) == pytest.approx(base)
+    assert pm.die_staged_wavefront_cycles(pm.CTC_3L_421H, cfg3, T, dies=3,
+                                          chunk=16, hop_cpb=0.0) == \
+        pytest.approx(base)
+    # a real hop charge can only slow the pipeline down (bottleneck max)
+    with_hop = pm.die_staged_wavefront_cycles(pm.CTC_3L_421H, cfg3, T,
+                                              dies=3, chunk=16)
+    assert with_hop >= base
+    with pytest.raises(ValueError):
+        pm.die_staged_wavefront_cycles(pm.CTC_3L_421H, cfg3, T, dies=2)
+
+
+def test_die_rung_frame_estimates_are_monotone():
+    """The graves-3x25 ladder has REAL intermediate rungs: per-frame time
+    grows monotonically as dies fail (75 -> 50 -> 25 engines), every
+    multi-die rung still beats the paper deadline at V_MAX, and the hop
+    charge never inverts the ordering."""
+    frames = [pm.die_rung_frame_s(topology=(3, 1, 5, 5), healthy_dies=k)
+              for k in (3, 2, 1)]
+    assert frames[0] < frames[1] < frames[2], frames
+    assert frames[0] < pm.FRAME_PERIOD_S and frames[1] < pm.FRAME_PERIOD_S
+    # all-dies-healthy at stage_per_die=1 is the classic staged estimate
+    # plus only the die-boundary hops
+    assert pm.die_rung_frame_s(healthy_dies=3, hop_cpb=0.0) == \
+        pytest.approx(pm.staged_realtime_frame_s(v=pm.V_MAX, T=100))

@@ -1,0 +1,524 @@
+"""Elastic recovery runtime (DESIGN.md §14).
+
+The contracts under test:
+
+  * ``MeshHealthTracker`` — deterministic LIFO fail/heal attribution,
+    exponential-backoff hysteresis (flaps and rejected canaries double it,
+    promotions re-arm it), never more than one promotion per window;
+  * ``build_rungs`` — the materialised ladder: flat ladders walk
+    ``DEGRADATION_LADDER``; a two-level die mesh contributes real
+    intermediate rungs (same staged backend on fewer dies) above the flat
+    tail, each checked against the real admission rule;
+  * the engine round trip — degrade -> heal -> canary -> promote lands the
+    serving engine back on its home rung with every stream's outputs
+    BIT-EQUAL to an uninterrupted run, sync and async alike, and zero
+    stream loss; promotions never land mid-flight; a rejected canary
+    leaves engine state untouched and doubles the backoff;
+  * checkpoint/resume composes with promotion: rows saved while degraded
+    resume bit-equal after the engine has climbed back, and a
+    ``CheckpointManager`` manifest written under the degraded placement
+    validates (checksums) when restored under the promoted one;
+  * the bounded event ring (``RingLog``) drops oldest-first and surfaces
+    the drop count through ``StreamingEngine.stats()``.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _subproc import run_with_devices
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import lstm, quant, systolic
+from repro.kernels.lstm_seq import (lstm_stack_seq_quantized,
+                                    lstm_stack_seq_quantized_auto)
+from repro.models import chipmunk_net
+from repro.runtime import (EngineFailure, MeshHealthTracker, RingLog, Rung,
+                           ServingFaultConfig, build_rungs)
+from repro.serving import StreamingEngine
+
+CFG = configs.get_smoke_config('chipmunk-ctc')
+PARAMS, _ = chipmunk_net.init(CFG, jax.random.PRNGKey(0))
+
+
+def _utts(n=2, frames=100, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((frames, CFG.lstm_inputs))
+            .astype(np.float32) * 0.5 for _ in range(n)]
+
+
+def _engine(backend='pallas_seq', faults=None, async_mode=False, slots=2,
+            chunk=8):
+    cfg = CFG.replace(lstm_backend=backend)
+    return StreamingEngine(cfg, PARAMS, max_streams=slots, chunk=chunk,
+                           async_dispatch=async_mode, faults=faults)
+
+
+def _drain(eng, utts):
+    for i, u in enumerate(utts):
+        eng.submit(u, sid=i)
+    return {s.sid: s.full_log_probs() for s in eng.run()}
+
+
+# ----------------------------------------------------- tracker unit contract
+def test_tracker_fail_heal_lifo_and_attribution():
+    tr = MeshHealthTracker(n_domains=3, hysteresis=2)
+    assert tr.healthy == (0, 1, 2) and tr.n_healthy == 3
+    assert tr.fail(0) == (2,)                  # unattributed: LIFO-highest
+    assert tr.fail(1, domain=0) == (0,)        # attributed failure
+    assert tr.healthy == (1,)
+    assert tr.heal(2) == (0,)                  # LIFO: most recent first
+    assert tr.heal(3) == (2,)
+    assert tr.healthy == (0, 1, 2)
+    assert tr.heal(4) == ()                    # nothing left to revive
+    # n_dead spills from the attributed domain onto LIFO picks
+    assert tr.fail(5, domain=1, n_dead=2) == (1, 2)
+    assert tr.healthy == (0,)
+
+
+def test_tracker_hysteresis_flap_and_reject_double_backoff():
+    tr = MeshHealthTracker(n_domains=1, hysteresis=4, max_backoff=16)
+    tr.fail(0)
+    assert tr.backoff == 4 and not tr.can_promote(3) and tr.can_promote(4)
+    tr.heal(4)
+    tr.note_promote(4)
+    assert not tr.can_promote(7)               # one promotion per window
+    # failure INSIDE the post-promotion window is a flap: backoff doubles
+    tr.fail(5)
+    assert tr.backoff == 8 and not tr.can_promote(12) and tr.can_promote(13)
+    tr.heal(13)
+    # a rejected canary also doubles (the candidate is provably not ready)
+    tr.note_reject(13)
+    assert tr.backoff == 16 and not tr.can_promote(28)
+    tr.note_reject(29)
+    assert tr.backoff == 16, 'backoff must cap at max_backoff'
+    # a failure OUTSIDE the window resets the backoff to the floor
+    tr.note_promote(50)
+    tr.fail(99)
+    assert tr.backoff == 4
+
+
+def test_tracker_best_rung_policy():
+    rungs = (Rung('a', n_dies=2, need=2), Rung('b', n_dies=1, need=1),
+             Rung('c', need=0))
+    tr = MeshHealthTracker(n_domains=2, hysteresis=2)
+    assert tr.best_rung(rungs, current=0) == 0
+    tr.fail(0)
+    assert tr.best_rung(rungs, current=0) == 1     # degraded direction
+    tr.heal(1)
+    assert tr.best_rung(rungs, current=1, step=1) == 1, 'window still shut'
+    assert tr.best_rung(rungs, current=1, step=2) == 0
+    tr.fail(3, n_dead=2)
+    assert tr.best_rung(rungs, current=0) == 2
+    tr.heal(9, n_healed=2)
+    # promotions climb ONE rung at a time (each must canary individually)
+    assert tr.best_rung(rungs, current=2, step=9) == 1
+
+
+# -------------------------------------------------------- rung construction
+def test_build_rungs_flat_ladders():
+    rungs = build_rungs('pallas_seq_fused', n_layers=2, n_h=32)
+    assert [r.backend for r in rungs] == \
+        ['pallas_seq_fused', 'pallas_seq', 'xla_scan']
+    assert [r.need for r in rungs] == [2, 1, 0]
+    assert all(r.n_dies is None for r in rungs)
+    assert rungs[0].label() == 'pallas_seq_fused'
+    assert build_rungs('xla_scan', n_layers=2, n_h=32) == \
+        (Rung('xla_scan', need=0),)
+    top = build_rungs('pallas_seq_fused_systolic', n_layers=2, n_h=32)
+    assert [r.backend for r in top] == list(lstm.DEGRADATION_LADDER)
+
+
+def test_die_topology_requires_enough_devices():
+    from repro.launch.mesh import make_die_topology
+    with pytest.raises(ValueError, match='needs'):
+        make_die_topology('graves-3x25')       # 75 engines > host devices
+
+
+# ------------------------------------------------------- bounded event ring
+def test_ringlog_bounds_drops_and_list_compat():
+    log = RingLog(cap=3)
+    log.extend([{'kind': 'a'}, {'kind': 'b'}, {'kind': 'c'}])
+    assert log.dropped == 0 and len(log) == 3
+    log.append({'kind': 'd'})
+    assert log.dropped == 1
+    assert log == [{'kind': 'b'}, {'kind': 'c'}, {'kind': 'd'}]
+    assert log[0] == {'kind': 'b'} and log[-1] == {'kind': 'd'}
+    assert log[1:] == [{'kind': 'c'}, {'kind': 'd'}]
+    assert log + [{'kind': 'e'}] == [{'kind': 'b'}, {'kind': 'c'},
+                                     {'kind': 'd'}, {'kind': 'e'}]
+    assert [{'kind': 'z'}] + log == [{'kind': 'z'}, {'kind': 'b'},
+                                     {'kind': 'c'}, {'kind': 'd'}]
+    unbounded = RingLog(None)
+    unbounded.extend(range(10_000))
+    assert len(unbounded) == 10_000 and unbounded.dropped == 0
+    with pytest.raises(ValueError):
+        RingLog(cap=0)
+
+
+def test_engine_stats_surface_ring_drops():
+    fc = ServingFaultConfig(fail_at={1: 1}, recover_at={3: 1},
+                            promote_hysteresis=2, backoff_s=0.0,
+                            event_log_cap=2)
+    eng = _engine(faults=fc)
+    _drain(eng, _utts(2, frames=64))
+    st = eng.stats()
+    assert st['events_dropped'] > 0
+    assert len(eng.events) <= 2
+    # retained events are the NEWEST (oldest-first eviction)
+    assert eng.events[-1]['kind'] == 'promote'
+
+
+# ------------------------------------ tentpole: flat climb-back round trip
+def test_promote_roundtrip_bit_equal_sync_and_async():
+    """fail -> degrade -> heal -> promote_canary -> promote lands the engine
+    back on its home rung; every stream's outputs are bit-equal to an
+    uninterrupted run; sync and async replay the identical recovery trail."""
+    utts = _utts(2, frames=100)
+    ref = _drain(_engine(), utts)
+    stats = {}
+    for mode in (False, True):
+        fc = ServingFaultConfig(fail_at={1: 1}, recover_at={4: 1},
+                                promote_hysteresis=2, backoff_s=0.0)
+        eng = _engine(faults=fc, async_mode=mode)
+        got = _drain(eng, utts)
+        assert len(got) == len(ref), 'zero stream loss'
+        for sid in ref:
+            np.testing.assert_array_equal(ref[sid], got[sid],
+                                          err_msg=f'mode={mode} sid={sid}')
+        st = eng.stats()
+        assert st['backend'] == 'pallas_seq' and st['rung'] == 'pallas_seq'
+        for kind in ('fault', 'degrade', 'heal', 'promote_canary', 'promote'):
+            assert st['event_counts'].get(kind, 0) == 1, (mode, kind, st)
+        trail = [e['kind'] for e in st['events']
+                 if e['kind'] in ('degrade', 'heal', 'promote_canary',
+                                  'promote')]
+        assert trail == ['degrade', 'heal', 'promote_canary', 'promote']
+        stats[mode] = st['event_counts']
+    assert stats[False] == stats[True], 'async must replay the sync trail'
+
+
+def test_promote_event_payload_and_healthy_capacity():
+    fc = ServingFaultConfig(fail_at={1: 1}, recover_at={4: 1},
+                            promote_hysteresis=2, backoff_s=0.0)
+    eng = _engine(faults=fc)
+    _drain(eng, _utts(2, frames=80))
+    evs = {e['kind']: e for e in eng.stats()['events']
+           if e['kind'] in ('degrade', 'heal', 'promote_canary', 'promote')}
+    assert evs['degrade']['from_backend'] == 'pallas_seq'
+    assert evs['degrade']['to_backend'] == 'xla_scan'
+    assert evs['heal']['domains'] == [0] and evs['heal']['n_healed'] == 1
+    assert evs['promote_canary']['to_backend'] == 'pallas_seq'
+    assert evs['promote_canary']['chunk'] > 0
+    assert evs['promote']['healthy'] == [0]
+    assert eng.stats()['healthy_domains'] == [0]
+
+
+def test_heal_without_hysteresis_window_defers_promotion():
+    """Healed capacity alone is not enough: the promotion waits for the
+    hysteresis window to elapse before the canary even runs."""
+    fc = ServingFaultConfig(fail_at={1: 1}, recover_at={2: 1},
+                            promote_hysteresis=6, backoff_s=0.0)
+    eng = _engine(faults=fc)
+    _drain(eng, _utts(2, frames=100))
+    evs = [(e['kind'], e['step']) for e in eng.stats()['events']
+           if e['kind'] in ('heal', 'promote')]
+    heal_step = dict(evs)['heal']
+    promote_step = dict(evs)['promote']
+    assert heal_step == 2
+    assert promote_step >= 1 + 6, 'window = fail step + hysteresis'
+
+
+def test_flapping_engine_backs_off_geometrically():
+    """An engine that dies right after each re-admission is a flap: the
+    backoff doubles per flap, promotions are spaced at least one window
+    apart, and the stream still completes bit-equal."""
+    utts = _utts(2, frames=100)
+    ref = _drain(_engine(), utts)
+    fc = ServingFaultConfig(fail_at={1: 1, 4: 1, 9: 1},
+                            recover_at={3: 1, 6: 1, 11: 1},
+                            promote_hysteresis=2, backoff_s=0.0)
+    eng = _engine(faults=fc)
+    got = _drain(eng, utts)
+    for sid in ref:
+        np.testing.assert_array_equal(ref[sid], got[sid])
+    st = eng.stats()
+    promotes = [e['step'] for e in st['events'] if e['kind'] == 'promote']
+    assert promotes == [3, 8], st['events']
+    assert st['event_counts']['degrade'] == 3
+    # the third flap pushed the window past the stream end: still degraded
+    assert st['backend'] == 'xla_scan'
+    assert eng._tracker.backoff == 8, 'two flaps: 2 -> 4 -> 8'
+    gaps = np.diff(promotes)
+    assert (gaps >= fc.promote_hysteresis).all(), \
+        'never more than one promotion per hysteresis window'
+
+
+def test_promotion_never_lands_mid_flight():
+    """Async dispatch: every promote/canary/reject event fires only with
+    the pipeline drained (the in-flight chunk committed first)."""
+    fc = ServingFaultConfig(fail_at={1: 1}, recover_at={4: 1},
+                            promote_hysteresis=2, backoff_s=0.0)
+    eng = _engine(faults=fc, async_mode=True)
+    seen = []
+    orig = eng._record
+
+    def checked(kind, **info):
+        if kind in ('promote_canary', 'promote', 'promote_rejected'):
+            assert eng._pending is None, f'{kind} fired mid-flight'
+            seen.append(kind)
+        orig(kind, **info)
+
+    eng._record = checked
+    _drain(eng, _utts(2, frames=100))
+    assert 'promote' in seen
+
+
+def test_rejected_canary_leaves_engine_untouched():
+    """Force a canary mismatch (monkeypatched comparator): the engine stays
+    on its degraded rung with backend/fwd/states untouched, emits
+    ``promote_rejected``, doubles the backoff — and still finishes every
+    stream bit-equal to the all-xla_scan suffix it actually ran."""
+    fc = ServingFaultConfig(fail_at={1: 1}, recover_at={4: 1},
+                            promote_hysteresis=2, backoff_s=0.0)
+    eng = _engine(faults=fc)
+    eng._canary_equal = lambda a, b: False
+    got = _drain(eng, _utts(2, frames=100))
+    assert len(got) == 2
+    st = eng.stats()
+    assert st['backend'] == 'xla_scan', 'reject must not promote'
+    assert st['event_counts'].get('promote', 0) == 0
+    rejects = [e for e in st['events'] if e['kind'] == 'promote_rejected']
+    assert rejects, st['events']
+    assert rejects[0]['backoff'] == 4, 'reject doubles the 2-step window'
+    assert [r['backoff'] for r in rejects] == \
+        sorted(r['backoff'] for r in rejects), 'monotone growth'
+
+
+def test_canary_disabled_promotes_without_replay():
+    """``canary=False`` opts out of the shadow replay: the promotion lands
+    on capacity + hysteresis alone (no promote_canary event), and outputs
+    remain bit-equal (the rungs agree on this path)."""
+    utts = _utts(2, frames=100)
+    ref = _drain(_engine(), utts)
+    fc = ServingFaultConfig(fail_at={1: 1}, recover_at={4: 1},
+                            promote_hysteresis=2, canary=False,
+                            backoff_s=0.0)
+    eng = _engine(faults=fc)
+    got = _drain(eng, utts)
+    for sid in ref:
+        np.testing.assert_array_equal(ref[sid], got[sid])
+    st = eng.stats()
+    assert st['backend'] == 'pallas_seq'
+    assert st['event_counts'].get('promote', 0) == 1
+    assert st['event_counts'].get('promote_canary', 0) == 0
+
+
+# ------------------------- satellite: checkpoint across promotion boundary
+def test_checkpoint_resume_across_promotion_boundary(tmp_path):
+    """Rows checkpointed while DEGRADED resume bit-equal in a fresh engine
+    that never degraded: the §10 checkpoint contract is rung-independent,
+    so preemption/restart composes with the climb-back."""
+    utts = _utts(2, frames=100)
+    ref = _drain(_engine(), utts)
+    fc = ServingFaultConfig(fail_at={1: 1}, recover_at={4: 1},
+                            promote_hysteresis=2, backoff_s=0.0,
+                            checkpoint_dir=str(tmp_path))
+    eng = _engine(faults=fc)
+    for i, u in enumerate(utts):
+        eng.submit(u, sid=i)
+    for _ in range(3):
+        eng.step()                      # degraded at step 1, still climbing
+    assert eng.stats()['backend'] == 'xla_scan'
+    sess = eng.preempt(0, requeue=False)
+    cursor = sess.cursor
+    assert cursor > 0
+    eng.run()                           # stream 1 finishes; engine promotes
+    assert eng.stats()['backend'] == 'pallas_seq'
+    np.testing.assert_array_equal(ref[1],
+                                  eng.sched.done[0].full_log_probs())
+    # fresh engine on the HOME rung resumes the degraded-era checkpoint
+    fresh = _engine(faults=ServingFaultConfig(checkpoint_dir=str(tmp_path),
+                                              backoff_s=0.0))
+    resumed = fresh.resume_from_checkpoint(utts[0], sid=0)
+    assert resumed.cursor == cursor
+    fresh.run()
+    np.testing.assert_array_equal(ref[0][cursor:],
+                                  resumed.full_log_probs())
+
+
+def test_manifest_validates_across_placement_change(tmp_path):
+    """A ``CheckpointManager`` manifest written under the degraded
+    placement restores with checksum validation under the promoted one —
+    the §5 elastic-restore contract applied to the packed serving cache."""
+    fc = ServingFaultConfig(fail_at={1: 1}, recover_at={4: 1},
+                            promote_hysteresis=2, backoff_s=0.0)
+    eng = _engine(faults=fc)
+    for i, u in enumerate(_utts(2, frames=100)):
+        eng.submit(u, sid=i)
+    for _ in range(3):
+        eng.step()
+    assert eng.stats()['backend'] == 'xla_scan'
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, eng.states, blocking=True)
+    saved = jax.tree.map(np.asarray, eng.states)
+    eng.run()
+    assert eng.stats()['backend'] == 'pallas_seq'   # placement changed back
+    restored = mgr.restore(eng.states, step=3, validate=True)
+    for a, b in zip(jax.tree.leaves(saved), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+# ----------------------------------- satellite: int8 opaque-carry climbing
+def test_int8_opaque_carry_survives_rung_flips():
+    """Degrade-then-promote at the kernel level: the quantized stack flips
+    fused -> layerwise -> fused across chunk boundaries with a host
+    round-trip of the opaque ``(h_q, c_q)`` carry at each flip; emitted
+    codes stay bit-identical to the monolithic fused call (the int8 rungs
+    are one arithmetic class, which is what lets a canary pass)."""
+    n_x = n_h = 16
+    stack = lstm.init_lstm_stack(jax.random.PRNGKey(5), n_x, n_h, 2,
+                                 n_out=None)
+    qps = [systolic.quantize_packed(systolic.pack_lstm(
+        lp, systolic.SystolicPlan(n_x if l == 0 else n_h, n_h, 16)))
+        for l, lp in enumerate(stack.layers)]
+    T, B = 18, 2
+    xs = jax.random.normal(jax.random.PRNGKey(3), (T, B, n_x)) * 0.5
+    xs_q = quant.quantize(xs, quant.STATE_FMT)
+    ref = np.asarray(lstm_stack_seq_quantized(qps, xs_q, interpret=True))
+    bounds = [0, 6, 12, T]
+    backends = ['fused', 'layerwise', 'fused']   # degrade, then promote
+    st_c, outs = None, []
+    for (lo, hi), backend in zip(zip(bounds[:-1], bounds[1:]), backends):
+        o, st_c = lstm_stack_seq_quantized_auto(
+            qps, xs_q[lo:hi], state=st_c, return_state=True,
+            interpret=True, backend=backend)
+        st_c = tuple(jnp.asarray(np.asarray(p)) for p in st_c)
+        outs.append(np.asarray(o))
+    np.testing.assert_array_equal(np.concatenate(outs), ref)
+
+
+# --------------------------- tentpole: die-mesh chaos end to end (3 devices)
+@pytest.mark.timeout(900)
+def test_die_mesh_chaos_degrade_heal_promote_roundtrip():
+    """Kill one die of a 3-die mesh mid-stream, heal it, climb back: the
+    staged backend re-forms on 2 dies (an intermediate rung, not a flat
+    fallback), the healed die is canary-validated back in, every stream is
+    bit-equal to an uninterrupted 3-die run, and async replays the same
+    trail."""
+    out = run_with_devices("""
+import numpy as np, jax
+from repro import configs
+from repro.launch import mesh as lmesh
+from repro.models import chipmunk_net
+from repro.runtime import ServingFaultConfig, build_rungs
+from repro.serving import StreamingEngine
+
+dm = lmesh.install_die_topology('die-3x1x1')
+cfg = configs.get_smoke_config('chipmunk-ctc').replace(
+    n_layers=3, lstm_backend='pallas_seq_fused_systolic')
+params, _ = chipmunk_net.init(cfg, jax.random.PRNGKey(0))
+rungs = build_rungs(cfg.lstm_backend, n_layers=3, n_h=cfg.lstm_hidden,
+                    die_mesh=dm, n_x=cfg.lstm_inputs, T=8, batch=2)
+assert [r.label() for r in rungs] == [
+    'pallas_seq_fused_systolic@3d', 'pallas_seq_fused_systolic@2d',
+    'pallas_seq_fused', 'pallas_seq', 'xla_scan'], rungs
+assert [r.need for r in rungs] == [3, 2, 0, 0, 0]
+
+rng = np.random.default_rng(0)
+utts = [rng.standard_normal((88, cfg.lstm_inputs)).astype(np.float32) * 0.5
+        for _ in range(2)]
+
+def drain(faults, mode):
+    lmesh.install_die_topology('die-3x1x1')
+    eng = StreamingEngine(cfg, params, max_streams=2, chunk=8,
+                          async_dispatch=mode, faults=faults)
+    for i, u in enumerate(utts):
+        eng.submit(u, sid=i)
+    done = {s.sid: s.full_log_probs() for s in eng.run()}
+    return eng, done
+
+_, ref = drain(None, False)
+counts = {}
+for mode in (False, True):
+    fc = ServingFaultConfig(fail_at={2: {'n_dead': 1, 'domain': 2}},
+                            recover_at={5: 1}, promote_hysteresis=2,
+                            backoff_s=0.0)
+    eng, got = drain(fc, mode)
+    assert len(got) == 2, 'zero stream loss'
+    for sid in ref:
+        np.testing.assert_array_equal(ref[sid], got[sid])
+    st = eng.stats()
+    assert st['rung'] == 'pallas_seq_fused_systolic@3d', st['rung']
+    assert st['healthy_domains'] == [0, 1, 2]
+    deg = [e for e in st['events'] if e['kind'] == 'degrade'][0]
+    assert deg['domain'] == 2
+    assert deg['to_backend'] == 'pallas_seq_fused_systolic', deg
+    pro = [e for e in st['events'] if e['kind'] == 'promote'][0]
+    assert pro['n_dies'] == 3 and pro['healthy'] == [0, 1, 2]
+    trail = [e['kind'] for e in st['events'] if e['kind'] in
+             ('degrade', 'heal', 'promote_canary', 'promote')]
+    assert trail == ['degrade', 'heal', 'promote_canary', 'promote'], trail
+    counts[mode] = st['event_counts']
+assert counts[False] == counts[True], counts
+print('CHAOS_OK')
+""", n_devices=3, timeout=880)
+    assert 'CHAOS_OK' in out
+
+
+@pytest.mark.timeout(900)
+def test_die_mesh_cross_class_promotion_rejected_with_backoff():
+    """die-2x1x2: losing a die drops the staged 2-die rung to the
+    LAYERWISE single-die mesh rung — a different arithmetic class, so the
+    climb-back canary deterministically REJECTS (bitwise comparator), the
+    backoff doubles per attempt, and the engine keeps serving on the
+    degraded rung with zero stream loss."""
+    out = run_with_devices("""
+import numpy as np, jax
+from repro import configs
+from repro.launch import mesh as lmesh
+from repro.models import chipmunk_net
+from repro.runtime import ServingFaultConfig, build_rungs
+from repro.serving import StreamingEngine
+
+dm = lmesh.install_die_topology('die-2x1x2')
+cfg = configs.get_smoke_config('chipmunk-ctc').replace(
+    n_layers=3, lstm_backend='pallas_seq_fused_systolic')
+params, _ = chipmunk_net.init(cfg, jax.random.PRNGKey(0))
+rungs = build_rungs(cfg.lstm_backend, n_layers=3, n_h=cfg.lstm_hidden,
+                    die_mesh=dm, n_x=cfg.lstm_inputs, T=8, batch=2)
+assert [r.label() for r in rungs] == [
+    'pallas_seq_fused_systolic@2d', 'pallas_seq_systolic@1d',
+    'pallas_seq_fused', 'pallas_seq', 'xla_scan'], rungs
+
+rng = np.random.default_rng(1)
+utts = [rng.standard_normal((96, cfg.lstm_inputs)).astype(np.float32) * 0.5
+        for _ in range(2)]
+fc = ServingFaultConfig(fail_at={2: {'n_dead': 1, 'domain': 1}},
+                        recover_at={5: 1}, promote_hysteresis=2,
+                        backoff_s=0.0)
+eng = StreamingEngine(cfg, params, max_streams=2, chunk=8, faults=fc)
+for i, u in enumerate(utts):
+    eng.submit(u, sid=i)
+done = eng.run()
+assert len(done) == 2, 'zero stream loss'
+st = eng.stats()
+assert st['backend'] == 'pallas_seq_systolic', st['backend']
+assert st['rung'] == 'pallas_seq_systolic@1d'
+rejects = [e for e in st['events'] if e['kind'] == 'promote_rejected']
+assert len(rejects) >= 2, st['events']
+assert [r['backoff'] for r in rejects][:2] == [4, 8], rejects
+assert st['event_counts'].get('promote', 0) == 0
+# the layerwise mesh rung still serves correct streams (allclose across
+# the mid-stream arithmetic-class change)
+import jax.numpy as jnp
+for s in done:
+    lp = chipmunk_net.forward(cfg.replace(lstm_backend='xla_scan'), params,
+                              jnp.asarray(utts[s.sid])[None])
+    mono = np.asarray(jnp.moveaxis(lp, 0, 1))[0]
+    np.testing.assert_allclose(s.full_log_probs(), mono,
+                               rtol=1e-5, atol=1e-6)
+print('REJECT_OK')
+""", n_devices=4, timeout=880)
+    assert 'REJECT_OK' in out

@@ -114,6 +114,46 @@ def test_async_matches_sync_on_fault_schedules(sched):
                 lp, _mono(utt)[:len(lp)], err_msg=f'monolithic sid={i}')
 
 
+@pytest.mark.timeout(900)
+@settings(max_examples=4, deadline=None)
+@given(ss.recovery_schedules())
+def test_async_matches_sync_on_recovery_schedules(sched):
+    """Randomized fail -> recover -> fail schedules (§14): both dispatch
+    modes replay the identical degrade / heal / canary / promote /
+    reject trail (same per-kind event counts), every stream completes
+    (zero stream loss), outputs are bit-equal across modes and allclose
+    to the monolithic forward regardless of which rungs served which
+    chunks."""
+    cfg, params = _setup('pallas_seq_fused')
+    utts = ss.make_utts(sched['lens'], cfg.lstm_inputs)
+
+    def faults():
+        return ServingFaultConfig(
+            fail_at=dict(sched['fail_at']),
+            recover_at=dict(sched['recover_at']),
+            promote_hysteresis=sched['promote_hysteresis'],
+            backoff_s=0.0)
+
+    sync_eng = _engine(False, faults=faults(), cfg=cfg, params=params)
+    async_eng = _engine(True, faults=faults(), cfg=cfg, params=params)
+    sync_out = ss.run_schedule(sync_eng, utts, sched)
+    async_out = ss.run_schedule(async_eng, utts, sched)
+    ss.assert_outputs_equal(sync_out, async_out, context=str(sched))
+    s_counts = sync_eng.stats()['event_counts']
+    a_counts = async_eng.stats()['event_counts']
+    for kind in ('fault', 'degrade', 'degrade_exhausted', 'heal',
+                 'promote_canary', 'promote', 'promote_rejected'):
+        assert s_counts.get(kind, 0) == a_counts.get(kind, 0), \
+            (kind, s_counts, a_counts, sched)
+    assert sync_eng.stats()['rung'] == async_eng.stats()['rung']
+    for i, utt in enumerate(utts):
+        lp, errored = sync_out[i]
+        assert not errored, (i, sched)
+        np.testing.assert_allclose(lp, _mono(utt, cfg=cfg, params=params),
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f'monolithic sid={i}')
+
+
 @pytest.mark.timeout(600)
 @settings(max_examples=5, deadline=None)
 @given(ss.op_schedules(max_ops=2))

@@ -153,6 +153,80 @@ def test_degradation_ladder_order():
     assert lstm.next_backend_down('xla_scan') is None
 
 
+def test_promotion_ladder_order():
+    """next_backend_up is the exact inverse of next_backend_down within
+    DEGRADATION_LADDER, and None at the top."""
+    assert lstm.next_backend_up('pallas_seq_fused_systolic') is None
+    assert lstm.next_backend_up('pallas_seq_fused') == \
+        'pallas_seq_fused_systolic'
+    assert lstm.next_backend_up('pallas_seq') == 'pallas_seq_fused'
+    assert lstm.next_backend_up('xla_scan') == 'pallas_seq'
+    for b in lstm.DEGRADATION_LADDER[1:]:
+        assert lstm.next_backend_down(lstm.next_backend_up(b)) == b
+
+
+def test_transient_failure_retries_without_degrading():
+    """EngineFailure(transient=True) is a recoverable glitch: the runner
+    retries in place, the backend never degrades, and outputs stay
+    bit-equal to a clean run on the SAME backend."""
+    cfg = CFG.replace(lstm_backend='pallas_seq')
+    utts = _utts(3)
+    fc = ServingFaultConfig(fail_at={1: {'n_dead': 1, 'transient': True}},
+                            backoff_s=0.0)
+    eng = StreamingEngine(cfg, PARAMS, max_streams=2, chunk=8, faults=fc)
+    got = _drain(eng, utts)
+    st = eng.stats()
+    assert st['backend'] == 'pallas_seq'          # no degradation
+    assert st['event_counts']['fault'] == 1
+    assert st['event_counts'].get('degrade', 0) == 0
+    faults = [e for e in st['events'] if e['kind'] == 'fault']
+    assert faults[0]['transient'] is True
+    ref = _drain(StreamingEngine(cfg, PARAMS, max_streams=2, chunk=8), utts)
+    for sid in ref:
+        np.testing.assert_array_equal(ref[sid], got[sid])
+
+
+def test_permanent_failures_do_not_burn_retry_budget():
+    """Permanent EngineFailures are charged to the separate max_permanent
+    cap, never to max_retries: with max_retries=0 a permanent failure
+    still degrades and the chunk still completes on the retry."""
+    cfg = CFG.replace(lstm_backend='pallas_seq')
+    fc = ServingFaultConfig(fail_at={1: 1}, max_retries=0, backoff_s=0.0)
+    eng = StreamingEngine(cfg, PARAMS, max_streams=2, chunk=8, faults=fc)
+    got = _drain(eng, _utts(3))
+    assert len(got) == 3
+    st = eng.stats()
+    assert st['backend'] == 'xla_scan'
+    assert st['event_counts']['degrade'] == 1
+    faults = [e for e in st['events'] if e['kind'] == 'fault']
+    assert faults[0]['transient'] is False
+    # ...while a transient fault with max_retries=0 is terminal
+    fc2 = ServingFaultConfig(fail_at={1: {'transient': True}},
+                             max_retries=0, backoff_s=0.0)
+    eng2 = StreamingEngine(cfg, PARAMS, max_streams=2, chunk=8, faults=fc2)
+    for u in _utts(2):
+        eng2.submit(u)
+    with pytest.raises(EngineFailure):
+        eng2.run()
+
+
+def test_fail_schedule_dict_specs_and_domain_heartbeat():
+    """Dict fail_at specs carry the taxonomy; the heartbeat records the
+    last-seen fault domain."""
+    sched = ServingFaultConfig(
+        fail_at={3: {'n_dead': 2, 'transient': True, 'domain': 1}}
+    ).make_fail_schedule()
+    exc = sched(3)
+    assert isinstance(exc, EngineFailure)
+    assert exc.n_dead == 2 and exc.transient and exc.domain == 1
+    cfg = CFG.replace(lstm_backend='pallas_seq')
+    fc = ServingFaultConfig(fail_at={1: {'n_dead': 1, 'domain': 0}},
+                            backoff_s=0.0)
+    eng = StreamingEngine(cfg, PARAMS, max_streams=2, chunk=8, faults=fc)
+    _drain(eng, _utts(3))
+    assert eng.stats()['heartbeat']['fault_domain'] == 0
+
+
 def test_engine_failure_degrades_without_stream_loss():
     cfg = CFG.replace(lstm_backend='pallas_seq')
     utts = _utts(5)
@@ -166,7 +240,7 @@ def test_engine_failure_degrades_without_stream_loss():
     deg = [e for e in st['events'] if e['kind'] == 'degrade']
     assert deg == [{'kind': 'degrade', 'step': 2,
                     'from_backend': 'pallas_seq', 'to_backend': 'xla_scan',
-                    'n_dead': 1}]
+                    'n_dead': 1, 'domain': 0}]
     assert st['event_counts']['fault'] == 1
 
     # outputs agree with a clean pallas_seq run to float tolerance (the
